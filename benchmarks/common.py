@@ -1,0 +1,61 @@
+"""Shared benchmark harness: run engine configs, emit CSV rows, cache
+results (each figure sweep is minutes of simulation on one CPU core)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "artifacts/bench_cache")
+
+# Simulation budget (rounds @0.25us). Override with REPRO_BENCH_FAST=1 for
+# quick smoke passes.
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+SIM = dict(
+    max_rounds=6000 if FAST else 16000,
+    warmup_rounds=2000 if FAST else 4000,
+    chunk_rounds=2000 if FAST else 4000,
+    target_commits=100_000_000,
+)
+
+
+def run_cell(name: str, wl_cfg: WorkloadConfig, eng_kw: dict) -> dict:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    key = json.dumps(
+        {"wl": wl_cfg.__dict__, "eng": {k: str(v) for k, v in eng_kw.items()},
+         "sim": SIM},
+        sort_keys=True, default=str,
+    )
+    import hashlib
+
+    h = hashlib.sha1(key.encode()).hexdigest()[:16]
+    cache = os.path.join(CACHE_DIR, f"{name}_{h}.json")
+    if os.path.exists(cache):
+        with open(cache) as f:
+            return json.load(f)
+    wl = make_workload(wl_cfg)
+    cfg = EngineConfig(**eng_kw, **SIM)
+    t0 = time.time()
+    res = run_simulation(cfg, wl)
+    out = dict(
+        name=name,
+        throughput_txn_s=res.throughput_txn_s,
+        commits=res.commits,
+        aborts_deadlock=res.aborts_deadlock,
+        aborts_ollp=res.aborts_ollp,
+        wasted_ops=res.wasted_ops,
+        breakdown=res.breakdown,
+        wall_s=round(time.time() - t0, 1),
+    )
+    with open(cache, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def emit(rows: list[tuple]):
+    for r in rows:
+        print(",".join(str(x) for x in r))

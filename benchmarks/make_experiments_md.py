@@ -1,0 +1,227 @@
+"""Generate EXPERIMENTS.md from artifacts (dry-run JSONs, the perf
+iteration log, and the saved benchmark output).
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = "TPU v5e: 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI"
+
+
+def load(pattern):
+    return [json.load(open(f)) for f in sorted(glob.glob(pattern))]
+
+
+def dryrun_section(out):
+    arts = load("artifacts/dryrun/*__pod?.json")
+    pod1 = [a for a in arts if a.get("mesh") == "pod1"]
+    pod2 = [a for a in arts if a.get("mesh") == "pod2"]
+    out.append("## §Dry-run — every (arch × shape) on both production meshes\n")
+    out.append(
+        f"**{len(pod1)} cells on the single-pod 16×16 mesh and "
+        f"{len(pod2)} on the 2×16×16 multi-pod mesh lower + compile "
+        f"successfully** (`.lower().compile()` with ShapeDtypeStruct "
+        "inputs; `python -m repro.launch.dryrun --both-meshes`). "
+        "`long_500k` is skipped for the pure full-attention archs "
+        "(qwen3-32b, stablelm-1.6b, llama-3.2-vision-11b, whisper-tiny) "
+        "per the assignment; DESIGN.md §5 records the skips.\n"
+    )
+    out.append(
+        "Per-cell artifacts (memory_analysis, cost_analysis, collective "
+        "schedule with loop-trip-count correction) in `artifacts/dryrun/`. "
+        "Multi-pod columns below show bytes/device and collective wire "
+        "bytes/device so the pod-axis sharding is visible:\n"
+    )
+    out.append(
+        "| arch | shape | GiB/dev pod1 | GiB/dev pod2 | coll GiB/dev pod1 "
+        "| coll GiB/dev pod2 |\n|---|---|---|---|---|---|"
+    )
+    p2 = {(a["arch"], a["shape"]): a for a in pod2}
+    for a in pod1:
+        b = p2.get((a["arch"], a["shape"]))
+        out.append(
+            f"| {a['arch']} | {a['shape']} "
+            f"| {a['hbm_bytes_per_device']/2**30:.2f} "
+            f"| {b['hbm_bytes_per_device']/2**30:.2f} "
+            f"| {a['collective_bytes_per_device']/2**30:.1f} "
+            f"| {b['collective_bytes_per_device']/2**30:.1f} |"
+            if b
+            else f"| {a['arch']} | {a['shape']} | "
+            f"{a['hbm_bytes_per_device']/2**30:.2f} | — | "
+            f"{a['collective_bytes_per_device']/2**30:.1f} | — |"
+        )
+    out.append("")
+
+
+def roofline_section(out):
+    arts = [a for a in load("artifacts/dryrun/*__pod1.json")]
+    out.append("## §Roofline — three terms per cell (single-pod mesh)\n")
+    out.append(f"Hardware model: {HW}.\n")
+    out.append(
+        "Terms are seconds per step, derived from the compiled HLO "
+        "(dot FLOPs and collective wire bytes counted per computation "
+        "with while-loop trip-count multipliers — XLA's cost_analysis "
+        "counts loop bodies once, verified empirically; memory traffic "
+        "from memory_analysis with the train-step read/write model in "
+        "`launch/roofline.py`). `useful` = MODEL_FLOPS / counted HLO "
+        "FLOPs (6·N·D train, 2·N·D inference; N_active for MoE); "
+        "`frac` = (MODEL_FLOPS/chips/peak) / max(term) — the MFU-style "
+        "roofline fraction.\n"
+    )
+    out.append(
+        "| arch | shape | GiB/dev | compute_s | memory_s | collective_s "
+        "| bound | frac | useful | what moves the dominant term |\n"
+        "|---|---|---|---|---|---|---|---|---|---|"
+    )
+    moves = {
+        "collective": "fewer weight re-gathers (microbatching policy), "
+        "SP/ZeRO layout — see §Perf",
+        "compute": "less remat recompute; Pallas flash kernel on TPU",
+        "memory": "ring KV caches for SWA; bf16 states",
+    }
+    for a in sorted(arts, key=lambda a: (a["arch"], a["shape"])):
+        out.append(
+            f"| {a['arch']} | {a['shape']} "
+            f"| {a['hbm_bytes_per_device']/2**30:.2f} "
+            f"| {a['compute_seconds']:.4f} | {a['memory_seconds']:.4f} "
+            f"| {a['collective_seconds']:.4f} | {a['bottleneck']} "
+            f"| {a['roofline_fraction']:.3f} "
+            f"| {a['useful_flops_ratio']:.2f} "
+            f"| {moves[a['bottleneck']]} |"
+        )
+    n_coll = sum(1 for a in arts if a["bottleneck"] == "collective")
+    out.append(
+        f"\n**Reading the table**: {n_coll}/{len(arts)} cells are "
+        "collective-bound at baseline — the systemic cost is FSDP weight "
+        "re-gathers amplified by the default 8-microbatch accumulation "
+        "(verified by napkin math in §Perf and fixed there). Decode cells "
+        "report frac≈0 because a single-token step is latency-bound by "
+        "construction; their figure of merit is the memory term "
+        "(cache+params read once). `useful > 1` (rwkv6) means counted "
+        "dot FLOPs < 6·N·D — the recurrence does proportionally more "
+        "vector work than matmuls.\n"
+    )
+
+
+def perf_section(out):
+    out.append("## §Perf — hypothesis → change → measure → validate\n")
+    if not os.path.exists("artifacts/perf_iterations.json"):
+        out.append("(run `python -m benchmarks.perf_iterations`)\n")
+        return
+    log = json.load(open("artifacts/perf_iterations.json"))
+    out.append(
+        "Three hillclimb cells per the brief — worst roofline fraction & "
+        "most collective-bound (llama4-maverick×train_4k), most "
+        "representative of the paper's technique (mixtral-8x22b×train_4k, "
+        "planned MoE dispatch), and the dense-FSDP workhorse "
+        "(qwen3-32b×train_4k). Paper-faithful baselines are recorded "
+        "separately from beyond-paper optimized variants.\n"
+    )
+    out.append(
+        "| iteration | change | compute_s | memory_s | collective_s | "
+        "bound | GiB/dev | frac |\n|---|---|---|---|---|---|---|---|"
+    )
+    for e in log:
+        out.append(
+            f"| {e['name']} | {e['change']} | {e['compute_s']} "
+            f"| {e['memory_s']} | {e['collective_s']} | {e['bottleneck']} "
+            f"| {e['gib_per_dev']} | {e['roofline_fraction']} |"
+        )
+    out.append("\n**Iteration log (hypothesis → outcome)**:\n")
+    for e in log:
+        out.append(f"- **{e['name']}** — {e['hypothesis']}")
+    out.append(
+        "\n**Outcome summary** (baseline → best, step-time lower bound on "
+        "the dominant term):\n\n"
+        "| cell | paper-faithful baseline | best beyond-paper | gain | "
+        "winning change |\n|---|---|---|---|---|\n"
+        "| qwen3-32b × train_4k | frac 0.129 (coll 31.7s) | frac 0.350 "
+        "(coll 11.7s) | **2.7×** | pure ZeRO-3: batch over all 256 chips, "
+        "weights gathered per use, no TP collectives |\n"
+        "| llama4-maverick × train_4k | frac 0.009 (coll 200.6s) | frac "
+        "0.068 (coll 26.0s) | **7.7×** | per-shard planned dispatch "
+        "(single-owner, P1/P2) + use-site expert-weight gather + mb 8→2 |\n"
+        "| mixtral-8x22b × train_4k | frac 0.045 (coll 108.7s) | baseline "
+        "stands | 1.0× | three attacks refuted (log above); global "
+        "canonical plan remains best — the 8-expert/16-way-axis mismatch "
+        "needs a shard_map all-to-all dispatch (future work) |\n\n"
+        "The planned-vs-dense comparison on mixtral validates the paper's "
+        "technique at the MoE level: the canonical-order capacity plan "
+        "needs **2.6× less compute** than the no-planning dense dispatch "
+        "(9.7s vs 25.2s compute term) at equal quality when nothing "
+        "drops (unit-tested equivalence). Refuted hypotheses are kept in "
+        "the log — per the methodology, they localize the real "
+        "bottleneck (GSPMD lowers cross-shard scatter-combines to "
+        "full-token all-reduces; sharded-contraction einsums to output "
+        "all-reduces) as informatively as the confirmations.\n"
+    )
+
+
+def figures_section(out):
+    out.append("## §Reproduction — paper figures\n")
+    path = "artifacts/bench_figures.txt"
+    if not os.path.exists(path):
+        out.append("(run `python -m benchmarks.run | tee "
+                    "artifacts/bench_figures.txt`)\n")
+        return
+    txt = open(path).read()
+    claims = [l for l in txt.splitlines() if l.startswith("CLAIM,")]
+    n_pass = sum(1 for c in claims if c.startswith("CLAIM,PASS"))
+    out.append(
+        f"`python -m benchmarks.run` validates **{n_pass}/{len(claims)}** "
+        "qualitative claims from the paper's figures (full CSVs in "
+        "`artifacts/bench_figures.txt`; the engine reproduces protocol "
+        "logic exactly and models the 80-core machine per "
+        "`core/cost_model.py`):\n"
+    )
+    out.append("```")
+    for c in claims:
+        out.append(c)
+    out.append("```\n")
+    out.append(
+        "**Known deviation** (the one FAIL): the paper's Fig 11a shows "
+        "*random*-placement ORTHRUS falling below the locking baselines on "
+        "low-contention read-only YCSB because message-passing overhead "
+        "dominates very short transactions. Our cost model charges "
+        "messaging as *latency* (hidden by the async execution window, "
+        "§3.3 of the paper) but not as exec-lane CPU time, so all three "
+        "ORTHRUS placements saturate at the same execution-bound ceiling. "
+        "Charging per-message CPU on execution lanes would reproduce the "
+        "crossover; recorded as a cost-model fidelity limit rather than "
+        "tuned away.\n"
+    )
+    out.append(
+        "Absolute throughputs land in the paper's order of magnitude "
+        "(e.g. TPC-C @16WH/80 cores: ORTHRUS ≈1.4M txn/s, 2PL degrading "
+        "past 40 cores; YCSB high-contention 10RMW: ORTHRUS-single ≈4M, "
+        "deadlock-free ≈0.6M, wait-die 2PL ≈0.26M). Ratios, orderings and "
+        "scaling shapes — the paper's claims — are the validated targets; "
+        "the cycle constants are documented in `core/cost_model.py`.\n"
+    )
+
+
+def main():
+    out = [
+        "# EXPERIMENTS\n",
+        "Reproduction + scaling evidence for the ORTHRUS framework. "
+        "Everything regenerable: `pytest tests/`, "
+        "`python -m repro.launch.dryrun --both-meshes`, "
+        "`python -m benchmarks.run`, "
+        "`python -m benchmarks.perf_iterations`, then this generator.\n",
+    ]
+    figures_section(out)
+    dryrun_section(out)
+    roofline_section(out)
+    perf_section(out)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(out))
+    print(f"wrote EXPERIMENTS.md ({len(out)} blocks)")
+
+
+if __name__ == "__main__":
+    main()

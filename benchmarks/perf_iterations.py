@@ -1,0 +1,238 @@
+"""§Perf hillclimb driver: named iterations over the three chosen cells.
+
+Each iteration = (cell, hypothesis, change) -> re-lower -> roofline terms.
+Results append to artifacts/perf_iterations.json; EXPERIMENTS.md §Perf is
+written from that log.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [--only qwen3]
+"""
+
+# must precede any jax import
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.optim import OptConfig
+from repro.train import TrainConfig
+
+OUT = "artifacts/perf_iterations.json"
+
+
+def record(name, hypothesis, change, ana, log):
+    entry = dict(
+        name=name,
+        hypothesis=hypothesis,
+        change=change,
+        compute_s=round(ana["compute_seconds"], 4),
+        memory_s=round(ana["memory_seconds"], 4),
+        collective_s=round(ana["collective_seconds"], 4),
+        bottleneck=ana["bottleneck"],
+        gib_per_dev=round(ana["hbm_bytes_per_device"] / 2**30, 2),
+        roofline_fraction=round(ana["roofline_fraction"], 4),
+        useful_flops_ratio=round(ana["useful_flops_ratio"], 3),
+        step_lower_bound_s=round(ana["step_seconds_lower_bound"], 4),
+        collective_detail={
+            k: round(v / 2**30, 1)
+            for k, v in ana["collective_detail"].items()
+        },
+    )
+    log[:] = [e for e in log if e["name"] != name] + [entry]
+    print(json.dumps(entry))
+    with open(OUT, "w") as f:
+        json.dump(log, f, indent=1)
+    return entry
+
+
+def adamw_tcfg(micro, **kw):
+    return TrainConfig(microbatches=micro, opt=OptConfig(), **kw)
+
+
+def big_tcfg(micro, **kw):
+    return TrainConfig(
+        microbatches=micro,
+        opt=OptConfig(name="adafactor", state_dtype="bfloat16"),
+        **kw,
+    )
+
+
+def iters_qwen3(mesh, log):
+    cell = ("qwen3-32b", "train_4k")
+    record(
+        "qwen3/baseline",
+        "paper-faithful baseline (FSDP+TP, 8 microbatches, full-seq "
+        "activations)",
+        "none",
+        run_cell(*cell, mesh, "pod1", tag="_perf0"),
+        log,
+    )
+    record(
+        "qwen3/seq-parallel+mb1",
+        "collective term is 8x-amplified FSDP weight re-gathers (3 uses x "
+        "64GB x 8 microbatches ~ 1.5TB/dev ~ 30s); sequence-parallel "
+        "residual saves let microbatches drop to 1, cutting weight "
+        "gathers 8x for ~same TP wire",
+        "rules: seq->model (Megatron-SP residual stream); microbatches 8->1",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf1",
+            tcfg=adamw_tcfg(1), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+    record(
+        "qwen3/sp+mb1+dots-remat",
+        "with collectives down, compute term includes a full forward "
+        "recompute (nothing_saveable); saving dot outputs trades HBM for "
+        "~25% less recompute",
+        "remat policy nothing->dots_no_batch",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf2",
+            tcfg=adamw_tcfg(1, remat_policy="dots_no_batch"),
+            rules_override={"seq": "model"},
+        ),
+        log,
+    )
+    record(
+        "qwen3/sp+mb1+attn-boundary-AG",
+        "REFUTED previous: collectives ROSE 31.7->49.9s because the "
+        "seq-sharded k/v dynamic-slices inside the q-block loop re-gather "
+        "per iteration (8x per layer). Gathering q/k/v once at the "
+        "attention boundary (Megatron-SP) should cut the SP wire ~8x",
+        "explicit full-seq constraint on q/k/v at attention entry",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf3",
+            tcfg=adamw_tcfg(1), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+    record(
+        "qwen3/zero3-dp256",
+        "alternative: drop TP entirely. Pure ZeRO-3: batch 256 over all "
+        "256 chips (B_local=1), weights 2D-sharded, gathered per use "
+        "(3 x 64GB/16 x 15/16 ~ 11GB/dev) and grads reduce-scattered; no "
+        "per-layer TP all-reduces at all. Napkin: coll ~6s vs compute "
+        "5.9s -> near compute-bound",
+        "rules: batch/tokens -> (data,model); microbatches 1",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf4",
+            tcfg=adamw_tcfg(1),
+            rules_override={
+                "batch": ("pod", "data", "model"),
+                "tokens_act": ("pod", "data", "model"),
+            },
+        ),
+        log,
+    )
+
+
+def iters_mixtral(mesh, log):
+    cell = ("mixtral-8x22b", "train_4k")
+    record(
+        "mixtral/baseline",
+        "paper-faithful planned-dispatch baseline (canonical-order "
+        "capacity plan, experts replicated across EP since 8 < 16)",
+        "none",
+        run_cell(*cell, mesh, "pod1", tag="_perf0"),
+        log,
+    )
+    record(
+        "mixtral/dense-dispatch",
+        "the no-planning strawman: every expert computes every token "
+        "(dynamic brute force). Expect ~E/k = 4x the compute term of the "
+        "planned plan — the MoE twin of dynamic vs planned locking",
+        "moe_mode planned->dense",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perfD",
+            mcfg_override=dataclasses.replace(
+                get_config("mixtral-8x22b"), moe_mode="dense"
+            ),
+        ),
+        log,
+    )
+    record(
+        "mixtral/seq-parallel+mb2",
+        "same FSDP re-gather amplification as qwen3 (282GB of expert "
+        "weights re-gathered per microbatch x8); SP saves + fewer "
+        "microbatches cut it 4x",
+        "rules: seq->model; microbatches 8->2",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf1",
+            tcfg=adamw_tcfg(2), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+    record(
+        "mixtral/sp+mb1",
+        "one more halving of weight re-gathers if activations still fit",
+        "microbatches 2->1",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf2",
+            tcfg=adamw_tcfg(1), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+
+
+def iters_llama4(mesh, log):
+    cell = ("llama4-maverick-400b-a17b", "train_4k")
+    record(
+        "llama4/baseline",
+        "paper-faithful baseline: planned top-1 dispatch, experts "
+        "sharded over EP=16 (single-owner, P1), adafactor bf16 state",
+        "none",
+        run_cell(*cell, mesh, "pod1", tag="_perf0"),
+        log,
+    )
+    record(
+        "llama4/seq-parallel+mb2",
+        "collective term (200s) dominated by per-microbatch re-gathers of "
+        "the 24GB/dev expert bank and dense weights; SP + mb 8->2 should "
+        "cut collectives ~4x",
+        "rules: seq->model; microbatches 8->2",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf1",
+            tcfg=big_tcfg(2), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+    record(
+        "llama4/sp+mb1",
+        "halve re-gathers again; activation risk covered by SP sharding",
+        "microbatches 2->1",
+        run_cell(
+            *cell, mesh, "pod1", tag="_perf2",
+            tcfg=big_tcfg(1), rules_override={"seq": "model"},
+        ),
+        log,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    log = []
+    if os.path.exists(OUT):
+        log = json.load(open(OUT))
+    for name, fn in [
+        ("qwen3", iters_qwen3),
+        ("mixtral", iters_mixtral),
+        ("llama4", iters_llama4),
+    ]:
+        if args.only and args.only not in name:
+            continue
+        fn(mesh, log)
+
+
+if __name__ == "__main__":
+    main()

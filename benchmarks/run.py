@@ -1,0 +1,79 @@
+"""Benchmark entry point: one function per paper figure, CSV + claim
+validation, plus the roofline summary from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig9] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+
+def roofline_summary(rows_out):
+    from repro.launch.roofline import roofline_report
+
+    arts = sorted(glob.glob("artifacts/dryrun/*.json"))
+    if not arts:
+        print("# (no dry-run artifacts; run `python -m repro.launch.dryrun`)")
+        return
+    analyses = [json.load(open(f)) for f in arts]
+    print(roofline_report(analyses))
+    for a in analyses:
+        rows_out.append(
+            (
+                "roofline", a["arch"], a["shape"], a.get("mesh", "?"),
+                round(a["compute_seconds"], 5),
+                round(a["memory_seconds"], 5),
+                round(a["collective_seconds"], 5),
+                a["bottleneck"],
+                round(a["roofline_fraction"], 4),
+            )
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter, e.g. fig9")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+
+    from benchmarks.figures import ALL_FIGURES
+
+    all_claims = []
+    for fn in ALL_FIGURES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        print(f"\n### {fn.__name__}: {fn.__doc__.strip().splitlines()[0]}")
+        rows, claims = fn()
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        for desc, ok in claims:
+            tag = "PASS" if ok else "FAIL"
+            print(f"CLAIM,{tag},{desc}")
+            all_claims.append((fn.__name__, desc, ok))
+        print(f"# {fn.__name__} wall: {time.time()-t0:.0f}s")
+
+    if not args.skip_roofline and not args.only:
+        print("\n### roofline (from dry-run artifacts)")
+        rows = []
+        roofline_summary(rows)
+
+    n_ok = sum(1 for _, _, ok in all_claims if ok)
+    print(f"\n# claims: {n_ok}/{len(all_claims)} validated")
+    if all_claims and n_ok < len(all_claims):
+        for name, desc, ok in all_claims:
+            if not ok:
+                print(f"# FAILED: [{name}] {desc}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Sweep contention and watch the protocols separate (paper Fig 4b).
+
+  PYTHONPATH=src python examples/oltp_contention_demo.py
+"""
+
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+SIM = dict(max_rounds=8000, warmup_rounds=2000, chunk_rounds=2000,
+           target_commits=100_000)
+PROTOS = ("deadlock_free", "twopl_waitdie", "twopl_dreadlocks")
+
+print(f"{'hot records':>12s} " + " ".join(f"{p:>18s}" for p in PROTOS))
+for hot in (4096, 256, 64, 16):
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=4096, num_records=1_000_000,
+                       num_hot=hot, seed=0)
+    )
+    row = []
+    for p in PROTOS:
+        res = run_simulation(
+            EngineConfig(protocol=p, n_exec=48, **SIM), wl
+        )
+        row.append(f"{res.throughput_txn_s/1e3:15.1f}k/s")
+    print(f"{hot:12d} " + " ".join(f"{v:>18s}" for v in row))
+print("\ncontention grows downward; deadlock-free locking's advantage "
+      "grows with it (paper Fig 4b)")

@@ -1,0 +1,58 @@
+"""Quickstart: the two ORTHRUS design principles in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Runs a high-contention YCSB workload under dynamic 2PL (wait-die) and
+   under ORTHRUS (partitioned CC + planned acquisition) and prints the
+   throughput gap — the paper's headline result.
+2. Shows the same P2 principle one level up: a planned MoE dispatch
+   (canonical-order, capacity-bounded) on a toy router.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+from repro.models.moe import plan_dispatch
+
+SIM = dict(max_rounds=6000, warmup_rounds=2000, chunk_rounds=2000,
+           target_commits=100_000)
+
+print("=== 1. OLTP under high contention (64 hot records, 32 cores) ===")
+wl = make_workload(
+    WorkloadConfig(kind="ycsb", num_txns=4096, num_records=1_000_000,
+                   num_hot=64, seed=0)
+)
+for label, cfg in {
+    "dynamic 2PL + wait-die": EngineConfig(
+        protocol="twopl_waitdie", n_exec=32, **SIM
+    ),
+    "deadlock-free (P2)": EngineConfig(
+        protocol="deadlock_free", n_exec=32, **SIM
+    ),
+    "ORTHRUS (P1+P2)": EngineConfig(
+        protocol="orthrus", n_cc=8, n_exec=24, window=4, **SIM
+    ),
+}.items():
+    res = run_simulation(cfg, wl)
+    print(
+        f"{label:24s} {res.throughput_txn_s/1e3:8.1f}k txn/s  "
+        f"deadlock aborts: {res.aborts_deadlock:6d}  "
+        f"useful-work fraction: {res.breakdown['exec']:.2f}"
+    )
+
+print("\n=== 2. The same planning principle as an MoE dispatch plan ===")
+probs = jax.nn.softmax(
+    jax.random.normal(jax.random.PRNGKey(0), (64, 4)) * 2.0, -1
+)
+plan = plan_dispatch(probs, top_k=1, capacity=16)
+slots = plan["slot_token"].reshape(4, 16)
+for e in range(4):
+    row = [int(t) for t in slots[e] if t >= 0]
+    print(f"expert {e}: {len(row):2d}/16 slots -> tokens {row[:8]}"
+          f"{'...' if len(row) > 8 else ''}")
+print("load per expert:", [round(float(x), 2) for x in plan["load"]])
+print("\n(The plan is computed before any expert runs, in canonical "
+      "(expert, arrival) order — the deadlock-free lock schedule, "
+      "as an all-to-all schedule.)")

@@ -1,0 +1,64 @@
+"""End-to-end driver: train a reduced gemma3 for a few hundred steps on the
+deterministic pipeline, with checkpoint/restart in the middle to demonstrate
+exactly-once recovery.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.mesh import host_mesh
+from repro.launch.train import build_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    mesh = host_mesh(1, 1)
+    cfg, init, run_step, shardings, rules = build_trainer(
+        args.arch, mesh, smoke=True, batch=args.batch, seq=args.seq, lr=3e-3
+    )
+    pipe = TokenPipeline(
+        DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch,
+                   seq_len=args.seq)
+    )
+    ckpt_dir = tempfile.mkdtemp(prefix="train_lm_")
+    ckpt = Checkpointer(ckpt_dir, interval=50)
+
+    state = init()
+    first = last = None
+    for step in range(args.steps):
+        state, m = run_step(state, pipe.batch(step))
+        loss = float(m["loss"])
+        first = loss if first is None else first
+        last = loss
+        ckpt.maybe_save(step, state)
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {loss:.4f}")
+        if step == args.steps // 2:
+            # simulate a crash + restart from the latest checkpoint
+            ckpt.wait()
+            found, restored = ckpt.restore_latest(state)
+            if found is not None:
+                state = jax.tree.map(jax.device_put, restored, shardings)
+                print(f"-- simulated failure; resumed from step {found} --")
+    ckpt.wait()
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    assert last < first, "training should reduce loss on the synthetic data"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: ORTHRUS design principles for scaling under contention, in JAX.
+
+Layers:
+  repro.core      — paper-faithful ORTHRUS transaction engine (six protocols)
+  repro.models    — 10 assigned LM architectures (dense/SSM/hybrid/MoE/VLM/audio)
+  repro.sharding  — logical-axis sharding rules (DP/FSDP/TP/EP/SP)
+  repro.train     — training step, grad accumulation, compression
+  repro.serve     — prefill/decode engines with planned KV caches
+  repro.kernels   — Pallas TPU kernels + jnp oracles
+  repro.launch    — mesh construction, multi-pod dry-run, roofline
+"""
+
+__version__ = "0.1.0"

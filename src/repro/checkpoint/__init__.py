@@ -1,0 +1,13 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "Checkpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,26 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(name)`` returns the full published configuration;
+``get_smoke_config(name)`` returns a reduced same-family config for CPU
+smoke tests (small widths/layers/experts, tiny vocab).
+"""
+
+from repro.configs.base import (
+    SHAPES,
+    LayerSpec,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+
+__all__ = [
+    "SHAPES",
+    "LayerSpec",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+]

@@ -1,0 +1,27 @@
+"""ORTHRUS core: the paper's transaction-management contribution, in JAX.
+
+The engine executes batches of transactions under six concurrency-control
+protocols with exact protocol logic and a documented multicore cost model:
+
+  - twopl_waitdie      2PL + wait-die deadlock avoidance (timestamp aborts)
+  - twopl_waitfor      2PL + wait-for-graph deadlock detection (cycle aborts)
+  - twopl_dreadlocks   2PL + dreadlocks digests (bitset transitive closure)
+  - deadlock_free      planned, canonical-order lock acquisition (P2 alone)
+  - orthrus            partitioned CC lanes + message passing (P1 + P2)
+  - partitioned_store  H-Store style coarse partition locks (baseline)
+"""
+
+from repro.core.cost_model import CostModel
+from repro.core.engine import EngineConfig, SimResult, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload, tpcc_workload, ycsb_workload
+
+__all__ = [
+    "CostModel",
+    "EngineConfig",
+    "SimResult",
+    "run_simulation",
+    "WorkloadConfig",
+    "make_workload",
+    "ycsb_workload",
+    "tpcc_workload",
+]

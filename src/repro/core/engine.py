@@ -1,0 +1,871 @@
+"""The ORTHRUS transaction engine: six protocols, one cycle-accounting core.
+
+The simulator advances in rounds (``CostModel.cycles_per_round`` cycles). In
+each round every lane interacts with the lock table at most once; waiting,
+message latency, CC-lane saturation, coherence backlog on hot records,
+deadlock handling and abort/retry all play out with exact protocol logic.
+
+Protocols (``EngineConfig.protocol``):
+  twopl_waitdie | twopl_waitfor | twopl_dreadlocks
+      dynamic 2PL: locks acquired in program order, interleaved with
+      execution; deadlock handling per the named scheme.
+  deadlock_free
+      planned: canonical sorted order, all locks before execution (P2).
+  orthrus
+      planned + partitioned functionality: CC lanes own disjoint key
+      partitions; exec lanes send request messages; CC_i forwards to
+      CC_{i+1} (N_cc + 1 hops); exec lanes multiplex a window of
+      outstanding transactions (P1 + P2).
+  partitioned_store
+      H-Store style: coarse partition locks, serial execution.
+
+Everything is jitted; the round loop runs in ``lax.fori_loop`` chunks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner as planner_lib
+from repro.core.cost_model import DEFAULT_COST_MODEL, CostModel
+from repro.core.lockgrant import (
+    KEY_SENTINEL,
+    REQ_NONE,
+    REQ_READ,
+    REQ_RELEASE,
+    REQ_WRITE,
+    lex_order,
+    segment_sum_by_key,
+    segmented_grant,
+)
+from repro.core.workloads import MODE_READ, MODE_WRITE, Workload
+
+# Phases
+EMPTY, INIT, ACQ, MSG, READY, EXEC, REL, BACKOFF = range(8)
+# Sharer-heat epoch length (rounds) for the coherence model: roughly how
+# long a hot line's sharer population stays cache-resident (~1 ms).
+EPOCH_BITS = 12
+# Lane-time categories (paper Fig 10 breakdown)
+CAT_IDLE, CAT_EXEC, CAT_LOCK, CAT_WAIT, CAT_DL, CAT_MSG = range(6)
+NCAT = 6
+
+PROTOCOLS = (
+    "twopl_waitdie",
+    "twopl_waitfor",
+    "twopl_dreadlocks",
+    "deadlock_free",
+    "orthrus",
+    "partitioned_store",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    protocol: str
+    n_exec: int  # execution lanes (= all DB threads for shared protocols)
+    n_cc: int = 0  # ORTHRUS concurrency-control lanes
+    window: int = 1  # outstanding txns per exec lane (ORTHRUS asynchrony)
+    # SPLIT ORTHRUS / Split Deadlock-free (paper §4.3): indexes physically
+    # partitioned across worker threads -> no shared-index cache penalty.
+    split_index: bool = False
+    max_rounds: int = 60_000
+    warmup_rounds: int = 4_000
+    chunk_rounds: int = 4_000
+    target_commits: int = 50_000
+    cost: CostModel = DEFAULT_COST_MODEL
+
+    def __post_init__(self):
+        assert self.protocol in PROTOCOLS, self.protocol
+        if self.protocol == "orthrus":
+            assert self.n_cc >= 1
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_exec * self.window
+
+    @property
+    def is_orthrus(self) -> bool:
+        return self.protocol == "orthrus"
+
+    @property
+    def is_dynamic_2pl(self) -> bool:
+        return self.protocol.startswith("twopl")
+
+    @property
+    def deadlock_scheme(self) -> str:
+        return {
+            "twopl_waitdie": "waitdie",
+            "twopl_waitfor": "waitfor",
+            "twopl_dreadlocks": "dreadlocks",
+        }.get(self.protocol, "none")
+
+
+@dataclasses.dataclass
+class SimResult:
+    commits: int
+    aborts_deadlock: int
+    aborts_ollp: int
+    wasted_ops: int
+    rounds: int
+    sim_seconds: float
+    throughput_txn_s: float
+    breakdown: dict[str, float]  # exec-lane time fractions
+    raw: dict[str, Any]
+
+
+def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
+    R = num_records
+    i32 = jnp.int32
+    return dict(
+        r=jnp.zeros((), i32),
+        next_txn=jnp.zeros((), i32),
+        enq_ctr=jnp.ones((), i32),
+        tid=jnp.full((T,), -1, i32),
+        widx=jnp.zeros((T,), i32),
+        lane_ctr=jnp.zeros((T,), i32),
+        ts=jnp.zeros((T,), i32),
+        phase=jnp.zeros((T,), i32),
+        committing=jnp.zeros((T,), jnp.bool_),
+        busy_until=jnp.zeros((T,), i32),
+        busy_kind=jnp.zeros((T,), i32),
+        kptr=jnp.zeros((T,), i32),
+        attempt=jnp.zeros((T,), i32),
+        want=jnp.zeros((T, K), jnp.bool_),
+        granted=jnp.zeros((T, K), jnp.bool_),
+        enq=jnp.zeros((T, K), i32),
+        adm_done=jnp.zeros((T, K), jnp.bool_),
+        rel_done=jnp.zeros((T, K), jnp.bool_),
+        ccptr=jnp.zeros((T,), i32),
+        msg_arrive=jnp.zeros((T,), i32),
+        msg_stage=jnp.zeros((T,), i32),
+        release_at=jnp.zeros((T,), i32),
+        waited=jnp.zeros((T,), jnp.bool_),
+        dl_debt=jnp.zeros((T,), i32),
+        reach=jnp.zeros((T, T), jnp.bool_),
+        wh=jnp.full((R,), -1, i32),
+        rc=jnp.zeros((R,), i32),
+        lnf=jnp.zeros((R,), i32),
+        ep=jnp.full((R,), -10, i32),
+        cnt_cur=jnp.zeros((R,), i32),
+        cnt_prev=jnp.zeros((R,), i32),
+        last_lane=jnp.full((R,), -1, i32),
+        commits=jnp.zeros((), i32),
+        aborts_dl=jnp.zeros((), i32),
+        aborts_ollp=jnp.zeros((), i32),
+        wasted=jnp.zeros((), i32),
+        cat=jnp.zeros((NCAT,), jnp.int32),
+    )
+
+
+def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
+    """Build the jitted single-round transition for this config + plan."""
+    cm = cfg.cost
+    T, K = cfg.n_slots, plan.keys.shape[1]
+    R = plan.num_records
+    N = plan.keys.shape[0]
+    W = cfg.window
+    n_cc = max(cfg.n_cc, 1)
+    cap_keys = cm.cc_keys_per_round  # per CC lane per round, in key-ops
+
+    wkeys = jnp.asarray(plan.keys, jnp.int32)
+    wmodes = jnp.asarray(plan.modes, jnp.int32)
+    wpart = jnp.asarray(plan.part, jnp.int32)
+    wnkeys = jnp.asarray(plan.nkeys, jnp.int32)
+    wexec = jnp.asarray(plan.exec_ops, jnp.int32)
+    wollp = jnp.asarray(plan.ollp)
+    wmiss = jnp.asarray(plan.ollp_miss)
+
+    lane_of = jnp.arange(T, dtype=jnp.int32) // W
+    slot_ids = jnp.arange(T, dtype=jnp.int32)
+    kk = jnp.arange(K, dtype=jnp.int32)
+
+    lock_op_cycles = (
+        cm.partition_lock_cycles
+        if cfg.protocol == "partitioned_store"
+        else cm.lock_op_cycles
+    )
+    # Shared-index cache penalty (paper §4.3): partitioned-store and SPLIT
+    # variants probe thread-local indexes; everyone else shares one index.
+    shared_index = cfg.protocol != "partitioned_store" and not cfg.split_index
+    exec_cycles_per_op = cm.exec_op_cycles + (
+        cm.shared_index_penalty_cycles if shared_index else 0
+    )
+    dl = cfg.deadlock_scheme
+    dl_wait_cycles = {
+        "waitfor": cm.waitfor_maintain_cycles,
+        "dreadlocks": cm.dreadlocks_spin_cycles,
+    }.get(dl, 0)
+
+    lane_stream = (
+        None
+        if plan.lane_stream is None
+        else jnp.asarray(plan.lane_stream, jnp.int32)
+    )
+
+    def gather_txn(s):
+        """Per-slot workload arrays for the currently-loaded txns."""
+        widx = jnp.where(s["tid"] >= 0, s["widx"] % N, 0)
+        return (
+            wkeys[widx],
+            wmodes[widx],
+            wpart[widx] % n_cc,
+            wnkeys[widx],
+            wexec[widx],
+            wollp[widx],
+            wmiss[widx],
+        )
+
+    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+
+    def step(_, s):
+        r = s["r"]
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn(s)
+        kvalid = kk[None, :] < nkeys[:, None]
+        free = s["busy_until"] <= r
+
+        # ------------------------------------------------ 1. new admissions
+        empty = s["phase"] == EMPTY
+        if lane_stream is None:
+            rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
+            new_tid = s["next_txn"] + rank
+            adm = empty
+            s["widx"] = jnp.where(adm, new_tid % N, s["widx"])
+            s["next_txn"] = s["next_txn"] + empty.sum(dtype=jnp.int32)
+        else:
+            # H-Store routing: each worker lane pulls the next txn homed to
+            # its partition (lanes with no homed txns stay idle).
+            M = lane_stream.shape[1]
+            widx = lane_stream[slot_ids, s["lane_ctr"] % M]
+            adm = empty & (widx >= 0)
+            new_tid = s["lane_ctr"] * T + slot_ids
+            s["widx"] = jnp.where(adm, widx, s["widx"])
+            s["lane_ctr"] = jnp.where(adm, s["lane_ctr"] + 1, s["lane_ctr"])
+            s["next_txn"] = s["next_txn"] + adm.sum(dtype=jnp.int32)
+        s["tid"] = jnp.where(adm, new_tid, s["tid"])
+        s["ts"] = jnp.where(adm, new_tid, s["ts"])
+        s["attempt"] = jnp.where(adm, 0, s["attempt"])
+        # re-gather for freshly admitted slots
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn(s)
+        kvalid = kk[None, :] < nkeys[:, None]
+        init_busy = rounds_of(
+            cm.txn_fixed_cycles
+            + jnp.where(ollp, cm.recon_cycles, 0)
+        )
+        s["phase"] = jnp.where(adm, INIT, s["phase"])
+        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
+        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
+        for f in ("want", "granted", "adm_done", "rel_done"):
+            s[f] = jnp.where(adm[:, None], False, s[f])
+        s["kptr"] = jnp.where(adm, 0, s["kptr"])
+        s["ccptr"] = jnp.where(adm, 0, s["ccptr"])
+        s["waited"] = jnp.where(adm, False, s["waited"])
+
+        # ------------------------------------------------ 2. backoff -> retry
+        retry = (s["phase"] == BACKOFF) & free
+        s["phase"] = jnp.where(retry, INIT, s["phase"])
+        s["busy_until"] = jnp.where(
+            retry, r + rounds_of(cm.txn_fixed_cycles), s["busy_until"]
+        )
+        s["busy_kind"] = jnp.where(retry, CAT_LOCK, s["busy_kind"])
+        for f in ("want", "granted", "adm_done", "rel_done"):
+            s[f] = jnp.where(retry[:, None], False, s[f])
+        s["kptr"] = jnp.where(retry, 0, s["kptr"])
+        s["ccptr"] = jnp.where(retry, 0, s["ccptr"])
+        s["attempt"] = jnp.where(retry, s["attempt"] + 1, s["attempt"])
+        s["waited"] = jnp.where(retry, False, s["waited"])
+
+        free = s["busy_until"] <= r
+
+        # ------------------------------------------------ 3. INIT -> acquire
+        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
+        if cfg.is_orthrus:
+            s["phase"] = jnp.where(start, MSG, s["phase"])
+            s["msg_stage"] = jnp.where(start, 0, s["msg_stage"])
+            s["msg_arrive"] = jnp.where(
+                start, r + cm.msg_hop_rounds, s["msg_arrive"]
+            )
+        else:
+            s["phase"] = jnp.where(start, ACQ, s["phase"])
+
+        # ------------------------------------------------ 4. ORTHRUS CC work
+        if cfg.is_orthrus:
+            # -- admission of acquire-messages and release-messages, bounded
+            #    by each CC lane's per-round key-op capacity, in ts order.
+            in_cur_group = (
+                (kk[None, :] >= s["ccptr"][:, None])
+                & kvalid
+                & (ccids == jnp.take_along_axis(
+                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+            )
+            acq_cand = (
+                (s["phase"] == MSG)
+                & (s["msg_stage"] == 0)
+                & (s["msg_arrive"] <= r)
+            )
+            acq_keys = acq_cand[:, None] & in_cur_group & ~s["adm_done"]
+            rel_cand = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_keys = rel_cand[:, None] & s["granted"] & ~s["rel_done"]
+            ent_active = (acq_keys | rel_keys).reshape(-1)
+            ent_cc = jnp.where(ent_active.reshape(T, K), ccids, n_cc).reshape(-1)
+            ent_ts = jnp.broadcast_to(s["ts"][:, None], (T, K)).reshape(-1)
+            order = lex_order(ent_cc, ent_ts)
+            inv = jnp.argsort(order)
+            cc_sorted = ent_cc[order]
+            segstart = jnp.concatenate(
+                [jnp.ones((1,), jnp.bool_), cc_sorted[1:] != cc_sorted[:-1]]
+            )
+            pos_inc = jnp.cumsum(jnp.ones_like(cc_sorted))
+            base = jnp.maximum.accumulate(
+                jnp.where(segstart, pos_inc - 1, jnp.iinfo(jnp.int32).min)
+            )
+            seg_pos = pos_inc - base  # 1-based within CC lane
+            processed = (seg_pos <= cap_keys)[inv] & ent_active
+
+            proc2d = processed.reshape(T, K)
+            s["adm_done"] = s["adm_done"] | (proc2d & acq_keys.reshape(T, K))
+            # group fully admitted -> requests live in the CC's lock table
+            grp_all = jnp.where(in_cur_group, s["adm_done"], True).all(axis=1)
+            admit_now = acq_cand & grp_all
+            new_want = admit_now[:, None] & in_cur_group
+            s["phase"] = jnp.where(admit_now, ACQ, s["phase"])
+            # release processing
+            do_rel = proc2d & rel_keys.reshape(T, K)
+            rel_k = jnp.where(do_rel, keys, 0)
+            is_wr = do_rel & (modes == MODE_WRITE)
+            s["wh"] = s["wh"].at[jnp.where(is_wr, rel_k, R)].set(
+                -1, mode="drop"
+            )
+            is_rd = do_rel & (modes == MODE_READ)
+            s["rc"] = s["rc"].at[jnp.where(is_rd, rel_k, R)].add(
+                -1, mode="drop"
+            )
+            s["rel_done"] = s["rel_done"] | do_rel
+            s["granted"] = s["granted"] & ~do_rel
+        else:
+            new_want = jnp.zeros((T, K), jnp.bool_)
+
+        # ------------------------------------------------ 5. shared releases
+        rel_entries = jnp.zeros((T, K), jnp.bool_)
+        if not cfg.is_orthrus:
+            rel_now = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_entries = rel_now[:, None] & s["granted"]
+            rel_k = jnp.where(rel_entries, keys, 0)
+            is_wr = rel_entries & (modes == MODE_WRITE)
+            s["wh"] = s["wh"].at[jnp.where(is_wr, rel_k, R)].set(
+                -1, mode="drop"
+            )
+            is_rd = rel_entries & (modes == MODE_READ)
+            s["rc"] = s["rc"].at[jnp.where(is_rd, rel_k, R)].add(
+                -1, mode="drop"
+            )
+            s["granted"] = s["granted"] & ~rel_entries
+
+        # ------------------------------------------------ 6. requests: want
+        if cfg.is_orthrus:
+            s["want"] = s["want"] | new_want
+            want_new = new_want
+        else:
+            # 2PL/DF/pstore: single in-flight request at kptr when ACQ & free
+            at_k = kk[None, :] == s["kptr"][:, None]
+            need = (
+                ((s["phase"] == ACQ) & free)[:, None]
+                & at_k
+                & kvalid
+                & ~s["granted"]
+                & ~s["want"]
+            )
+            want_new = need
+            s["want"] = s["want"] | need
+
+        # assign enqueue order stamps to new queue entries
+        flat_new = want_new.reshape(-1)
+        new_rank = jnp.cumsum(flat_new.astype(jnp.int32)) - 1
+        enq_val = (s["enq_ctr"] + new_rank).reshape(T, K)
+        s["enq"] = jnp.where(want_new, enq_val, s["enq"])
+        n_new = flat_new.sum(dtype=jnp.int32)
+
+        # ------------------------------------------------ 7. grant pass
+        # Requests are live only while their slot is acquiring.
+        pend = s["want"] & ~s["granted"] & (s["phase"] == ACQ)[:, None]
+        ent_kind = jnp.where(
+            pend,
+            jnp.where(modes == MODE_WRITE, REQ_WRITE, REQ_READ),
+            jnp.where(rel_entries, REQ_RELEASE, REQ_NONE),
+        ).reshape(-1)
+        ent_key = jnp.where(
+            (pend | rel_entries), keys, KEY_SENTINEL
+        ).reshape(-1)
+        rel_enq = (s["enq_ctr"] + n_new) + jnp.arange(T * K, dtype=jnp.int32)
+        ent_enq = jnp.where(
+            rel_entries, rel_enq.reshape(T, K), s["enq"]
+        ).reshape(-1)
+        s["enq_ctr"] = s["enq_ctr"] + n_new + rel_entries.sum(dtype=jnp.int32)
+
+        safe = jnp.minimum(ent_key, R - 1)
+        in_rng = ent_key < R
+        wh_free = (s["wh"][safe] == -1) & in_rng
+        rcv = jnp.where(in_rng, s["rc"][safe], 0)
+        newop2d = want_new | rel_entries  # fresh lock-table ops this round
+        order = lex_order(ent_key, ent_enq)
+        inv = jnp.argsort(order)
+        g_sorted, cont_sorted, new_sorted = segmented_grant(
+            ent_key[order],
+            ent_enq[order],
+            ent_kind[order],
+            wh_free[order],
+            rcv[order],
+            weight=newop2d.reshape(-1).astype(jnp.int32)[order],
+        )
+        grant = g_sorted[inv].reshape(T, K)
+        # re-entrant grants bypass the FIFO: a slot re-requesting a key it
+        # already write-holds is granted immediately (real transactions
+        # touch the same row more than once; without this they would
+        # deadlock on their own lock)
+        ent_slot = jnp.broadcast_to(slot_ids[:, None], (T, K)).reshape(-1)
+        self_grant = (
+            (ent_kind != REQ_NONE)
+            & (ent_kind != REQ_RELEASE)
+            & in_rng
+            & (s["wh"][safe] == ent_slot)
+        )
+        grant = grant | self_grant.reshape(T, K)
+        contend = cont_sorted[inv].reshape(T, K)
+        new_in_seg = new_sorted[inv].reshape(T, K)
+
+        # apply grants to the lock table
+        gk = jnp.where(grant, keys, 0)
+        g_wr = grant & (modes == MODE_WRITE)
+        g_rd = grant & (modes == MODE_READ)
+        holder = jnp.broadcast_to(slot_ids[:, None], (T, K))
+        s["wh"] = s["wh"].at[jnp.where(g_wr, gk, R)].set(
+            holder, mode="drop"
+        )
+        s["rc"] = s["rc"].at[jnp.where(g_rd, gk, R)].add(1, mode="drop")
+        s["granted"] = s["granted"] | grant
+
+        # ------------------------------------------------ 8. deadlock logic
+        # (runs before cost charging so a wait-die "die" probe — a read of
+        # the holder's timestamp — costs latency but does not occupy the
+        # record's meta-data line the way a queue mutation does)
+        abort_dl = jnp.zeros((T,), jnp.bool_)
+        if dl != "none":
+            waitkey = jnp.where(
+                (s["phase"] == ACQ)
+                & jnp.take_along_axis(
+                    s["want"] & ~s["granted"],
+                    jnp.minimum(s["kptr"], K - 1)[:, None],
+                    axis=1,
+                ).squeeze(1),
+                jnp.take_along_axis(
+                    keys, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                ).squeeze(1),
+                KEY_SENTINEL,
+            )
+            waiting = waitkey != KEY_SENTINEL
+            mymode = jnp.take_along_axis(
+                modes, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            # adj[t,u]: t waits on a lock u holds in a conflicting mode
+            key_eq = keys[None, :, :] == waitkey[:, None, None]  # [t,u,k]
+            conflict = (mymode[:, None, None] == MODE_WRITE) | (
+                modes[None, :, :] == MODE_WRITE
+            )
+            adj = (
+                (key_eq & s["granted"][None, :, :] & conflict).any(-1)
+                & waiting[:, None]
+                & (slot_ids[None, :] != slot_ids[:, None])
+                & (s["tid"][None, :] >= 0)
+            )
+            if dl == "waitdie":
+                # a waiter dies whenever its wait-for edge points at an
+                # older holder — evaluated on every holder change (waiting
+                # on a younger holder is legal, so the edge must be
+                # re-checked when the lock changes hands); the "die" probe
+                # is a read of the holder's timestamp and is costed as
+                # latency only (no line occupancy) in stage 9
+                newly_waiting = waiting & ~s["waited"]
+                older_holder = (
+                    adj & (s["ts"][None, :] < s["ts"][:, None])
+                ).any(-1)
+                abort_dl = older_holder & waiting
+                s["dl_debt"] = s["dl_debt"] + jnp.where(
+                    newly_waiting, cm.waitdie_check_cycles, 0
+                )
+            else:
+                own = jnp.eye(T, dtype=jnp.bool_)
+                # one propagation step per round (dreadlocks-style digests)
+                reach = own | (adj @ s["reach"])
+                s["reach"] = jnp.where(waiting[:, None], reach, own)
+                in_cycle = (adj & s["reach"].T).any(-1)  # holder reaches me
+                # abort the youngest member of the detected cycle; waitfor
+                # and dreadlocks are logically equivalent detectors (paper
+                # §4.1) and differ only in their cost constants
+                scc = s["reach"] & s["reach"].T
+                scc_ts_max = jnp.max(
+                    jnp.where(scc & in_cycle[None, :], s["ts"][None, :], -1),
+                    axis=1,
+                )
+                abort_dl = in_cycle & (s["ts"] >= scc_ts_max)
+                s["dl_debt"] = s["dl_debt"] + jnp.where(
+                    waiting, dl_wait_cycles, 0
+                )
+            s["waited"] = waiting
+            # convert deadlock-handling debt into lane busy time
+            debt_rounds = s["dl_debt"] // cm.cycles_per_round
+            has_debt = debt_rounds > 0
+            s["busy_until"] = jnp.where(
+                has_debt, jnp.maximum(s["busy_until"], r) + debt_rounds,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(has_debt, CAT_DL, s["busy_kind"])
+            s["dl_debt"] = s["dl_debt"] % cm.cycles_per_round
+
+            abort_dl = abort_dl & waiting
+            s["aborts_dl"] = s["aborts_dl"] + abort_dl.sum(dtype=jnp.int32)
+            s["wasted"] = s["wasted"] + jnp.where(abort_dl, s["kptr"], 0).sum(
+                dtype=jnp.int32
+            )
+            s["phase"] = jnp.where(abort_dl, REL, s["phase"])
+            s["committing"] = jnp.where(abort_dl, False, s["committing"])
+            s["release_at"] = jnp.where(abort_dl, r, s["release_at"])
+            s["want"] = s["want"] & ~abort_dl[:, None]
+
+        # ------------------------------------------------ 9. line-cost model
+        # Coherence physics for shared lock tables (paper §2.1): each record's
+        # CC meta-data line is a serially-reusable resource. Op service time
+        # grows with the number of cores recently touching the line ("sharer
+        # heat", estimated over epoch windows) and with line ping-pong (last
+        # toucher on a different core). Queue-mutating ops on a backlogged
+        # line wait behind it; wait-die "die" probes pay their own transfer
+        # latency but occupy nothing. ORTHRUS CC lanes are exempt:
+        # single-owner meta-data.
+        if not cfg.is_orthrus:
+            newop = newop2d  # fresh lock-table ops this round: reqs+releases
+            mutate = newop & ~abort_dl[:, None]  # dies don't enqueue
+            e = r >> EPOCH_BITS
+            opk_r = jnp.minimum(jnp.where(newop, keys, 0), R - 1)
+            ep_k = s["ep"][opk_r]
+            cur_k = s["cnt_cur"][opk_r]
+            prev_k = s["cnt_prev"][opk_r]
+            sharers = jnp.where(
+                ep_k == e,
+                jnp.maximum(prev_k, cur_k),
+                jnp.where(ep_k == e - 1, cur_k, 0),
+            )
+            lane2d = jnp.broadcast_to(lane_of[:, None], (T, K))
+            remote = s["last_lane"][opk_r] != lane2d
+            coh = jnp.where(
+                remote,
+                cm.coherence_cycles_per_sharer
+                * jnp.clip(sharers, 1, cfg.n_exec - 1),
+                0,
+            )
+            if dl == "dreadlocks":
+                # waiters spin on the holders' digests: every queued waiter
+                # keeps the lock meta-data lines hot, so each op pays extra
+                # coherence proportional to the current queue (paper §4.4.1)
+                coh = coh + cm.dreadlocks_spin_cycles * jnp.maximum(
+                    contend - 1, 0
+                )
+            dur = rounds_of(lock_op_cycles + coh)
+            lnf_cur = s["lnf"][opk_r]
+            backlog = jnp.maximum(jnp.where(mutate, lnf_cur - r, 0), 0)
+            charge = jnp.where(newop, backlog + dur, 0).sum(axis=1)
+            # occupancy: same-round queue mutations serialize on the line
+            mut_in_seg = segment_sum_by_key(
+                jnp.where(mutate, keys, KEY_SENTINEL).reshape(-1),
+                mutate.reshape(-1).astype(jnp.int32),
+            ).reshape(T, K)
+            occupy = jnp.where(mutate, mut_in_seg * dur, 0)
+            tgt = jnp.maximum(lnf_cur, r) + occupy
+            opk_scatter = jnp.where(mutate, opk_r, R)
+            s["lnf"] = s["lnf"].at[opk_scatter].max(tgt, mode="drop")
+            # epoch sharer-heat bookkeeping (same value per key: idempotent)
+            opk_heat = jnp.where(newop, opk_r, R)
+            new_prev = jnp.where(
+                ep_k == e, prev_k, jnp.where(ep_k == e - 1, cur_k, 0)
+            )
+            new_cur = jnp.where(ep_k == e, cur_k, 0) + new_in_seg
+            s["cnt_prev"] = s["cnt_prev"].at[opk_heat].set(
+                new_prev, mode="drop"
+            )
+            s["cnt_cur"] = s["cnt_cur"].at[opk_heat].set(new_cur, mode="drop")
+            s["ep"] = s["ep"].at[opk_heat].set(e, mode="drop")
+            s["last_lane"] = s["last_lane"].at[opk_heat].max(
+                lane2d, mode="drop"
+            )
+            charged = charge > 0
+            s["busy_until"] = jnp.where(
+                charged, jnp.maximum(s["busy_until"], r) + charge,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(charged, CAT_LOCK, s["busy_kind"])
+
+        # ------------------------------------------------ 10. transitions
+        free = s["busy_until"] <= r
+        exec_rounds_one = rounds_of(exec_cycles_per_op)
+
+        if cfg.is_dynamic_2pl:
+            cur_granted = jnp.take_along_axis(
+                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            go = (s["phase"] == ACQ) & free & cur_granted & ~abort_dl
+            last = go & (s["kptr"] + 1 >= nkeys)
+            extra = jnp.maximum(execops - nkeys, 0)
+            add = jnp.where(
+                go, exec_rounds_one + jnp.where(last, extra * exec_rounds_one, 0), 0
+            )
+            s["busy_until"] = jnp.where(
+                go, jnp.maximum(s["busy_until"], r) + add, s["busy_until"]
+            )
+            s["busy_kind"] = jnp.where(go, CAT_EXEC, s["busy_kind"])
+            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
+            s["phase"] = jnp.where(last, EXEC, s["phase"])
+        elif cfg.protocol in ("deadlock_free", "partitioned_store"):
+            cur_granted = jnp.take_along_axis(
+                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            go = (s["phase"] == ACQ) & free & cur_granted
+            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
+            alldone = go & (s["kptr"] >= nkeys)
+            s["phase"] = jnp.where(alldone, EXEC, s["phase"])
+            s["busy_until"] = jnp.where(
+                alldone,
+                jnp.maximum(s["busy_until"], r) + execops * exec_rounds_one,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(alldone, CAT_EXEC, s["busy_kind"])
+        else:  # orthrus
+            in_cur_group = (
+                (kk[None, :] >= s["ccptr"][:, None])
+                & kvalid
+                & (ccids == jnp.take_along_axis(
+                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+            )
+            grp_done = (
+                (s["phase"] == ACQ)
+                & jnp.where(in_cur_group, s["granted"], True).all(axis=1)
+            )
+            nxt = jnp.where(
+                (kk[None, :] >= s["ccptr"][:, None]) & kvalid & ~in_cur_group,
+                kk[None, :],
+                K,
+            ).min(axis=1)
+            more = grp_done & (nxt < K)
+            s["ccptr"] = jnp.where(more, nxt, s["ccptr"])
+            s["adm_done"] = jnp.where(more[:, None], False, s["adm_done"])
+            s["phase"] = jnp.where(grp_done, MSG, s["phase"])
+            s["msg_stage"] = jnp.where(grp_done, jnp.where(more, 0, 1),
+                                       s["msg_stage"])
+            s["msg_arrive"] = jnp.where(
+                grp_done, r + cm.msg_hop_rounds, s["msg_arrive"]
+            )
+            # response arrives -> READY
+            resp = (
+                (s["phase"] == MSG) & (s["msg_stage"] == 1)
+                & (s["msg_arrive"] <= r)
+            )
+            s["phase"] = jnp.where(resp, READY, s["phase"])
+            # exec-lane scheduling: oldest READY per idle lane starts
+            lane_busy = jax.ops.segment_sum(
+                ((s["phase"] == EXEC) & ~free).astype(jnp.int32),
+                lane_of,
+                num_segments=cfg.n_exec,
+            )
+            ready = s["phase"] == READY
+            ready_ts = jnp.where(ready, s["ts"], jnp.iinfo(jnp.int32).max)
+            lane_min = jax.ops.segment_min(
+                ready_ts, lane_of, num_segments=cfg.n_exec
+            )
+            startx = (
+                ready
+                & (ready_ts == lane_min[lane_of])
+                & (lane_busy[lane_of] == 0)
+            )
+            # break ties (same ts impossible — tids unique) -> safe
+            s["phase"] = jnp.where(startx, EXEC, s["phase"])
+            s["busy_until"] = jnp.where(
+                startx, r + execops * exec_rounds_one, s["busy_until"]
+            )
+            s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+
+        # EXEC finished -> release (commit, or OLLP-miss abort+retry)
+        free = s["busy_until"] <= r
+        fin = (s["phase"] == EXEC) & free
+        is_miss = fin & miss & (s["attempt"] == 0)
+        s["aborts_ollp"] = s["aborts_ollp"] + is_miss.sum(dtype=jnp.int32)
+        s["wasted"] = s["wasted"] + jnp.where(is_miss, execops, 0).sum(
+            dtype=jnp.int32
+        )
+        s["phase"] = jnp.where(fin, REL, s["phase"])
+        s["committing"] = jnp.where(fin, ~is_miss, s["committing"])
+        rel_delay = cm.msg_hop_rounds if cfg.is_orthrus else 0
+        s["release_at"] = jnp.where(fin, r + rel_delay, s["release_at"])
+        s["rel_done"] = jnp.where(fin[:, None], False, s["rel_done"])
+        s["want"] = s["want"] & ~fin[:, None]
+
+        # REL complete -> EMPTY (commit) or BACKOFF (retry). A slot leaves
+        # only after every lock it held has actually been released (the
+        # release scatter runs in stages 4/5 of a *subsequent* round).
+        rel_done_all = (
+            (s["phase"] == REL)
+            & (s["release_at"] <= r)
+            & ~(s["granted"]).any(axis=1)
+        )
+        com = rel_done_all & s["committing"]
+        s["commits"] = s["commits"] + com.sum(dtype=jnp.int32)
+        s["phase"] = jnp.where(
+            rel_done_all, jnp.where(s["committing"], EMPTY, BACKOFF), s["phase"]
+        )
+        s["tid"] = jnp.where(com, -1, s["tid"])
+        s["busy_until"] = jnp.where(
+            rel_done_all & ~s["committing"],
+            r + cm.abort_backoff_rounds,
+            s["busy_until"],
+        )
+        s["want"] = jnp.where(rel_done_all[:, None], False, s["want"])
+
+        # ------------------------------------------------ 11. lane accounting
+        busy = s["busy_until"] > r
+        slot_cat = jnp.where(
+            busy,
+            s["busy_kind"],
+            jnp.where(
+                (s["phase"] == ACQ) & (s["want"] & ~s["granted"]).any(axis=1),
+                CAT_WAIT,
+                jnp.where(
+                    (s["phase"] == MSG) | (s["phase"] == READY)
+                    | (s["phase"] == REL),
+                    CAT_MSG,
+                    CAT_IDLE,
+                ),
+            ),
+        )
+        if cfg.is_orthrus:
+            # a lane is "exec" if its running slot is busy executing; else
+            # classify by the most advanced outstanding slot state
+            lane_exec = jax.ops.segment_max(
+                (busy & (slot_cat == CAT_EXEC)).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_wait = jax.ops.segment_max(
+                (slot_cat == CAT_WAIT).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_msg = jax.ops.segment_max(
+                (slot_cat == CAT_MSG).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_cat = jnp.where(
+                lane_exec == 1,
+                CAT_EXEC,
+                jnp.where(lane_wait == 1, CAT_WAIT,
+                          jnp.where(lane_msg == 1, CAT_MSG, CAT_IDLE)),
+            )
+            cat_counts = jax.ops.segment_sum(
+                jnp.ones((cfg.n_exec,), jnp.int32),
+                lane_cat,
+                num_segments=NCAT,
+            )
+        else:
+            cat_counts = jax.ops.segment_sum(
+                jnp.ones((T,), jnp.int32), slot_cat, num_segments=NCAT
+            )
+        s["cat"] = s["cat"] + cat_counts
+
+        s["r"] = r + 1
+        return s
+
+    return step
+
+
+def _compact_keys(plan: planner_lib.Plan) -> planner_lib.Plan:
+    """Remap record keys to a dense id space (simulation-side compaction).
+
+    np.unique is monotone, so canonical (sorted) acquisition orders are
+    preserved; only the lock-table array size changes (10M-record tables
+    would otherwise dominate simulator memory traffic).
+    """
+    keys = plan.keys
+    uniq, inv = np.unique(keys, return_inverse=True)
+    dense = inv.reshape(keys.shape).astype(np.int32)
+    num = len(uniq)
+    if uniq[-1] == int(KEY_SENTINEL):  # keep padding as sentinel
+        dense = np.where(keys == int(KEY_SENTINEL), int(KEY_SENTINEL), dense)
+        num -= 1
+    plan = dataclasses.replace(plan, keys=dense, num_records=max(int(num), 1))
+    return plan
+
+
+def run_simulation(
+    cfg: EngineConfig,
+    workload: Workload,
+    seed: int = 0,
+) -> SimResult:
+    """Plan the workload for the protocol, then simulate."""
+    if cfg.protocol == "orthrus":
+        plan = planner_lib.plan_orthrus(workload, cfg.n_cc)
+    elif cfg.protocol == "deadlock_free":
+        plan = planner_lib.plan_sorted(workload)
+    elif cfg.protocol == "partitioned_store":
+        plan = planner_lib.plan_partition_store(workload, cfg.n_exec)
+    else:
+        plan = planner_lib.plan_dynamic(workload)
+    plan = _compact_keys(plan)
+
+    T, K = cfg.n_slots, plan.keys.shape[1]
+    step = make_step(cfg, plan)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def run_chunk(state):
+        return jax.lax.fori_loop(0, cfg.chunk_rounds, step, state)
+
+    state = _state0(cfg, plan.num_records, T, K)
+    warm_commits = 0
+    warm_aborts = 0
+    warm_cat = np.zeros(NCAT, np.int64)
+    rounds_done = 0
+    warm_rounds = 0
+    while rounds_done < cfg.max_rounds:
+        state = run_chunk(state)
+        rounds_done += cfg.chunk_rounds
+        commits = int(state["commits"])
+        if rounds_done <= cfg.warmup_rounds:
+            warm_commits = commits
+            warm_aborts = int(state["aborts_dl"])
+            warm_cat = np.asarray(state["cat"])
+            warm_rounds = rounds_done
+        if commits - warm_commits >= cfg.target_commits:
+            break
+
+    cm = cfg.cost
+    commits = int(state["commits"]) - warm_commits
+    meas_rounds = rounds_done - warm_rounds
+    sim_seconds = meas_rounds * cm.round_seconds
+    cat = np.asarray(state["cat"]) - warm_cat
+    total_lane_rounds = max(int(cat.sum()), 1)
+    names = ["idle", "exec", "lock", "wait", "deadlock", "msg"]
+    breakdown = {
+        n: float(cat[i]) / total_lane_rounds for i, n in enumerate(names)
+    }
+    return SimResult(
+        commits=commits,
+        aborts_deadlock=int(state["aborts_dl"]) - warm_aborts,
+        aborts_ollp=int(state["aborts_ollp"]),
+        wasted_ops=int(state["wasted"]),
+        rounds=meas_rounds,
+        sim_seconds=sim_seconds,
+        throughput_txn_s=commits / max(sim_seconds, 1e-12),
+        breakdown=breakdown,
+        raw=dict(
+            total_commits=int(state["commits"]),
+            next_txn=int(state["next_txn"]),
+            rounds_total=rounds_done,
+        ),
+    )

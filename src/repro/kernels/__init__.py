@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel directory has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper (layout/padding/reshapes + XLA-side glue)
+  ref.py    — pure-jnp oracle used by the engine/models and by tests
+
+This container is CPU-only: kernels are validated with interpret=True
+against their oracles across shape/dtype sweeps (tests/test_kernels_*).
+
+  lock_grant      — segmented FIFO lock-grant (the lock manager's hot loop)
+  moe_dispatch    — canonical-order capacity-bounded dispatch plan (P2)
+  flash_attention — blocked online-softmax attention (full/SWA/chunked)
+  rwkv6_scan      — RWKV6 WKV recurrence, time-chunked with VMEM state
+"""

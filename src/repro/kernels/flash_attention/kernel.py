@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention forward.
+
+Grid: (B*H, n_q_blocks, n_kv_blocks) with the KV dimension innermost so the
+running (acc, m, l) state lives in VMEM scratch across KV steps — the
+canonical TPU flash layout. Block shapes are MXU-aligned (q_block x head_dim
+and kv_block x head_dim tiles; head_dim is expected to be a multiple of 128
+or small enough to fit a lane tile). Causal / sliding-window / chunked masks
+are applied per block from absolute positions.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            kind, window, scale, q_block, kv_block, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [qb, d]
+    k = k_ref[0]  # [kb, d]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # [qb, kb]
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos <= q_pos
+    if kind == "swa" and window:
+        mask &= q_pos - k_pos < window
+    elif kind == "chunked" and window:
+        mask &= (q_pos // window) == (k_pos // window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention_kernel(q, k, v, *, kind="full", window=0, q_block=256,
+                           kv_block=256, interpret=True):
+    """q: [BH, S, d]; k/v: [BH, T, d] -> [BH, S, d]."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    assert S % q_block == 0 and T % kv_block == 0
+    grid = (BH, S // q_block, T // kv_block)
+    kern = functools.partial(
+        _kernel,
+        kind=kind,
+        window=window,
+        scale=1.0 / math.sqrt(D),
+        q_block=q_block,
+        kv_block=kv_block,
+        n_kv=T // kv_block,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, D), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

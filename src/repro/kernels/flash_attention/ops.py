@@ -1,0 +1,36 @@
+"""jit'd wrapper: GQA layout handling for the flash attention kernel.
+
+Accepts model-layout tensors q [B,S,Hq,d], k/v [B,T,Hkv,d]; broadcasts KV
+heads across their query groups, flattens (B,H) into the kernel's batch
+grid axis, and restores the layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(q, k, v, *, kind="full", window=0, q_block=256,
+                    kv_block=256, interpret=True):
+    B, S, HQ, D = q.shape
+    HKV = k.shape[2]
+    G = HQ // HKV
+    kb = jnp.repeat(k, G, axis=2)
+    vb = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * HQ, S, D)
+    kf = kb.transpose(0, 2, 1, 3).reshape(B * HQ, -1, D)
+    vf = vb.transpose(0, 2, 1, 3).reshape(B * HQ, -1, D)
+    o = flash_attention_kernel(
+        qf, kf, vf, kind=kind, window=window, q_block=min(q_block, S),
+        kv_block=min(kv_block, kf.shape[1]), interpret=interpret,
+    )
+    return o.reshape(B, HQ, S, D).transpose(0, 2, 1, 3)

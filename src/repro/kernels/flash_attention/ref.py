@@ -1,0 +1,31 @@
+"""Oracle: naive softmax attention with causal / sliding-window / chunked
+masks. Shapes: q [B,H,S,hd], k/v [B,H,T,hd] (kv heads pre-broadcast)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mask_fn(kind, q_pos, k_pos, window):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if kind == "swa" and window:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    elif kind == "chunked" and window:
+        m &= (q_pos[:, None] // window) == (k_pos[None, :] // window)
+    return m
+
+
+def flash_attention_ref(q, k, v, *, kind="full", window=0, q_offset=0):
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    m = mask_fn(kind, q_pos, k_pos, window)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(q.dtype), v)

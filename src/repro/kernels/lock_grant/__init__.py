@@ -1,0 +1,3 @@
+from repro.kernels.lock_grant.ops import lock_grant
+
+__all__ = ["lock_grant"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: segmented FIFO lock grant over sorted entries.
+
+Tiling: 1-D grid over entry blocks of ``block_n``; each block lives in VMEM.
+The segmented prefix state (last key seen, running request/write/op counts
+for the segment that crosses the block boundary) is carried across grid
+steps in SMEM scratch — TPU grids execute sequentially, so the carry is the
+standard Pallas pattern for cross-block scans.
+
+This is the ORTHRUS CC-lane inner loop: on a real deployment one CC
+TensorCore services admission batches with this kernel while execution
+cores run transaction logic — partitioned functionality on-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lockgrant import REQ_NONE, REQ_READ, REQ_WRITE
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _kernel(keys_ref, kind_ref, whfree_ref, rc_ref,
+            grant_ref, reqpos_ref, wbefore_ref, oppos_ref,
+            carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = jnp.iinfo(jnp.int32).min  # last key (none)
+        carry_ref[1] = 0  # running req count in open segment
+        carry_ref[2] = 0  # running write count
+        carry_ref[3] = 0  # running op count
+
+    keys = keys_ref[...]
+    kind = kind_ref[...]
+    active = kind != REQ_NONE
+    is_req = active & ((kind == REQ_READ) | (kind == REQ_WRITE))
+    is_w = active & (kind == REQ_WRITE)
+    is_r = active & (kind == REQ_READ)
+
+    prev_key = jnp.concatenate(
+        [jnp.full((1,), carry_ref[0], jnp.int32), keys[:-1]]
+    )
+    seg_start = (keys != prev_key) | ~active
+
+    def seg_cumsum(x, carry_base):
+        total = jnp.cumsum(x) + carry_base
+        base = jnp.maximum.accumulate(
+            jnp.where(seg_start, total - x, _I32_MIN)
+        )
+        # if no segment start yet in this block, base stays at the carried
+        # segment's origin (0 by construction of `total + carry_base`)
+        base = jnp.maximum(base, 0)
+        return total - base
+
+    req_pos = seg_cumsum(is_req.astype(jnp.int32), carry_ref[1])
+    w_incl = seg_cumsum(is_w.astype(jnp.int32), carry_ref[2])
+    writes_before = w_incl - is_w.astype(jnp.int32)
+    op_pos = seg_cumsum(active.astype(jnp.int32), carry_ref[3])
+
+    grant_read = is_r & whfree_ref[...] & (writes_before == 0)
+    grant_write = (
+        is_w & whfree_ref[...] & (rc_ref[...] == 0) & (req_pos == 1)
+    )
+    grant_ref[...] = (grant_read | grant_write) & active
+    reqpos_ref[...] = req_pos
+    wbefore_ref[...] = writes_before
+    oppos_ref[...] = op_pos
+
+    # carry out: state of the (possibly open) final segment
+    carry_ref[0] = keys[-1]
+    carry_ref[1] = req_pos[-1]
+    carry_ref[2] = w_incl[-1]
+    carry_ref[3] = op_pos[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lock_grant_kernel(keys, kind, wh_free, rc, *, block_n=1024,
+                      interpret=True):
+    n = keys.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    bs = lambda: pl.BlockSpec((block_n,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((n,), jnp.bool_),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[bs(), bs(), bs(), bs()],
+        out_specs=(bs(), bs(), bs(), bs()),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.SMEM((4,), jnp.int32)],
+        interpret=interpret,
+    )(keys, kind, wh_free, rc)

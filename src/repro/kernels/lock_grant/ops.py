@@ -1,0 +1,58 @@
+"""jit'd wrapper for the lock_grant kernel.
+
+Handles sorting by (key, enq), padding to the block size, the XLA-side
+segment-total broadcast (contender counts), and unsorting — so callers see
+the same contract as ``repro.core.lockgrant.grant_round``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lockgrant import (
+    KEY_SENTINEL,
+    REQ_NONE,
+    lex_order,
+    _segment_broadcast_last,
+)
+from repro.kernels.lock_grant.kernel import lock_grant_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_records", "block_n", "interpret")
+)
+def lock_grant(keys, ts, kind, write_holder, read_count, *, num_records,
+               block_n=1024, interpret=True):
+    """Drop-in twin of ``core.lockgrant.grant_round`` (grant, contenders)."""
+    n = keys.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), KEY_SENTINEL, keys.dtype)])
+        ts = jnp.concatenate([ts, jnp.zeros((pad,), ts.dtype)])
+        kind = jnp.concatenate([kind, jnp.full((pad,), REQ_NONE, kind.dtype)])
+
+    safe = jnp.minimum(keys, num_records - 1)
+    in_range = keys < num_records
+    wh_free = (write_holder[safe] == -1) & in_range
+    rc = jnp.where(in_range, read_count[safe], 0)
+
+    order = lex_order(keys, ts)
+    inv = jnp.argsort(order)
+    ks = keys[order]
+    grant, req_pos, wbefore, op_pos = lock_grant_kernel(
+        ks, kind[order], wh_free[order], rc[order],
+        block_n=block_n, interpret=interpret,
+    )
+    # segment totals (contenders) from the kernel's prefix op counts
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), ks[1:] != ks[:-1]]
+    ) | (kind[order] == REQ_NONE)
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    contenders = _segment_broadcast_last(op_pos, seg_id)
+    active = kind[order] != REQ_NONE
+    g = grant[inv][:n]
+    c = jnp.where(active, contenders, 0)[inv][:n]
+    return g, c

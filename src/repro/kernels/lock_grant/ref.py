@@ -1,0 +1,53 @@
+"""Oracle for the lock_grant kernel: the engine's segmented FIFO grant.
+
+The kernel contract covers the *sequential-dependency* part of
+``repro.core.lockgrant.segmented_grant``: given entries sorted by
+(key, enq), emit per-entry prefix statistics and the grant decision. The
+segment-total broadcasts (contender counts) are embarrassingly parallel and
+live in ops.py on the XLA side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lockgrant import (
+    REQ_NONE,
+    REQ_READ,
+    REQ_WRITE,
+)
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def lock_grant_ref(keys, kind, wh_free, rc):
+    """Entries sorted by (key, enq).
+
+    Returns (grant bool[N], req_pos int32[N], writes_before int32[N],
+    op_pos int32[N]) — all prefix quantities within each key segment.
+    """
+    active = kind != REQ_NONE
+    is_req = active & ((kind == REQ_READ) | (kind == REQ_WRITE))
+    is_w = active & (kind == REQ_WRITE)
+    is_r = active & (kind == REQ_READ)
+
+    seg_start = (
+        jnp.concatenate([jnp.ones((1,), jnp.bool_), keys[1:] != keys[:-1]])
+        | ~active
+    )
+
+    def seg_cumsum(x):
+        total = jnp.cumsum(x)
+        base = jnp.maximum.accumulate(
+            jnp.where(seg_start, total - x, _I32_MIN)
+        )
+        return total - base
+
+    req_pos = seg_cumsum(is_req.astype(jnp.int32))
+    w_incl = seg_cumsum(is_w.astype(jnp.int32))
+    writes_before = w_incl - is_w.astype(jnp.int32)
+    op_pos = seg_cumsum(active.astype(jnp.int32))
+
+    grant_read = is_r & wh_free & (writes_before == 0)
+    grant_write = is_w & wh_free & (rc == 0) & (req_pos == 1)
+    return (grant_read | grant_write) & active, req_pos, writes_before, op_pos

@@ -1,0 +1,3 @@
+from repro.kernels.moe_dispatch.ops import moe_dispatch_plan
+
+__all__ = ["moe_dispatch_plan"]

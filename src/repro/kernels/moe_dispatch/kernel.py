@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: capacity positions for planned MoE dispatch.
+
+Same cross-block segmented-prefix structure as lock_grant (1-D grid over
+entry blocks, SMEM carry of the open segment), applied to sorted expert
+assignments. On TPU this runs in the dispatch stage ahead of the expert
+all-to-all, producing the static gather/scatter schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _kernel(e_ref, pos_ref, keep_ref, carry_ref, *, capacity):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = -2  # last expert id seen (none)
+        carry_ref[1] = 0  # running count in open segment
+
+    e = e_ref[...]
+    active = e >= 0
+    prev = jnp.concatenate(
+        [jnp.full((1,), carry_ref[0], jnp.int32), e[:-1]]
+    )
+    seg_start = (e != prev) | ~active
+    ones = active.astype(jnp.int32)
+    total = jnp.cumsum(ones) + carry_ref[1]
+    base = jnp.maximum.accumulate(
+        jnp.where(seg_start, total - ones, _I32_MIN)
+    )
+    base = jnp.maximum(base, 0)
+    pos = total - base - 1
+    pos_ref[...] = pos
+    keep_ref[...] = active & (pos < capacity)
+    carry_ref[0] = e[-1]
+    carry_ref[1] = pos[-1] + 1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "block_n", "interpret")
+)
+def dispatch_positions_kernel(experts_sorted, *, capacity, block_n=1024,
+                              interpret=True):
+    n = experts_sorted.shape[0]
+    assert n % block_n == 0
+    bs = pl.BlockSpec((block_n,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, capacity=capacity),
+        grid=(n // block_n,),
+        in_specs=[bs],
+        out_specs=(bs, bs),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+        ),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(experts_sorted)

@@ -1,0 +1,47 @@
+"""jit'd wrapper producing the full dispatch plan via the Pallas kernel
+(pad + sort in XLA, prefix positions in the kernel, scatter in XLA)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_dispatch.kernel import dispatch_positions_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_k", "capacity", "block_n", "interpret")
+)
+def moe_dispatch_plan(router_probs, *, top_k, capacity, block_n=1024,
+                      interpret=True):
+    """Kernel-backed twin of ``repro.models.moe.plan_dispatch``."""
+    N, E = router_probs.shape
+    w, eidx = jax.lax.top_k(router_probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    ee = eidx.reshape(-1).astype(jnp.int32)
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), top_k)
+    ww = w.reshape(-1)
+
+    order = jnp.argsort(ee, stable=True)
+    ee_s, tok_s, ww_s = ee[order], tok[order], ww[order]
+    n = ee_s.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        ee_s = jnp.concatenate([ee_s, jnp.full((pad,), -1, jnp.int32)])
+    pos, keep = dispatch_positions_kernel(
+        ee_s, capacity=capacity, block_n=block_n, interpret=interpret
+    )
+    pos, keep = pos[:n], keep[:n]
+    slot = jnp.where(keep, ee_s[:n] * capacity + pos, E * capacity)
+    slot_token = jnp.full((E * capacity,), -1, jnp.int32).at[slot].set(
+        tok_s, mode="drop"
+    )
+    slot_weight = jnp.zeros((E * capacity,), jnp.float32).at[slot].set(
+        ww_s, mode="drop"
+    )
+    load = jax.ops.segment_sum(
+        jnp.ones((N * top_k,), jnp.float32), ee, num_segments=E
+    ) / (N * top_k)
+    return {"slot_token": slot_token, "slot_weight": slot_weight, "load": load}

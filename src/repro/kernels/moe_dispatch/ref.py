@@ -1,0 +1,32 @@
+"""Oracle for the moe_dispatch kernel: canonical-order capacity positions.
+
+Contract: given expert assignments ALREADY sorted by (expert, arrival) —
+the canonical P2 order — emit each entry's 0-based position within its
+expert segment and the capacity keep-mask. (The surrounding top-k, sort and
+scatter stay in XLA; this prefix scan is the sequential hot loop, the MoE
+twin of the lock-grant kernel.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def dispatch_positions_ref(experts_sorted, capacity):
+    """experts_sorted: int32[N] (-1 = padding). Returns (pos, keep)."""
+    e = experts_sorted
+    active = e >= 0
+    seg_start = (
+        jnp.concatenate([jnp.ones((1,), jnp.bool_), e[1:] != e[:-1]])
+        | ~active
+    )
+    ones = active.astype(jnp.int32)
+    total = jnp.cumsum(ones)
+    base = jnp.maximum.accumulate(
+        jnp.where(seg_start, total - ones, _I32_MIN)
+    )
+    pos = total - base - 1  # 0-based within expert
+    keep = active & (pos < capacity)
+    return pos, keep

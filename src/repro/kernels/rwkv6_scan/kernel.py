@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence, time-chunked.
+
+Grid: (B*H, n_time_chunks) — time is the minor (sequential) grid dim, so
+the [hd, hd] state lives in VMEM scratch across chunks. Within a chunk the
+recurrence runs as a fori_loop over timesteps; r/k/v/w chunk tiles stream
+through VMEM. hd=64 tiles fit the VPU lanes; the outer-product update and
+the r-contraction are rank-1 ops (this kernel is bandwidth-, not MXU-,
+bound — the reason the SSM family decodes at memory-roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+            state_ref, *, chunk, n_chunks):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _():
+        state_ref[...] = s0_ref[0]
+
+    u = u_ref[0]  # [hd]
+
+    def step(t, _):
+        rt = r_ref[0, t]  # [hd]
+        kt = k_ref[0, t]
+        vt = v_ref[0, t]
+        wt = w_ref[0, t]
+        kv = kt[:, None] * vt[None, :]  # [hd, hd]
+        st = state_ref[...]
+        o_ref[0, t] = (
+            rt[:, None] * (st + u[:, None] * kv)
+        ).sum(axis=0)
+        state_ref[...] = wt[:, None] * st + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == n_chunks - 1)
+    def _():
+        sout_ref[0] = state_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def rwkv6_scan_kernel(r, k, v, w, u, state0, *, chunk=128, interpret=True):
+    """r,k,v,w: [BH, S, hd] f32; u: [BH, hd]; state0: [BH, hd, hd]."""
+    BH, S, D = r.shape
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (BH, n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, D), lambda b, t: (b, t, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct((BH, S, D), jnp.float32),
+        jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, D), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, D, D), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=(
+            seq_spec,
+            pl.BlockSpec((1, D, D), lambda b, t: (b, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)

@@ -1,0 +1,26 @@
+"""jit'd wrapper: layout adaptation for the rwkv6_scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state0, *, chunk=128, interpret=True):
+    """Model layout [B,H,S,hd] (+ u [H,hd], state0 [B,H,hd,hd])."""
+    B, H, S, D = r.shape
+    f = lambda a: a.astype(jnp.float32).reshape(B * H, S, D)
+    uu = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, D)).reshape(
+        B * H, D
+    )
+    s0 = state0.astype(jnp.float32).reshape(B * H, D, D)
+    o, s = rwkv6_scan_kernel(
+        f(r), f(k), f(v), f(w), uu, s0,
+        chunk=min(chunk, S), interpret=interpret,
+    )
+    return o.reshape(B, H, S, D), s.reshape(B, H, D, D)

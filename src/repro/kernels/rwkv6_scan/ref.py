@@ -1,0 +1,30 @@
+"""Oracle: RWKV6 WKV recurrence (jax.lax.scan over time).
+
+All inputs per head: r,k,v,w [B,H,S,hd] (w = per-step decay in (0,1)),
+u [H,hd] bonus. State [B,H,hd,hd] (key x value).
+
+  out_t = r_t . (S + u * (k_t v_t^T))
+  S    <- diag(w_t) S + k_t v_t^T
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state0):
+    B, H, S, D = r.shape
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, st + u[None, :, :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 2, 0) for a in (r, k, v, w)
+    )
+    state, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 2), state  # [B,H,S,hd], [B,H,hd,hd]

@@ -1,0 +1,214 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--multi-pod] [--out artifacts/dryrun] [--smoke]
+
+For each cell this proves the distribution config is coherent on the
+production mesh (16x16 single pod; 2x16x16 multi-pod) with no device
+allocation: inputs/params are ShapeDtypeStructs. Artifacts (memory analysis,
+cost analysis, per-collective byte counts with loop trip-count correction)
+are written as JSON for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+# The VERY first lines, before ANY other import (jax locks the device count
+# on first init):
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_smoke_config, list_archs
+from repro.configs.base import applicable_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    analyze_compiled,
+    roofline_report,
+)
+from repro.models import model as M
+from repro.models import param_axes
+from repro.optim import OptConfig, init_opt_state, opt_state_axes
+from repro.sharding import policies as SH
+from repro.train import TrainConfig, make_train_step
+
+
+def abstract_opt_state(ocfg: OptConfig, abstract_params):
+    return jax.eval_shape(lambda p: init_opt_state(ocfg, p), abstract_params)
+
+
+def build_cell(arch: str, shape_name: str, mesh, smoke=False,
+               tcfg: TrainConfig | None = None, mcfg_override=None,
+               rules_override: dict | None = None):
+    """Returns (fn, args_spec_tuple, in_shardings, meta) for one cell."""
+    cfg = mcfg_override or (get_smoke_config(arch) if smoke else get_config(arch))
+    shape = SHAPES[shape_name]
+    # default production knobs: microbatch to ~8k tokens/device/microbatch;
+    # big models use factored bf16 optimizer state to fit a single pod
+    dp = 16 if "pod" not in mesh.shape else 16 * mesh.shape["pod"]
+    local_tokens = shape.global_batch * shape.seq_len // dp
+    micro = max(1, min(8, local_tokens // 8192)) if shape.kind == "train" else 1
+    while shape.global_batch % (micro * dp) and micro > 1:
+        micro //= 2
+    tcfg = tcfg or TrainConfig(
+        microbatches=micro,
+        opt=OptConfig(
+            name="adafactor" if cfg.param_count() > 100e9 else "adamw",
+            state_dtype="bfloat16" if cfg.param_count() > 100e9 else "float32",
+        ),
+    )
+    rules = SH.rules_for(cfg, shape.kind, shape.global_batch, mesh)
+    rules.update(rules_override or {})
+    abs_params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = SH.params_sharding(cfg, mesh, rules, abs_params)
+    specs = M.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        abs_opt = abstract_opt_state(tcfg.opt, abs_params)
+        o_axes = opt_state_axes(tcfg.opt, param_axes(cfg), abs_params)
+        o_shard = SH.tree_sharding(o_axes, abs_opt, mesh, rules)
+        b_shard = SH.batch_sharding(mesh, rules, specs["batch"])
+        fn = make_train_step(cfg, tcfg, param_shardings=p_shard)
+        args = (abs_params, abs_opt, specs["batch"])
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+    elif shape.kind == "prefill":
+        b_shard = SH.batch_sharding(
+            mesh, rules, {k: v for k, v in specs.items()}
+        )
+
+        def fn(params, tokens, extras=None):
+            return M.prefill(params, cfg, tokens, extras)
+
+        args = (abs_params, specs["tokens"]) + (
+            (specs["extras"],) if "extras" in specs else ()
+        )
+        in_sh = (p_shard, b_shard["tokens"]) + (
+            (b_shard["extras"],) if "extras" in specs else ()
+        )
+        out_sh = None
+    else:  # decode
+        c_shard = SH.cache_sharding(
+            cfg, mesh, rules, specs["cache"],
+            stacked=cfg.pattern_repeats > 0,
+        )
+        # 'pos'/top-level leaves: replicate batch-sharded vector
+        def fn(params, cache, token):
+            return M.decode_step(params, cfg, cache, token)
+
+        tok_shard = SH.batch_sharding(mesh, rules, {"t": specs["token"]})["t"]
+        args = (abs_params, specs["cache"], specs["token"])
+        in_sh = (p_shard, c_shard, tok_shard)
+        out_sh = None
+
+    meta = dict(
+        arch=arch,
+        shape=shape_name,
+        kind=shape.kind,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        pattern_repeats=cfg.pattern_repeats,
+        smoke=smoke,
+    )
+    return fn, args, in_sh, out_sh, meta, cfg, tcfg
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, smoke=False, outdir=None,
+             tcfg=None, mcfg_override=None, tag="", rules_override=None):
+    from repro.sharding import ctx as shctx
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh, meta, cfg, tcfg = build_cell(
+        arch, shape_name, mesh, smoke=smoke, tcfg=tcfg,
+        mcfg_override=mcfg_override, rules_override=rules_override,
+    )
+    shape = SHAPES[shape_name]
+    rules = SH.rules_for(cfg, shape.kind, shape.global_batch, mesh)
+    rules.update(rules_override or {})
+    # donate the big state buffers, as the real train/serve loops do
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    with mesh, shctx.use(mesh, rules):
+        jitted = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh,
+            donate_argnums=donate,
+        )
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    ana = analyze_compiled(compiled, meta, cfg, tcfg, mesh)
+    ana["lower_compile_seconds"] = round(time.time() - t0, 1)
+    ana["mesh"] = mesh_name
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(ana, f, indent=1, default=str)
+    return ana
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(list_archs())
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(("pod1", make_production_mesh(multi_pod=False)))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(("pod2", make_production_mesh(multi_pod=True)))
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        if args.shape:
+            shapes = [args.shape] if args.shape in shapes else []
+            if not shapes:
+                print(f"SKIP {arch} {args.shape}: inapplicable "
+                      f"(full-attention arch, long_500k needs sub-quadratic)")
+        for shape_name in shapes:
+            for mesh_name, mesh in meshes:
+                cell = f"{arch} x {shape_name} x {mesh_name}"
+                try:
+                    ana = run_cell(
+                        arch, shape_name, mesh, mesh_name,
+                        smoke=args.smoke, outdir=args.out,
+                    )
+                    print(
+                        f"OK   {cell}: {ana['hbm_bytes_per_device']/2**30:.2f} "
+                        f"GiB/dev, {ana['total_flops']:.3e} flops, "
+                        f"coll {ana['collective_bytes']/2**30:.2f} GiB, "
+                        f"{ana['lower_compile_seconds']}s"
+                    )
+                    results.append((cell, "OK"))
+                except Exception as e:
+                    print(f"FAIL {cell}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    results.append((cell, f"FAIL {e}"))
+    n_ok = sum(1 for _, s in results if s == "OK")
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

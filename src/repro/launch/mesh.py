@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The dry-run entry
+point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before
+any jax import; smoke tests and benchmarks see the real (1-device) host.
+
+Production target: TPU v5e pods, 16x16 = 256 chips per pod; the multi-pod
+mesh adds a leading "pod" axis (DCN data parallelism across pods, ICI
+data x model within a pod) — the standard MaxText-style 2-tier layout that
+scales to 1000+ nodes by growing the pod axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices_or_count=None, *, data: int, model: int,
+                  pod: int = 1):
+    """Explicit mesh over a device subset (elastic-rescale path)."""
+    devs = devices_or_count
+    if devs is None:
+        devs = jax.devices()
+    if isinstance(devs, int):
+        devs = jax.devices()[:devs]
+    n = pod * data * model
+    assert len(devs) >= n, (len(devs), n)
+    arr = np.asarray(devs[:n]).reshape(
+        (pod, data, model) if pod > 1 else (data, model)
+    )
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    return jax.sharding.Mesh(arr, axes)
+
+
+def host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices (tests)."""
+    return make_mesh_for(data * model, data=data, model=model)

@@ -1,0 +1,133 @@
+"""End-to-end training driver.
+
+Usage (CPU smoke; production flags shown in README):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Wires together: config -> mesh -> sharded params/opt -> deterministic data
+pipeline -> jitted train step (remat + microbatching + optional compressed
+pod-axis gradient reduction) -> async checkpointing -> fault-tolerant
+supervisor loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.mesh import host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.models import param_axes
+from repro.optim import OptConfig, init_opt_state, opt_state_axes
+from repro.runtime import FailureInjector, TrainSupervisor
+from repro.sharding import ctx as shctx
+from repro.sharding import policies as SH
+from repro.train import TrainConfig, make_train_step
+
+
+def build_trainer(arch, mesh, *, smoke=True, batch=8, seq=64,
+                  microbatches=1, lr=1e-3, mcfg=None):
+    cfg = mcfg or (get_smoke_config(arch) if smoke else get_config(arch))
+    tcfg = TrainConfig(
+        microbatches=microbatches,
+        loss_chunk=0,
+        opt=OptConfig(name="adamw", lr=lr),
+    )
+    rules = SH.rules_for(cfg, "train", batch, mesh)
+    abs_params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_shard = SH.params_sharding(cfg, mesh, rules, abs_params)
+    abs_opt = jax.eval_shape(
+        lambda p: init_opt_state(tcfg.opt, p), abs_params
+    )
+    o_axes = opt_state_axes(tcfg.opt, param_axes(cfg), abs_params)
+    o_shard = SH.tree_sharding(o_axes, abs_opt, mesh, rules)
+
+    def _init():
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.tree.map(jax.device_put, params, p_shard)
+        opt = init_opt_state(tcfg.opt, params)
+        opt = jax.tree.map(jax.device_put, opt, o_shard)
+        return {"params": params, "opt": opt}
+
+    step_impl = make_train_step(cfg, tcfg, param_shardings=p_shard)
+
+    def wrapped(state, batch_):
+        params, opt, metrics = step_impl(
+            state["params"], state["opt"], batch_
+        )
+        return {"params": params, "opt": opt}, metrics
+
+    with mesh, shctx.use(mesh, rules):
+        jstep = jax.jit(wrapped, donate_argnums=(0,))
+
+    def run_step(state, batch_):
+        with mesh, shctx.use(mesh, rules):
+            return jstep(state, batch_)
+
+    shardings = {"params": p_shard, "opt": o_shard}
+    return cfg, _init, run_step, shardings, rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=10)
+    ap.add_argument("--data", type=int, default=1, help="data-axis size")
+    ap.add_argument("--model", type=int, default=1, help="model-axis size")
+    args = ap.parse_args()
+
+    mesh = host_mesh(data=args.data, model=args.model)
+    cfg, init, run_step, shardings, rules = build_trainer(
+        args.arch, mesh, smoke=args.smoke, batch=args.batch, seq=args.seq,
+        microbatches=args.microbatches, lr=args.lr,
+    )
+    pipe = TokenPipeline(
+        DataConfig(
+            vocab_size=cfg.vocab_size,
+            global_batch=args.batch,
+            seq_len=args.seq,
+        )
+    )
+    ckpt = Checkpointer(args.ckpt_dir, interval=args.ckpt_interval)
+    state = init()
+    found_step, restored = ckpt.restore_latest(state)
+    if found_step is not None:
+        state = jax.tree.map(jax.device_put, restored, shardings)
+        print(f"resumed from step {found_step}")
+        start = found_step + 1
+    else:
+        start = 0
+
+    for step in range(start, args.steps):
+        t0 = time.time()
+        state, metrics = run_step(state, pipe.batch(step))
+        loss = float(metrics["loss"])
+        ckpt.maybe_save(step, state)
+        print(
+            f"step {step:5d} loss {loss:8.4f} "
+            f"gnorm {float(metrics['grad_norm']):8.3f} "
+            f"{time.time()-t0:6.2f}s"
+        )
+    ckpt.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Model definitions for the 10 assigned architectures.
+
+Everything is functional JAX: ``init_*`` builds param pytrees (with a
+parallel pytree of logical-axis names for sharding), ``apply``-style
+functions run them. Layer stacks use pattern-scan (see configs.base).
+"""
+
+from repro.models.model import (
+    build_model,
+    init_params,
+    input_specs,
+    param_axes,
+)
+
+__all__ = ["build_model", "init_params", "input_specs", "param_axes"]

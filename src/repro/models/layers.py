@@ -1,0 +1,344 @@
+"""Shared building blocks: norms, RoPE, MLPs, attention (all mask kinds).
+
+Attention is written blocked (online softmax over KV chunks inside a scan
+over query chunks) so 32k-token prefill/training cells have flash-like
+activation memory in the pure-XLA path; the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU hot-spot twin of the same
+algorithm. Sliding-window attention only visits KV blocks inside the
+window, so its FLOPs scale with S*window rather than S^2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def apply_norm(kind, x, p):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(kind, d, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_axes(kind):
+    if kind == "rmsnorm":
+        return {"scale": ("embed",)}
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, rotary_frac, theta):
+    rot = int(head_dim * rotary_frac) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta, rotary_frac=1.0):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, rotary_frac, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, kind, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    p = {
+        "wi": jax.random.normal(k1, (d, ff), dtype) * s_in,
+        "wo": jax.random.normal(k2, (ff, d), dtype) * s_out,
+    }
+    if kind in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(k3, (d, ff), dtype) * s_in
+    return p
+
+
+def mlp_axes(kind):
+    a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if kind in ("swiglu", "geglu"):
+        a["wg"] = ("embed", "mlp")
+    return a
+
+
+def apply_mlp(kind, x, p):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"])) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wg"])) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    kind: str = "full"  # full | swa | chunked
+    window: int = 0  # swa window / chunk size
+    use_rope: bool = True
+    rope_theta: float = 1e4
+    partial_rotary: float = 1.0
+    qk_norm: bool = False
+    q_block: int = 512
+    k_block: int = 512
+
+
+def init_attn(key, d, spec: AttnSpec, dtype):
+    kq, kk, kv, ko, _ = jax.random.split(key, 5)
+    hd, nq, nkv = spec.head_dim, spec.num_heads, spec.num_kv_heads
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(kq, (d, nq, hd), dtype) * s,
+        "wk": jax.random.normal(kk, (d, nkv, hd), dtype) * s,
+        "wv": jax.random.normal(kv, (d, nkv, hd), dtype) * s,
+        "wo": jax.random.normal(ko, (nq, hd, d), dtype)
+        * (1.0 / math.sqrt(nq * hd)),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_axes(spec: AttnSpec):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if spec.qk_norm:
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return a
+
+
+def _qkv(x, p, spec: AttnSpec, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta, spec.partial_rotary)
+        k = apply_rope(k, positions, spec.rope_theta, spec.partial_rotary)
+    return q, k, v
+
+
+def _block_mask(kind, q_pos, k_pos, window):
+    """bool[qb, kb]: True = attend. q_pos/k_pos absolute positions."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if kind == "swa":
+        return causal & (q_pos[:, None] - k_pos[None, :] < window)
+    if kind == "chunked":
+        return causal & (q_pos[:, None] // window == k_pos[None, :] // window)
+    return causal
+
+
+def _attend_blocked(q, k, v, spec: AttnSpec, q_offset=0):
+    """Online-softmax attention; q: [B,S,Nq,hd], k/v: [B,T,Nkv,hd].
+
+    For swa/chunked kinds, each query block only visits KV inside its
+    reachable range (static slices), so FLOPs ~ S * window.
+    """
+    B, S, NQ, HD = q.shape
+    T = k.shape[1]
+    NKV = k.shape[2]
+    G = NQ // NKV
+    scale = 1.0 / math.sqrt(HD)
+
+    qb = min(spec.q_block, S)
+    while S % qb:
+        qb //= 2
+    n_qb = S // qb
+
+    # KV range per query block (static bound)
+    if spec.kind in ("swa", "chunked") and spec.window > 0:
+        kv_span = min(T, ((spec.window + qb - 1) // qb + 1) * qb)
+    else:
+        kv_span = T
+
+    q = q.reshape(B, n_qb, qb, NKV, G, HD)
+
+    @jax.checkpoint  # flash-style: recompute scores in the backward pass
+    def one_qblock(qi, qblk):
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+        # static-size KV slice ending at this block's last key
+        if kv_span < T:
+            hi = jnp.minimum(q_offset + (qi + 1) * qb, T)
+            start = jnp.maximum(hi - kv_span, 0)
+        else:
+            start = 0
+        ks = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+        k_pos = start + jnp.arange(kv_span)
+        s = (
+            jnp.einsum("bqkgh,btkh->bkgqt", qblk, ks).astype(jnp.float32)
+            * scale
+        )
+        m = _block_mask(spec.kind, q_pos, k_pos, spec.window)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqt,btkh->bqkgh", p.astype(q.dtype), vs)
+
+    out = jax.lax.map(
+        lambda args: one_qblock(*args),
+        (jnp.arange(n_qb), jnp.moveaxis(q, 1, 0)),
+    )
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, NQ, HD)
+    return out
+
+
+def self_attention(x, p, spec: AttnSpec, positions=None, q_offset=0):
+    """Training/prefill self-attention. x: [B,S,D] -> [B,S,D]."""
+    from repro.sharding.ctx import constrain
+
+    B, S, _ = x.shape
+    if positions is None:
+        positions = q_offset + jnp.arange(S)[None, :]
+    q, k, v = _qkv(x, p, spec, positions)
+    # Megatron-SP boundary: if the residual stream is sequence-sharded,
+    # gather q/k/v to full sequence ONCE here (heads go to the TP axis) —
+    # otherwise the kv dynamic-slices inside the q-block loop re-gather
+    # per iteration.
+    q = constrain(q, ("batch", "seq_full", "heads_act", "head_dim"))
+    k = constrain(k, ("batch", "seq_full", "kv_heads_act", "head_dim"))
+    v = constrain(v, ("batch", "seq_full", "kv_heads_act", "head_dim"))
+    out = _attend_blocked(q, k, v, spec, q_offset=q_offset)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"]), (k, v)
+
+
+def decode_attention(x, p, spec: AttnSpec, cache_k, cache_v, pos,
+                     ring: bool = False, cache_kpos=None):
+    """Single-token decode. x: [B,1,D]; cache: [B,S,Nkv,hd]; pos: [B] or ().
+
+    Returns (out [B,1,D], new_k, new_v) — plus new_kpos when ``ring=True``.
+    With ``ring=True`` the cache length is the attention window and writes
+    wrap; ``cache_kpos`` [B,S] tracks each slot's absolute position so
+    SWA/chunked masks stay exact across wraps (a P2-style static plan: slot
+    assignment is decided ahead of the step, no dynamic allocation inside).
+    """
+    B, one, D = x.shape
+    S = cache_k.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (B, 1))
+    q, k, v = _qkv(x, p, spec, positions)
+    slot = positions[:, 0] % S if ring else jnp.minimum(positions[:, 0], S - 1)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+
+    NQ, HD = spec.num_heads, spec.head_dim
+    NKV = spec.num_kv_heads
+    G = NQ // NKV
+    qg = q.reshape(B, 1, NKV, G, HD)
+    s = (
+        jnp.einsum("bqkgh,btkh->bkgqt", qg, cache_k).astype(jnp.float32)
+        / math.sqrt(HD)
+    )
+    if ring:
+        kpos = cache_kpos.at[bidx, slot].set(positions[:, 0])
+        valid = kpos >= 0
+        if spec.kind == "swa" and spec.window:
+            valid &= positions[:, :1] - kpos < spec.window
+        elif spec.kind == "chunked" and spec.window:
+            valid &= (kpos // spec.window) == (positions[:, :1] // spec.window)
+    else:
+        k_abs = jnp.arange(S)[None, :]
+        valid = k_abs <= positions[:, :1]
+        if spec.kind == "swa" and spec.window:
+            valid &= k_abs > positions[:, :1] - spec.window
+        elif spec.kind == "chunked" and spec.window:
+            valid &= (k_abs // spec.window) == (positions[:, :1] // spec.window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", pr, cache_v).reshape(B, 1, NQ, HD)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    if ring:
+        return out, cache_k, cache_v, kpos
+    return out, cache_k, cache_v
+
+
+def cross_attention(x, p, spec: AttnSpec, kv_tokens):
+    """Cross-attention to a static memory. kv_tokens: [B,T,D]."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("btd,dnh->btnh", kv_tokens, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", kv_tokens, p["wv"])
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    B, S, NQ, HD = q.shape
+    NKV = k.shape[2]
+    qg = q.reshape(B, S, NKV, NQ // NKV, HD)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k).astype(jnp.float32) / math.sqrt(
+        HD
+    )
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", pr, v).reshape(B, S, NQ, HD)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"]), (k, v)
+
+
+def cross_attention_cached(x, p, spec: AttnSpec, k, v):
+    """Decode-time cross-attention against precomputed K/V."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+    B, S, NQ, HD = q.shape
+    NKV = k.shape[2]
+    qg = q.reshape(B, S, NKV, NQ // NKV, HD)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k).astype(jnp.float32) / math.sqrt(
+        HD
+    )
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", pr, v).reshape(B, S, NQ, HD)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"])

@@ -1,0 +1,313 @@
+"""Model facade: build/init/apply + serving cache plumbing + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for every model input
+of a (architecture x shape) cell — weak-type-correct, shardable, no device
+allocation — which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, SHAPES, ShapeSpec
+from repro.models import layers as L
+from repro.models import transformer as TF
+
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return TF.init_params(cfg, key)
+
+
+def param_axes(cfg: ModelConfig):
+    return TF.param_axes(cfg)
+
+
+def build_model(cfg: ModelConfig):
+    """Returns (loss_fn, prefill_fn, decode_fn) closures over cfg."""
+    return (
+        lambda p, batch, **kw: TF.loss_fn(p, cfg, batch, **kw),
+        lambda p, tokens, extras=None: prefill(p, cfg, tokens, extras),
+        lambda p, cache, token, extras=None: decode_step(
+            p, cfg, cache, token, extras
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch, cache_len):
+    """Shapes (as ShapeDtypeStructs) of one layer's decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    c = {}
+    ring = cfg.swa_ring_cache and spec.attn_kind in ("swa", "chunked")
+    clen = min(cache_len, cfg.window) if ring else cache_len
+    if spec.mixer in ("attn", "hybrid") and spec.attn_kind != "none":
+        kv = (batch, clen, cfg.num_kv_heads, cfg.head_dim)
+        c["k"] = jax.ShapeDtypeStruct(kv, dt)
+        c["v"] = jax.ShapeDtypeStruct(kv, dt)
+        if ring:
+            c["kpos"] = jax.ShapeDtypeStruct((batch, clen), jnp.int32)
+    if spec.mixer == "rwkv":
+        c["tm_x"] = jax.ShapeDtypeStruct((batch, cfg.d_model), dt)
+        c["cm_x"] = jax.ShapeDtypeStruct((batch, cfg.d_model), dt)
+        c["state"] = jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.head_dim, cfg.head_dim), jnp.float32
+        )
+    if spec.mixer == "hybrid":
+        c["state"] = jax.ShapeDtypeStruct(
+            (
+                batch,
+                cfg.ssm_heads or cfg.num_heads,
+                cfg.head_dim,
+                cfg.ssm_state,
+            ),
+            jnp.float32,
+        )
+    if spec.has_cross:
+        t = cfg.vision_tokens or cfg.audio_frames or 1
+        kv = (batch, t, cfg.num_kv_heads, cfg.head_dim)
+        c["ck"] = jax.ShapeDtypeStruct(kv, dt)
+        c["cv"] = jax.ShapeDtypeStruct(kv, dt)
+    return c
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct pytree of the full decode cache."""
+    spec_tree: dict[str, Any] = {
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32)
+    }
+    if cfg.pattern_repeats > 0:
+        spec_tree["groups"] = {
+            f"l{i}": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (cfg.pattern_repeats,) + s.shape, s.dtype
+                ),
+                _layer_cache_spec(cfg, sp, batch, cache_len),
+            )
+            for i, sp in enumerate(cfg.pattern)
+        }
+    spec_tree["tail"] = {
+        f"l{i}": _layer_cache_spec(cfg, sp, batch, cache_len)
+        for i, sp in enumerate(cfg.tail)
+    }
+    return spec_tree
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    def mk(s):
+        if s.dtype == jnp.int32:  # kpos / pos start unwritten
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    c = jax.tree.map(mk, cache_spec(cfg, batch, cache_len))
+    c["pos"] = jnp.zeros((batch,), jnp.int32)
+    return c
+
+
+def _ring(cfg, spec):
+    return cfg.swa_ring_cache and spec.attn_kind in ("swa", "chunked")
+
+
+def prefill(params, cfg: ModelConfig, tokens, extras=None, cache_len=None):
+    """Process the prompt, build the decode cache. Returns (logits, cache)."""
+    extras = extras or {}
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = TF._embed(params, cfg, tokens, extras)
+    x = TF.constrain(x, ("batch", "seq", "embed_act"))
+    cross = TF._cross_tokens(params, cfg, extras)
+    cache = init_cache(cfg, B, cache_len)
+
+    def fill_entry(spec, entry, newc, S_):
+        out = dict(entry)
+        ring = _ring(cfg, spec)
+        if "k" in entry and newc and "k" in newc:
+            k, v = newc["k"], newc["v"]
+            clen = entry["k"].shape[1]
+            if ring:
+                take = min(S_, clen)
+                out["k"] = entry["k"].at[:, :take].set(k[:, S_ - take :])
+                out["v"] = entry["v"].at[:, :take].set(v[:, S_ - take :])
+                out["kpos"] = entry["kpos"].at[:, :take].set(
+                    jnp.arange(S_ - take, S_, dtype=jnp.int32)[None]
+                )
+            else:
+                out["k"] = entry["k"].at[:, :S_].set(k)
+                out["v"] = entry["v"].at[:, :S_].set(v)
+        for f in ("tm_x", "cm_x", "state", "ck", "cv"):
+            if newc and f in newc:
+                out[f] = newc[f]
+        return out
+
+    if cfg.pattern_repeats > 0:
+
+        def body(x, xs):
+            gp, centry = xs
+            outc = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, _, newc = TF.apply_layer(
+                    x, gp[f"l{i}"], cfg, spec, cross_tokens=cross,
+                    want_cache=True,
+                )
+                x = TF.constrain(x, ("batch", "seq", "embed_act"))
+                outc[f"l{i}"] = fill_entry(spec, centry[f"l{i}"], newc, S)
+            return x, outc
+
+        x, groups_cache = jax.lax.scan(
+            body, x, (params["groups"], cache["groups"])
+        )
+        cache["groups"] = groups_cache
+    for i, spec in enumerate(cfg.tail):
+        x, _, newc = TF.apply_layer(
+            x, params["tail"][f"l{i}"], cfg, spec, cross_tokens=cross,
+            want_cache=True,
+        )
+        cache["tail"][f"l{i}"] = fill_entry(
+            spec, cache["tail"][f"l{i}"], newc, S
+        )
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = TF._lm_head(params, cfg, x[:, -1:, :])
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def _decode_layer(x, p, cfg, spec, entry, pos, cross=None):
+    sp = TF.attn_spec(cfg, spec)
+    newc = dict(entry)
+    if spec.mixer == "rwkv":
+        h = L.apply_norm(cfg.norm, x, p["ln_tm"])
+        o, tmx, st = TF.S.rwkv_timemix(
+            h, entry["tm_x"], entry["state"], p["tm"]
+        )
+        x = x + o
+        h = L.apply_norm(cfg.norm, x, p["ln_cm"])
+        o, cmx = TF.S.rwkv_channelmix(h, entry["cm_x"], p["cm"])
+        x = x + o
+        newc.update(tm_x=tmx, cm_x=cmx, state=st)
+        return x, newc
+    if spec.attn_kind != "none":
+        h = L.apply_norm(cfg.norm, x, p["ln_attn"])
+        ring = _ring(cfg, spec)
+        if ring:
+            o, ck, cv, kp = L.decode_attention(
+                h, p["attn"], sp, entry["k"], entry["v"], pos, ring=True,
+                cache_kpos=entry["kpos"],
+            )
+            newc.update(k=ck, v=cv, kpos=kp)
+        else:
+            o, ck, cv = L.decode_attention(
+                h, p["attn"], sp, entry["k"], entry["v"], pos
+            )
+            newc.update(k=ck, v=cv)
+        if spec.mixer == "hybrid":
+            o2, st = TF.S.mamba_head(h, entry["state"], p["ssm"])
+            newc["state"] = st
+            o = 0.5 * (o + o2)
+        x = x + o
+    if spec.has_cross:
+        h = L.apply_norm(cfg.norm, x, p["ln_cross"])
+        o = L.cross_attention_cached(h, p["cross"], sp, entry["ck"], entry["cv"])
+        if "cross_gate" in p:
+            o = jnp.tanh(p["cross_gate"]) * o
+        x = x + o
+    o, _ = TF._mlp_or_moe(x, p, cfg, spec)
+    return x + o, newc
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, extras=None):
+    """One decode step for the whole batch. token: [B,1] int32.
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    extras = extras or {}
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = params["tok_embed"][token]
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos_embed"][jnp.minimum(pos, cfg.max_seq - 1)][:, None]
+    x = TF.constrain(x, ("batch", "seq", "embed_act"))
+
+    if cfg.pattern_repeats > 0:
+
+        def body(x, xs):
+            gp, entry = xs
+            newe = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, newe[f"l{i}"] = _decode_layer(
+                    x, gp[f"l{i}"], cfg, spec, entry[f"l{i}"], pos
+                )
+            return x, newe
+
+        x, new_groups = jax.lax.scan(
+            body, x, (params["groups"], cache["groups"])
+        )
+        cache = dict(cache, groups=new_groups)
+    new_tail = {}
+    for i, spec in enumerate(cfg.tail):
+        x, new_tail[f"l{i}"] = _decode_layer(
+            x, params["tail"][f"l{i}"], cfg, spec, cache["tail"][f"l{i}"], pos
+        )
+    cache = dict(cache, tail=new_tail, pos=pos + 1)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    return TF._lm_head(params, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) cell — ShapeDtypeStruct stand-ins
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec | str) -> dict[str, Any]:
+    """Abstract inputs for a cell. Keys depend on shape.kind:
+
+      train:   batch={tokens, targets[, extras]}
+      prefill: tokens[, extras]
+      decode:  cache (full pytree spec), token
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S_ = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+
+    def extras_spec():
+        ex = {}
+        if cfg.vision_tokens:
+            ex["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_model), dt
+            )
+        if cfg.early_fusion_tokens:
+            ex["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.early_fusion_tokens, cfg.d_model), dt
+            )
+        if cfg.audio_frames:
+            ex["audio_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.audio_frames, cfg.d_model), dt
+            )
+        return ex
+
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S_), i32),
+            "targets": jax.ShapeDtypeStruct((B, S_), i32),
+        }
+        ex = extras_spec()
+        if ex:
+            batch["extras"] = ex
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S_), i32)}
+        ex = extras_spec()
+        if ex:
+            out["extras"] = ex
+        return out
+    # decode: one new token against a cache of S_
+    out = {
+        "cache": cache_spec(cfg, B, S_),
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+    }
+    return out

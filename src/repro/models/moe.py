@@ -1,0 +1,256 @@
+"""Mixture-of-Experts with *planned* dispatch — the paper's P2 principle as a
+first-class MoE feature.
+
+The dispatch **plan** is the MoE analogue of the deadlock-free lock schedule:
+the full capacity-bounded token->expert assignment is computed ahead of any
+expert compute, in canonical (expert-id, arrival) order — the same
+(owner, key) canonical order ORTHRUS uses for lock acquisition, and it reuses
+the same segmented-cumsum machinery as the lock-grant primitive. The
+resulting gather/scatter schedule is static: no retries, no dynamic shapes,
+no rebalancing (the TPU analogue of deadlock handling is recompilation and
+dynamic dispatch overhead; the plan eliminates it). Each expert is owned by
+exactly one EP shard (single-owner meta-data, P1): token blocks move by
+explicit collectives, never by shared mutable state.
+
+Modes:
+  'planned' — sort-based capacity dispatch (default; flops ~ k/E of dense).
+  'dense'   — every expert computes every token, mask-combined. The
+              "no-planning brute force" baseline (exact, no token drops);
+              flops ~ E/k of planned. Used for baselines and tiny-E smokes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+
+def init_moe(key, d, ff, num_experts, dtype, mlp_kind="swiglu",
+             shared_expert=False):
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    p = {
+        "router": jax.random.normal(ks[0], (d, num_experts), jnp.float32)
+        * s_in,
+        "wi": jax.random.normal(ks[1], (num_experts, d, ff), dtype) * s_in,
+        "wo": jax.random.normal(ks[2], (num_experts, ff, d), dtype) * s_out,
+    }
+    if mlp_kind in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(ks[3], (num_experts, d, ff), dtype) * s_in
+    if shared_expert:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], mlp_kind, d, ff, dtype)
+    return p
+
+
+def moe_axes(mlp_kind="swiglu", shared_expert=False):
+    from repro.models.layers import mlp_axes
+
+    a = {
+        "router": ("embed", "experts"),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if mlp_kind in ("swiglu", "geglu"):
+        a["wg"] = ("experts", "embed", "expert_mlp")
+    if shared_expert:
+        a["shared"] = mlp_axes(mlp_kind)
+    return a
+
+
+def _expert_ffn(blocks, p, mlp_kind, weight_gather=False):
+    """blocks: [E, C, d] -> [E, C, d] through each expert's FFN.
+
+    ``weight_gather`` constrains the expert weights to an unsharded embed
+    dim at the use site (ZeRO-3 style): when the block-diagonal einsum
+    would otherwise contract an FSDP-sharded dim, GSPMD all-reduces the
+    *outputs* (terabytes) instead of gathering the weights (gigabytes).
+    Helps EP-sharded banks (llama4: ~5x, see §Perf); hurts TP-sharded
+    giant experts (mixtral) — hence opt-in per arch.
+    """
+    g = (
+        (lambda w, a: constrain(w, a)) if weight_gather
+        else (lambda w, a: w)
+    )
+    wi = g(p["wi"], ("experts", "embed_full", "expert_mlp"))
+    wo = g(p["wo"], ("experts", "expert_mlp", "embed_full"))
+    h = jnp.einsum("ecd,edf->ecf", blocks, wi)
+    if mlp_kind == "swiglu":
+        wg = g(p["wg"], ("experts", "embed_full", "expert_mlp"))
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", blocks, wg)) * h
+    elif mlp_kind == "geglu":
+        wg = g(p["wg"], ("experts", "embed_full", "expert_mlp"))
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", blocks, wg)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def plan_dispatch(router_probs, top_k, capacity):
+    """Compute the canonical-order dispatch plan (P2).
+
+    Args:
+      router_probs: f32[N, E].
+      top_k: experts per token.
+      capacity: static per-expert token budget C.
+
+    Returns dict with:
+      slot_token: int32[E*C]  token index feeding each expert slot (-1 empty)
+      slot_weight: f32[E*C]   combine weight for that slot
+      load: f32[E]            fraction of tokens routed per expert (aux loss)
+    """
+    N, E = router_probs.shape
+    w, eidx = jax.lax.top_k(router_probs, top_k)  # [N, k]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    ee = eidx.reshape(-1)  # [N*k]
+    tok = jnp.arange(N * top_k, dtype=jnp.int32) // top_k
+    ww = w.reshape(-1)
+
+    # canonical (expert, arrival) order — the deadlock-free schedule
+    order = jnp.argsort(ee * 1, stable=True)
+    ee_s, tok_s, ww_s = ee[order], tok[order], ww[order]
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), ee_s[1:] != ee_s[:-1]]
+    )
+    ones = jnp.ones_like(ee_s)
+    total = jnp.cumsum(ones)
+    base = jnp.maximum.accumulate(
+        jnp.where(seg_start, total - ones, jnp.iinfo(jnp.int32).min)
+    )
+    pos = total - base - 1  # 0-based position within expert
+    keep = pos < capacity
+    slot = jnp.where(keep, ee_s * capacity + pos, E * capacity)
+
+    slot_token = jnp.full((E * capacity,), -1, jnp.int32).at[slot].set(
+        tok_s, mode="drop"
+    )
+    slot_weight = jnp.zeros((E * capacity,), jnp.float32).at[slot].set(
+        ww_s, mode="drop"
+    )
+    load = jax.ops.segment_sum(
+        jnp.ones((N * top_k,), jnp.float32), ee, num_segments=E
+    ) / (N * top_k)
+    return {"slot_token": slot_token, "slot_weight": slot_weight, "load": load}
+
+
+def _planned_one(xf, probs, p, *, top_k, cap, mlp_kind,
+                 weight_gather=False):
+    """Planned dispatch for one token shard. xf: [n, D]; probs: [n, E]."""
+    n, D = xf.shape
+    E = probs.shape[1]
+    plan = plan_dispatch(probs, top_k, cap)
+    st2 = plan["slot_token"].reshape(E, cap)
+    w2 = plan["slot_weight"].reshape(E, cap)
+    valid = st2 >= 0
+    gathered = xf[jnp.maximum(st2, 0)]
+    gathered = jnp.where(valid[..., None], gathered, 0)
+    y = _expert_ffn(gathered, p, mlp_kind, weight_gather)
+    y = y * w2[..., None].astype(y.dtype)
+    return (
+        jnp.zeros((n, D), y.dtype)
+        .at[jnp.where(valid, st2, n)]
+        .add(y, mode="drop")
+    )
+
+
+def apply_moe(x, p, *, top_k, capacity_factor, mlp_kind="swiglu",
+              mode="planned", dispatch_shards: int = 0,
+              weight_gather: bool = False):
+    """x: [B,S,D] -> ([B,S,D], aux_loss).
+
+    ``dispatch_shards > 1`` plans and dispatches per token shard (leading
+    dim sharded over DP): each shard's plan, gather, expert matmul (TP)
+    and combine stay shard-local — single-owner state end-to-end, no
+    cross-shard scatter all-reduces. The hierarchical plan gives each
+    shard cap/shards slots per expert (local capacity), the standard
+    hierarchical-MoE trade.
+    """
+    B, S, D = x.shape
+    N = B * S
+    E = p["router"].shape[1]
+    xf = x.reshape(N, D)
+    logits = jnp.einsum(
+        "nd,de->ne", xf.astype(jnp.float32), p["router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if mode == "dense":
+        w, eidx = jax.lax.top_k(probs, top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        gate = jnp.zeros((N, E), jnp.float32)
+        gate = jax.vmap(lambda g, i, v: g.at[i].set(v))(gate, eidx, w)
+        h = jnp.einsum("nd,edf->enf", xf, p["wi"])
+        if mlp_kind in ("swiglu", "geglu"):
+            act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+            h = act(jnp.einsum("nd,edf->enf", xf, p["wg"])) * h
+        else:
+            h = jax.nn.gelu(h)
+        y = jnp.einsum("enf,efd->end", h, p["wo"])
+        out = jnp.einsum("end,ne->nd", y, gate.astype(y.dtype))
+    elif dispatch_shards > 1 and N % dispatch_shards == 0:
+        # per-shard planned dispatch: every stage is local to its DP shard
+        G = dispatch_shards
+        n_loc = N // G
+        cap = int(capacity_factor * n_loc * top_k / E)
+        cap = max(32, (cap + 127) // 128 * 128)
+        xg = constrain(
+            xf.reshape(G, n_loc, D), ("tokens_act", None, "embed_act")
+        )
+        pg = constrain(
+            probs.reshape(G, n_loc, E), ("tokens_act", None, None)
+        )
+        out = jax.vmap(
+            lambda xs, ps: _planned_one(
+                xs, ps, p, top_k=top_k, cap=cap, mlp_kind=mlp_kind,
+                weight_gather=weight_gather,
+            )
+        )(xg, pg)
+        out = constrain(out, ("tokens_act", None, "embed_act"))
+        out = out.reshape(N, D)
+    else:
+        cap = int(capacity_factor * N * top_k / E)
+        cap = max(128, (cap + 127) // 128 * 128)  # MXU-aligned, static
+        plan = plan_dispatch(probs, top_k, cap)
+        # 2-D (expert, slot) layout end-to-end so GSPMD keeps the token
+        # blocks sharded (experts over EP, capacity over DP) — experts are
+        # single-owner (P1): token blocks move by explicit collectives,
+        # never via shared replicated state
+        st2 = constrain(plan["slot_token"].reshape(E, cap),
+                        ("experts", "cap"))
+        w2 = constrain(plan["slot_weight"].reshape(E, cap),
+                       ("experts", "cap"))
+        valid = st2 >= 0
+        gathered = xf[jnp.maximum(st2, 0)]
+        gathered = jnp.where(valid[..., None], gathered, 0)
+        gathered = constrain(gathered, ("experts", "cap", "embed_act"))
+        y = _expert_ffn(gathered, p, mlp_kind, weight_gather)
+        y = constrain(y, ("experts", "cap", "embed_act"))
+        y = y * w2[..., None].astype(y.dtype)
+        out = (
+            jnp.zeros((N, D), y.dtype)
+            .at[jnp.where(valid, st2, N)]
+            .add(y, mode="drop")
+        )
+        out = constrain(out, ("tokens_act", "embed_act"))
+
+    if "shared" in p:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(mlp_kind, xf, p["shared"])
+
+    # load-balance aux (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jax.ops.segment_sum(
+        jnp.ones((N * top_k,), jnp.float32),
+        jax.lax.top_k(probs, top_k)[1].reshape(-1),
+        num_segments=E,
+    ) / (N * top_k)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux

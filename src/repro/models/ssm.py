@@ -1,0 +1,221 @@
+"""Attention-free mixers: RWKV6 time/channel mix and a Mamba-style SSM head
+(used by the Hymba hybrid block).
+
+Both are linear-time recurrences: training/prefill runs a `lax.scan` over
+time (the Pallas kernel in ``repro.kernels.rwkv6_scan`` is the blocked TPU
+twin of the RWKV6 inner loop); decode is a single recurrence step carrying a
+tiny state — which is why these archs run the ``long_500k`` cell that pure
+full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") time-mix with data-dependent decay
+# ---------------------------------------------------------------------------
+def init_rwkv_timemix(key, d, n_heads, head_dim, dtype, lora_dim=64):
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": jax.random.normal(ks[0], (d, n_heads, head_dim), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, n_heads, head_dim), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, n_heads, head_dim), dtype) * s,
+        "wg": jax.random.normal(ks[3], (d, n_heads, head_dim), dtype) * s,
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((n_heads, head_dim), -6.0, dtype),
+        "wa": jax.random.normal(ks[4], (d, lora_dim), dtype) * s,
+        "wb": jax.random.normal(ks[5], (lora_dim, n_heads, head_dim), dtype)
+        * (1.0 / math.sqrt(lora_dim)),
+        "u": jax.random.normal(ks[6], (n_heads, head_dim), dtype) * 0.1,
+        "wo": jax.random.normal(ks[7], (n_heads, head_dim, d), dtype)
+        * (1.0 / math.sqrt(n_heads * head_dim)),
+        "ln_x": jnp.ones((n_heads * head_dim,), dtype),
+    }
+
+
+def rwkv_timemix_axes():
+    return {
+        "mix_r": ("embed",),
+        "mix_k": ("embed",),
+        "mix_v": ("embed",),
+        "mix_g": ("embed",),
+        "mix_w": ("embed",),
+        "wr": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "heads", "head_dim"),
+        "wv": ("embed", "heads", "head_dim"),
+        "wg": ("embed", "heads", "head_dim"),
+        "w0": ("heads", "head_dim"),
+        "wa": ("embed", "lora"),
+        "wb": ("lora", "heads", "head_dim"),
+        "u": ("heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+        "ln_x": ("embed",),
+    }
+
+
+def _rwkv_inputs(x, x_prev, p):
+    """Token-shift mixing + projections. x: [B,S,D]; x_prev: [B,D]."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    def mx(m):
+        return x + (shifted - x) * m
+
+    r = jnp.einsum("bsd,dnh->bsnh", mx(p["mix_r"]), p["wr"])
+    k = jnp.einsum("bsd,dnh->bsnh", mx(p["mix_k"]), p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", mx(p["mix_v"]), p["wv"])
+    g = jnp.einsum("bsd,dnh->bsnh", mx(p["mix_g"]), p["wg"])
+    lo = jnp.tanh(jnp.einsum("bsd,dl->bsl", mx(p["mix_w"]), p["wa"]))
+    wdec = jnp.exp(
+        -jnp.exp(
+            (p["w0"][None, None] + jnp.einsum("bsl,lnh->bsnh", lo, p["wb"]))
+            .astype(jnp.float32)
+        )
+    )
+    return r, k, v, g, wdec
+
+
+def rwkv_timemix(x, x_prev, state, p):
+    """RWKV6 WKV recurrence.
+
+    x: [B,S,D]; x_prev: [B,D] (last token of previous chunk);
+    state: [B,H,hd,hd] (key x value outer-product state).
+    Returns (out [B,S,D], new_x_prev, new_state).
+    """
+    B, S, D = x.shape
+    r, k, v, g, wdec = _rwkv_inputs(x, x_prev, p)
+    u = p["u"].astype(jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hd,hd]
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt, st + u[None, :, :, None] * kv
+        )
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = (
+        jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(wdec, 1, 0),
+    )
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, -1)  # [B,S,H*hd]
+    out = rmsnorm(out, p["ln_x"]).astype(x.dtype)
+    out = out * jax.nn.silu(g.reshape(B, S, -1))
+    H, HD = p["u"].shape
+    out = jnp.einsum(
+        "bsnh,nhd->bsd", out.reshape(B, S, H, HD), p["wo"]
+    )
+    return out, x[:, -1, :], state
+
+
+def init_rwkv_channelmix(key, d, ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "wk": jax.random.normal(k1, (d, ff), dtype) * (1.0 / math.sqrt(d)),
+        "wv": jax.random.normal(k2, (ff, d), dtype) * (1.0 / math.sqrt(ff)),
+    }
+
+
+def rwkv_channelmix_axes():
+    return {"mix_k": ("embed",), "wk": ("embed", "mlp"), "wv": ("mlp", "embed")}
+
+
+def rwkv_channelmix(x, x_prev, p):
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (shifted - x) * p["mix_k"]
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    return jnp.einsum("bsf,fd->bsd", h, p["wv"]), x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba's parallel branch)
+# ---------------------------------------------------------------------------
+def init_mamba_head(key, d, n_heads, head_dim, state_dim, dtype):
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wx": jax.random.normal(ks[0], (d, n_heads, head_dim), dtype) * s,
+        "wz": jax.random.normal(ks[1], (d, n_heads, head_dim), dtype) * s,
+        "wB": jax.random.normal(ks[2], (d, state_dim), dtype) * s,
+        "wC": jax.random.normal(ks[3], (d, state_dim), dtype) * s,
+        "wdt": jax.random.normal(ks[4], (d, n_heads), dtype) * s,
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "A_log": jnp.zeros((n_heads,), dtype),
+        "D": jnp.ones((n_heads, head_dim), dtype),
+        "wo": jax.random.normal(ks[5], (n_heads, head_dim, d), dtype)
+        * (1.0 / math.sqrt(n_heads * head_dim)),
+        "ln": jnp.ones((n_heads * head_dim,), dtype),
+    }
+
+
+def mamba_head_axes():
+    return {
+        "wx": ("embed", "heads", "head_dim"),
+        "wz": ("embed", "heads", "head_dim"),
+        "wB": ("embed", "ssm_state"),
+        "wC": ("embed", "ssm_state"),
+        "wdt": ("embed", "heads"),
+        "dt_bias": ("heads",),
+        "A_log": ("heads",),
+        "D": ("heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+        "ln": ("embed",),
+    }
+
+
+def mamba_head(x, state, p):
+    """Selective SSM. x: [B,S,D]; state: [B,H,hd,N].
+
+    Returns (out [B,S,D], new_state).
+    """
+    B, S, D = x.shape
+    xh = jnp.einsum("bsd,dnh->bsnh", x, p["wx"])
+    z = jnp.einsum("bsd,dnh->bsnh", x, p["wz"])
+    Bt = jnp.einsum("bsd,dn->bsn", x, p["wB"]).astype(jnp.float32)
+    Ct = jnp.einsum("bsd,dn->bsn", x, p["wC"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dn->bsn", x, p["wdt"]) + p["dt_bias"]
+    ).astype(jnp.float32)  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    decay = jnp.exp(dt * A[None, None, :])  # [B,S,H]
+
+    def step(st, inp):
+        xt, bt, ct, dec, dtt = inp
+        # st: [B,H,hd,N]
+        st = dec[..., None, None] * st + (
+            (dtt[..., None] * xt)[..., :, None] * bt[:, None, None, :]
+        )
+        yt = jnp.einsum("bhpn,bn->bhp", st, ct)
+        return st, yt
+
+    xs = (
+        jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bt, 1, 0),
+        jnp.moveaxis(Ct, 1, 0),
+        jnp.moveaxis(decay, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1)  # [B,S,H,hd]
+    y = y + p["D"][None, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).reshape(B, S, -1)
+    y = rmsnorm(y, p["ln"]).astype(x.dtype)
+    H, HD = p["D"].shape
+    return jnp.einsum("bsnh,nhd->bsd", y.reshape(B, S, H, HD), p["wo"]), state

@@ -1,0 +1,420 @@
+"""Layer blocks + pattern-scan assembly for all architectures.
+
+A model = embed -> scan(pattern body, stacked weights) -> tail -> norm -> head.
+The pattern body unrolls the heterogeneous layer pattern (configs.base);
+lax.scan stacks weights over pattern repeats, keeping HLO size ~O(pattern)
+instead of O(layers) — essential for 512-device dry-run compiles and for
+exact trip-count collective accounting in the roofline parser.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as S
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# per-layer param init / axes
+# ---------------------------------------------------------------------------
+def attn_spec(cfg: ModelConfig, spec: LayerSpec, bidir=False) -> L.AttnSpec:
+    theta = cfg.rope_theta
+    if spec.attn_kind == "full" and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+    return L.AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        kind="bidir" if bidir else spec.attn_kind,
+        window=cfg.window,
+        use_rope=spec.use_rope and cfg.pos_embedding == "rope",
+        rope_theta=theta,
+        partial_rotary=cfg.partial_rotary,
+        qk_norm=cfg.qk_norm,
+    )
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p = {}
+    if spec.mixer in ("attn", "hybrid") and spec.attn_kind != "none":
+        p["ln_attn"] = L.init_norm(cfg.norm, d, dt)
+        p["attn"] = L.init_attn(keys[0], d, attn_spec(cfg, spec), dt)
+    if spec.mixer == "rwkv":
+        p["ln_tm"] = L.init_norm(cfg.norm, d, dt)
+        p["tm"] = S.init_rwkv_timemix(
+            keys[1], d, cfg.ssm_heads, cfg.head_dim, dt
+        )
+        p["ln_cm"] = L.init_norm(cfg.norm, d, dt)
+        p["cm"] = S.init_rwkv_channelmix(keys[2], d, cfg.d_ff, dt)
+        return p
+    if spec.mixer == "hybrid":
+        p["ssm"] = S.init_mamba_head(
+            keys[3], d, cfg.ssm_heads or cfg.num_heads, cfg.head_dim,
+            cfg.ssm_state, dt
+        )
+    if spec.has_cross:
+        p["ln_cross"] = L.init_norm(cfg.norm, d, dt)
+        p["cross"] = L.init_attn(keys[4], d, attn_spec(cfg, spec), dt)
+        if cfg.gated_cross:
+            p["cross_gate"] = jnp.zeros((), dt)
+    p["ln_mlp"] = L.init_norm(cfg.norm, d, dt)
+    if spec.is_moe:
+        p["moe"] = MOE.init_moe(
+            keys[5], d, cfg.expert_d_ff or cfg.d_ff, cfg.num_experts, dt,
+            mlp_kind=cfg.mlp, shared_expert=cfg.moe_shared_expert,
+        )
+    else:
+        p["mlp"] = L.init_mlp(keys[6], cfg.mlp, d, cfg.d_ff, dt)
+    return p
+
+
+def layer_axes(cfg: ModelConfig, spec: LayerSpec):
+    a = {}
+    if spec.mixer in ("attn", "hybrid") and spec.attn_kind != "none":
+        a["ln_attn"] = L.norm_axes(cfg.norm)
+        a["attn"] = L.attn_axes(attn_spec(cfg, spec))
+    if spec.mixer == "rwkv":
+        a["ln_tm"] = L.norm_axes(cfg.norm)
+        a["tm"] = S.rwkv_timemix_axes()
+        a["ln_cm"] = L.norm_axes(cfg.norm)
+        a["cm"] = S.rwkv_channelmix_axes()
+        return a
+    if spec.mixer == "hybrid":
+        a["ssm"] = S.mamba_head_axes()
+    if spec.has_cross:
+        a["ln_cross"] = L.norm_axes(cfg.norm)
+        a["cross"] = L.attn_axes(attn_spec(cfg, spec))
+        if cfg.gated_cross:
+            a["cross_gate"] = ()
+    a["ln_mlp"] = L.norm_axes(cfg.norm)
+    if spec.is_moe:
+        a["moe"] = MOE.moe_axes(cfg.mlp, cfg.moe_shared_expert)
+    else:
+        a["mlp"] = L.mlp_axes(cfg.mlp)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# layer application: train/prefill (full sequence) and decode (one token)
+# ---------------------------------------------------------------------------
+def _mlp_or_moe(x, p, cfg, spec):
+    h = L.apply_norm(cfg.norm, x, p["ln_mlp"])
+    if spec.is_moe:
+        out, aux = MOE.apply_moe(
+            h, p["moe"], top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp,
+            mode=cfg.moe_mode, dispatch_shards=cfg.moe_dispatch_shards,
+            weight_gather=cfg.moe_weight_gather,
+        )
+        return out, aux
+    return L.apply_mlp(cfg.mlp, h, p["mlp"]), 0.0
+
+
+def apply_layer(x, p, cfg, spec, *, cross_tokens=None, cache=None, pos=None,
+                want_cache=False, ring=False):
+    """One layer. Returns (x, aux, new_cache_entry_or_None).
+
+    Full-sequence mode when cache is None (train/prefill); single-token
+    decode mode when cache is a dict for this layer.
+    """
+    aux = 0.0
+    newc = {} if (want_cache or cache is not None) else None
+    decode = cache is not None
+    sp = attn_spec(cfg, spec)
+
+    if spec.mixer == "rwkv":
+        h = L.apply_norm(cfg.norm, x, p["ln_tm"])
+        if decode:
+            o, tmx, st = S.rwkv_timemix(h, cache["tm_x"], cache["state"], p["tm"])
+        else:
+            B = x.shape[0]
+            z = jnp.zeros((B, cfg.d_model), x.dtype)
+            st0 = jnp.zeros(
+                (B, cfg.ssm_heads, cfg.head_dim, cfg.head_dim), jnp.float32
+            )
+            o, tmx, st = S.rwkv_timemix(h, z, st0, p["tm"])
+        x = x + o
+        h = L.apply_norm(cfg.norm, x, p["ln_cm"])
+        if decode:
+            o, cmx = S.rwkv_channelmix(h, cache["cm_x"], p["cm"])
+        else:
+            o, cmx = S.rwkv_channelmix(
+                h, jnp.zeros((x.shape[0], cfg.d_model), x.dtype), p["cm"]
+            )
+        x = x + o
+        if newc is not None:
+            newc.update(tm_x=tmx, cm_x=cmx, state=st)
+        return x, aux, newc
+
+    # --- attention / hybrid mixer ---
+    if spec.attn_kind != "none":
+        h = L.apply_norm(cfg.norm, x, p["ln_attn"])
+        if decode:
+            o, ck, cv = L.decode_attention(
+                h, p["attn"], sp, cache["k"], cache["v"], pos, ring=ring
+            )
+            if newc is not None:
+                newc.update(k=ck, v=cv)
+        else:
+            o, (k, v) = L.self_attention(h, p["attn"], sp)
+            if newc is not None:
+                newc.update(k=k, v=v)
+        if spec.mixer == "hybrid":
+            if decode:
+                o2, st = S.mamba_head(h, cache["state"], p["ssm"])
+            else:
+                B = x.shape[0]
+                st0 = jnp.zeros(
+                    (
+                        B,
+                        cfg.ssm_heads or cfg.num_heads,
+                        cfg.head_dim,
+                        cfg.ssm_state,
+                    ),
+                    jnp.float32,
+                )
+                o2, st = S.mamba_head(h, st0, p["ssm"])
+            if newc is not None:
+                newc["state"] = st
+            o = 0.5 * (o + o2)
+        x = x + o
+
+    if spec.has_cross:
+        h = L.apply_norm(cfg.norm, x, p["ln_cross"])
+        if decode:
+            o = L.cross_attention_cached(
+                h, p["cross"], sp, cache["ck"], cache["cv"]
+            )
+            if newc is not None:
+                newc.update(ck=cache["ck"], cv=cache["cv"])
+        else:
+            o, (ck, cv) = L.cross_attention(h, p["cross"], sp, cross_tokens)
+            if newc is not None:
+                newc.update(ck=ck, cv=cv)
+        if "cross_gate" in p:
+            o = jnp.tanh(p["cross_gate"]) * o
+        x = x + o
+
+    o, aux = _mlp_or_moe(x, p, cfg, spec)
+    return x + o, aux, newc
+
+
+# ---------------------------------------------------------------------------
+# whole-model params
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params = {
+        "tok_embed": jax.random.normal(
+            keys[0], (cfg.vocab_size, d), dt
+        ) * 0.02,
+        "final_norm": L.init_norm(cfg.norm, d, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (d, cfg.vocab_size), dt)
+            / math.sqrt(d)
+        )
+    if cfg.pos_embedding == "learned":
+        params["pos_embed"] = (
+            jax.random.normal(keys[2], (cfg.max_seq, d), dt) * 0.02
+        )
+
+    if cfg.pattern_repeats > 0:
+        params["groups"] = {}
+        for i, spec in enumerate(cfg.pattern):
+            gkeys = jax.random.split(
+                jax.random.fold_in(keys[3], i), cfg.pattern_repeats
+            )
+            params["groups"][f"l{i}"] = jax.vmap(
+                lambda k, sp=spec: init_layer(k, cfg, sp)
+            )(gkeys)
+    tkeys = jax.random.split(keys[4], max(len(cfg.tail), 1))
+    params["tail"] = {
+        f"l{i}": init_layer(tkeys[i], cfg, spec)
+        for i, spec in enumerate(cfg.tail)
+    }
+
+    if cfg.encoder_layers:  # whisper encoder (conv frontend is a stub)
+        ekeys = jax.random.split(keys[5], cfg.encoder_layers)
+        enc_spec = LayerSpec(mixer="attn", attn_kind="full", use_rope=False)
+        params["encoder"] = {
+            f"l{i}": init_layer(ekeys[i], cfg, enc_spec)
+            for i in range(cfg.encoder_layers)
+        }
+        params["enc_final_norm"] = L.init_norm(cfg.norm, d, dt)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    axes = {
+        "tok_embed": ("vocab", "embed"),
+        "final_norm": L.norm_axes(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    if cfg.pos_embedding == "learned":
+        axes["pos_embed"] = ("pos", "embed")
+    if cfg.pattern_repeats > 0:
+        axes["groups"] = {
+            f"l{i}": jax.tree.map(
+                lambda a: ("layers",) + a,
+                layer_axes(cfg, spec),
+                is_leaf=lambda v: isinstance(v, tuple),
+            )
+            for i, spec in enumerate(cfg.pattern)
+        }
+    axes["tail"] = {
+        f"l{i}": layer_axes(cfg, spec) for i, spec in enumerate(cfg.tail)
+    }
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(mixer="attn", attn_kind="full", use_rope=False)
+        axes["encoder"] = {
+            f"l{i}": layer_axes(cfg, enc_spec)
+            for i in range(cfg.encoder_layers)
+        }
+        axes["enc_final_norm"] = L.norm_axes(cfg.norm)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _embed(params, cfg, tokens, extras):
+    x = params["tok_embed"][tokens]
+    if cfg.early_fusion_tokens and "vision_embeds" in extras:
+        nf = cfg.early_fusion_tokens
+        x = jnp.concatenate(
+            [extras["vision_embeds"].astype(x.dtype), x[:, nf:]], axis=1
+        )
+    if cfg.pos_embedding == "learned":
+        S_ = x.shape[1]
+        x = x + params["pos_embed"][:S_][None]
+    return x
+
+
+def _cross_tokens(params, cfg, extras):
+    if cfg.audio_frames and "audio_frames" in extras:
+        return run_encoder(params, cfg, extras["audio_frames"])
+    return extras.get("vision_embeds")
+
+
+def run_encoder(params, cfg, frames):
+    """Whisper encoder over precomputed (stub) conv-frontend frames."""
+    d = cfg.d_model
+    T = frames.shape[1]
+    pos = jnp.arange(T)[:, None] / jnp.power(
+        10000.0, jnp.arange(0, d, 2)[None, :] / d
+    )
+    pe = jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)[:, :d]
+    x = frames + pe[None].astype(frames.dtype)
+    enc_spec = LayerSpec(mixer="attn", attn_kind="full", use_rope=False)
+    for i in range(cfg.encoder_layers):
+        p = params["encoder"][f"l{i}"]
+        h = L.apply_norm(cfg.norm, x, p["ln_attn"])
+        o, _ = L.self_attention(h, p["attn"], attn_spec(cfg, enc_spec, bidir=True))
+        x = x + o
+        o, _ = _mlp_or_moe(x, p, cfg, enc_spec)
+        x = x + o
+    return L.apply_norm(cfg.norm, x, params["enc_final_norm"])
+
+
+def _lm_head(params, cfg, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["tok_embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def forward(params, cfg: ModelConfig, tokens, extras=None, *,
+            remat: bool = True, remat_policy: str = "nothing"):
+    """Full-sequence forward. Returns (hidden [B,S,D], aux_loss)."""
+    extras = extras or {}
+    x = _embed(params, cfg, tokens, extras)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    cross = _cross_tokens(params, cfg, extras)
+    aux_total = 0.0
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, a, _ = apply_layer(x, gp[f"l{i}"], cfg, spec, cross_tokens=cross)
+            x = constrain(x, ("batch", "seq", "embed_act"))
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    if remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }[remat_policy]
+        body = jax.checkpoint(group_body, policy=policy)
+
+    if cfg.pattern_repeats > 0:
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), params["groups"]
+        )
+    for i, spec in enumerate(cfg.tail):
+        x, a, _ = apply_layer(
+            x, params["tail"][f"l{i}"], cfg, spec, cross_tokens=cross
+        )
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        aux_total = aux_total + a
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    return x, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat=True,
+            remat_policy="nothing", loss_chunk: int = 0):
+    """Causal LM cross-entropy (+ MoE aux). batch: tokens/targets/extras."""
+    x, aux = forward(
+        params, cfg, batch["tokens"], batch.get("extras"),
+        remat=remat, remat_policy=remat_policy,
+    )
+    targets = batch["targets"]
+    B, S_, D = x.shape
+    V = cfg.vocab_size
+    if loss_chunk and S_ % loss_chunk == 0 and S_ > loss_chunk:
+        # chunked loss: avoid materializing [B,S,V] at once
+        nch = S_ // loss_chunk
+        xc = x.reshape(B, nch, loss_chunk, D).swapaxes(0, 1)
+        tc = targets.reshape(B, nch, loss_chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xt):
+            xch, tch = xt
+            xch = constrain(xch, ("batch", "seq", "embed_act"))
+            logits = _lm_head(params, cfg, xch).astype(jnp.float32)
+            logits = constrain(logits, ("batch", "seq", "vocab_act"))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, tch[..., None], axis=-1
+            ).squeeze(-1)
+            return carry + jnp.sum(lse - gold), None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                                (xc, tc))
+        loss = total / (B * S_)
+    else:
+        logits = _lm_head(params, cfg, x).astype(jnp.float32)
+        logits = constrain(logits, ("batch", "seq", "vocab_act"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1
+        ).squeeze(-1)
+        loss = jnp.mean(lse - gold)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}

@@ -1,0 +1,128 @@
+"""Optimizers (pure JAX, no optax dependency): AdamW and Adafactor.
+
+Dtype policy: optimizer-state dtype is configurable — f32 for fidelity,
+bf16 to halve optimizer HBM (the knob that keeps 400B-param llama4 on a
+single 256-chip pod; see EXPERIMENTS.md §Perf). Optimizer state shards
+exactly like its parameter (ZeRO-style, inherited through the param
+sharding tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # 'adamw' | 'adafactor'
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # 'float32' | 'bfloat16'
+    # adafactor
+    min_dim_size_to_factor: int = 128
+
+
+def _factored(shape, cfg):
+    return (
+        len(shape) >= 2
+        and shape[-1] >= cfg.min_dim_size_to_factor
+        and shape[-2] >= cfg.min_dim_size_to_factor
+    )
+
+
+def init_opt_state(cfg: OptConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def leaf(p):
+        if cfg.name == "adafactor" and _factored(p.shape, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(leaf, params),
+    }
+
+
+def opt_state_axes(cfg: OptConfig, params_axes, abstract_params):
+    """Logical axes tree for the optimizer state (mirrors params)."""
+
+    def leaf(axes, p):
+        if cfg.name == "adafactor" and _factored(p.shape, cfg):
+            return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+        return {"m": axes, "v": axes}
+
+    return {
+        "step": (),
+        "mu": jax.tree.map(
+            leaf,
+            params_axes,
+            abstract_params,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(x, (str, type(None))) for x in v),
+        ),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def opt_update(cfg: OptConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def leaf(g, st, p):
+        g = g.astype(jnp.float32) * scale
+        if "vr" in st:  # adafactor
+            g2 = jnp.square(g) + 1e-30
+            vr = cfg.b2 * st["vr"].astype(jnp.float32) + (1 - cfg.b2) * g2.mean(-1)
+            vc = cfg.b2 * st["vc"].astype(jnp.float32) + (1 - cfg.b2) * g2.mean(-2)
+            rms = vr[..., :, None] * vc[..., None, :] / jnp.maximum(
+                vr.mean(-1)[..., None, None], 1e-30
+            )
+            upd = g * jax.lax.rsqrt(rms + cfg.eps)
+            new_st = {"vr": vr.astype(dt), "vc": vc.astype(dt)}
+        else:
+            m = cfg.b1 * st["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+            v = cfg.b2 * st["v"].astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+            mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+            upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            new_st = {"m": m.astype(dt), "v": v.astype(dt)}
+        newp = (
+            p.astype(jnp.float32)
+            - cfg.lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+        ).astype(p.dtype)
+        return newp, new_st
+
+    flat = jax.tree.map(leaf, grads, opt_state["mu"], params)
+    new_params = jax.tree.map(
+        lambda pair: pair[0], flat, is_leaf=lambda v: isinstance(v, tuple)
+    )
+    new_mu = jax.tree.map(
+        lambda pair: pair[1], flat, is_leaf=lambda v: isinstance(v, tuple)
+    )
+    return (
+        new_params,
+        {"step": step, "mu": new_mu},
+        {"grad_norm": gnorm},
+    )

@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    TrainSupervisor,
+    Watchdog,
+)
+
+__all__ = ["FailureInjector", "TrainSupervisor", "Watchdog"]

@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.scheduler import AdmissionPlanner, Request
+
+__all__ = ["AdmissionPlanner", "Request", "ServeConfig", "ServingEngine"]

@@ -1,0 +1,121 @@
+"""Batched serving engine: planned continuous batching over a static cache.
+
+Stage separation (P1): the *planner* (AdmissionPlanner, host) and the
+*executor* (jitted prefill/decode steps, device) share no mutable state —
+the planner hands the executor an explicit plan (slot ids, token buffers),
+exactly the CC-thread/execution-thread split of the paper, one level up.
+
+The decode step is one jitted function over the whole slot batch with
+donated cache buffers; per-slot activity is masked, so shapes never change
+and nothing recompiles as requests come and go.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serve.scheduler import AdmissionPlanner, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    cache_len: int = 256
+    eos_token: int = 1
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.planner = AdmissionPlanner(scfg.batch_slots, scfg.cache_len)
+        self.cache = M.init_cache(cfg, scfg.batch_slots, scfg.cache_len)
+        self.tokens = np.zeros((scfg.batch_slots, 1), np.int32)
+        self.active = np.zeros((scfg.batch_slots,), bool)
+
+        self._decode = jax.jit(
+            lambda p, c, t: M.decode_step(p, cfg, c, t),
+            donate_argnums=(1,),
+        )
+        self._prefill_one = jax.jit(
+            lambda p, toks, extras: M.prefill(
+                p, cfg, toks, extras, cache_len=scfg.cache_len
+            ),
+            static_argnames=(),
+        )
+
+    # -- plan: admit requests, prefill their prompts into their slots ----
+    def _admit(self, extras=None):
+        for req in self.planner.plan():
+            logits, cache1 = self._prefill_one(
+                self.params, req.prompt[None, :], extras
+            )
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            req.generated = 1
+            self.tokens[req.slot, 0] = tok
+            self.active[req.slot] = True
+            # splice this request's cache into its slot
+            self.cache = _splice_cache(
+                self.cache, cache1, req.slot, len(req.prompt)
+            )
+
+    def run(self, requests: list[Request], extras=None) -> list[Request]:
+        for r in requests:
+            self.planner.submit(r)
+        out = []
+        while self.planner.has_work:
+            self._admit(extras)
+            if not self.active.any():
+                break
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.tokens)
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for slot in np.nonzero(self.active)[0]:
+                req = self.planner.active.get(int(slot))
+                if req is None:
+                    continue
+                tok = int(nxt[slot])
+                req.output.append(tok)
+                req.generated += 1
+                self.tokens[slot, 0] = tok
+                full = len(req.prompt) + req.generated >= self.scfg.cache_len
+                if (
+                    req.generated >= req.max_new_tokens
+                    or tok == self.scfg.eos_token
+                    or full
+                ):
+                    self.active[slot] = False
+                    self.planner.release(int(slot))
+                    out.append(req)
+        return out
+
+
+def _splice_cache(batch_cache, one_cache, slot, prompt_len):
+    """Copy a single-request prefill cache into batch slot `slot`."""
+
+    def leaf(bc, oc):
+        if bc.ndim >= 1 and oc.shape[0] == 1 and bc.shape[1:] == oc.shape[1:]:
+            return bc.at[slot].set(oc[0])
+        # stacked group caches: [R, B, ...] vs [R, 1, ...]
+        if (
+            bc.ndim >= 2
+            and oc.shape[0] == bc.shape[0]
+            and oc.shape[1] == 1
+            and bc.shape[2:] == oc.shape[2:]
+        ):
+            return bc.at[:, slot].set(oc[:, 0])
+        return bc
+
+    merged = jax.tree.map(leaf, batch_cache, one_cache)
+    merged["pos"] = batch_cache["pos"].at[slot].set(prompt_len)
+    return merged

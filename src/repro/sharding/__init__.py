@@ -1,0 +1,17 @@
+from repro.sharding.policies import (
+    DEFAULT_RULES,
+    batch_sharding,
+    cache_sharding,
+    params_sharding,
+    rules_for,
+    spec_for,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "batch_sharding",
+    "cache_sharding",
+    "params_sharding",
+    "rules_for",
+    "spec_for",
+]

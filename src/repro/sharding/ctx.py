@@ -1,0 +1,46 @@
+"""Ambient activation-sharding context.
+
+Model code annotates activations with *logical* axes via ``constrain(x,
+axes)``; the trainer/dry-run installs a (mesh, rules) context so those
+become ``with_sharding_constraint`` on the production mesh. Without a
+context (CPU smoke tests) it is a no-op.
+
+This is what keeps GSPMD from letting FSDP parameter shardings (embed ->
+'data') leak into activations and silently replicate the batch dimension —
+the activation contract is pinned at every residual-stream boundary.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_CTX = contextvars.ContextVar("repro_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use(mesh, rules: dict):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def active():
+    return _CTX.get()
+
+
+def constrain(x, axes: tuple):
+    """Constrain array x to logical axes (no-op without a context)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.sharding.policies import spec_for
+
+    return jax.lax.with_sharding_constraint(
+        x, spec_for(axes, x.shape, mesh, rules)
+    )

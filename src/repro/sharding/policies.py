@@ -1,0 +1,164 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/activation is annotated with logical axis names; a *rules*
+dict maps each logical axis to mesh axes. ``spec_for`` resolves a concrete
+NamedSharding, skipping mesh axes that don't divide the dimension or are
+already used by an earlier dimension (so kv_heads=1 simply replicates
+instead of failing).
+
+Default policy (single-pod mesh ('data','model'); multi-pod adds 'pod'):
+  - batch over ('pod','data')          — DP across pods and the data axis
+  - embed over 'data'                  — FSDP/ZeRO-3 parameter sharding
+  - heads/kv_heads/mlp/vocab > 'model' — Megatron tensor parallelism
+  - experts over 'model'               — expert parallelism (single-owner
+                                         experts: the P1 principle)
+
+Per-arch overrides come from ``ModelConfig.sharding_overrides``; per-shape
+adjustments (e.g. sequence-parallel KV cache for long_500k decode, where
+batch=1 cannot use the data axis) come from ``rules_for``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    # parameters
+    "vocab": "model",
+    "embed": "data",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "layers": None,
+    "lora": None,
+    "ssm_state": None,
+    "pos": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_full": None,  # attention operands: always full sequence
+    "kv_heads_act": "model",
+    "embed_act": None,
+    "embed_full": None,  # use-site weight gather (ZeRO-3 expert FFNs)
+    "vocab_act": "model",
+    "heads_act": "model",
+    "tokens_act": ("pod", "data"),
+    "cap": "data",  # MoE expert token blocks: shard capacity dim (DP-wise)
+    "cache_seq": None,
+    "cache_kv": "model",
+}
+
+
+def rules_for(cfg, shape_kind: str, batch: int, mesh: Mesh) -> dict:
+    """Resolve the rule set for one (arch x shape x mesh) cell."""
+    rules = dict(DEFAULT_RULES)
+    rules.update(cfg.sharding_overrides or {})
+    if cfg.num_experts:
+        # experts claim the model axis; expert_mlp stays unsharded unless
+        # experts don't divide the axis (then fall back to mlp TP)
+        if cfg.num_experts % mesh.shape.get("model", 1) == 0:
+            rules.setdefault("experts", "model")
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    if shape_kind == "decode":
+        dp = math.prod(
+            mesh.shape[a] for a in ("pod", "data") if a in mesh.shape
+        )
+        if batch % dp != 0:
+            # long-context decode with tiny batch: shard the KV cache's
+            # sequence dim instead (sequence-parallel flash-decode)
+            rules["batch"] = None
+            rules["cache_seq"] = ("pod", "data", "model")
+        elif cfg.num_kv_heads % mesh.shape.get("model", 1) != 0:
+            # kv heads can't fill the model axis: flash-decode over a
+            # sequence-sharded cache instead of replicating it
+            rules["cache_seq"] = "model"
+    return rules
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict):
+    """NamedSharding for one array given its logical axes and shape."""
+    used: set[str] = set()
+    parts = []
+    for name, dim in zip(axes, shape):
+        r = rules.get(name)
+        cand = r if isinstance(r, (tuple, list)) else ((r,) if r else ())
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        # largest prefix of candidate axes that divides the dim
+        chosen: tuple[str, ...] = ()
+        for i_ in range(len(cand), 0, -1):
+            size = math.prod(mesh.shape[a] for a in cand[:i_])
+            if dim % size == 0:
+                chosen = cand[:i_]
+                break
+        if chosen:
+            parts.append(chosen if len(chosen) > 1 else chosen[0])
+            used.update(chosen)
+        else:
+            parts.append(None)
+    return NamedSharding(mesh, P(*parts))
+
+
+def tree_sharding(axes_tree, shape_tree, mesh: Mesh, rules: dict):
+    """Map matching pytrees of axis-tuples and ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda axes, s: spec_for(axes, s.shape, mesh, rules),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(x, (str, type(None))) for x in v
+        ),
+    )
+
+
+def params_sharding(cfg, mesh: Mesh, rules: dict, abstract_params):
+    """Sharding tree for model params (abstract_params from eval_shape)."""
+    from repro.models import param_axes
+
+    return tree_sharding(param_axes(cfg), abstract_params, mesh, rules)
+
+
+def batch_sharding(mesh: Mesh, rules: dict, batch_spec):
+    """Sharding for token batches / extras: leading dim = batch."""
+
+    def leaf(s):
+        axes = ("batch",) + ("seq",) * (len(s.shape) - 1)
+        return spec_for(axes, s.shape, mesh, rules)
+
+    return jax.tree.map(leaf, batch_spec)
+
+
+def cache_sharding(cfg, mesh: Mesh, rules: dict, cache_spec_tree, stacked):
+    """Sharding for the decode cache pytree.
+
+    Leaf roles are inferred from rank/shape against the model config —
+    k/v: [.., B, S, kv, hd]; kpos: [.., B, S]; ssm states and shift
+    buffers replicate batch over data only.
+    """
+
+    def leaf(s):
+        shp = s.shape
+        lead = ("layers",) if (stacked and len(shp) > 0) else ()
+        core = shp[len(lead):]
+        if len(core) == 4 and core[2] == cfg.num_kv_heads:
+            axes = lead + ("batch", "cache_seq", "cache_kv", "head_dim")
+        elif len(core) == 4:  # ssm state [B,H,hd,N] / rwkv [B,H,hd,hd]
+            axes = lead + ("batch", "heads", "head_dim", "ssm_state")
+        elif len(core) == 3:  # cross kv without heads? / [B,T,d]
+            axes = lead + ("batch", "seq", "embed_act")
+        elif len(core) == 2:
+            axes = lead + ("batch", "cache_seq")
+        else:
+            axes = lead + ("batch",)
+        return spec_for(axes, shp, mesh, rules)
+
+    return jax.tree.map(leaf, cache_spec_tree)

@@ -1,0 +1,3 @@
+from repro.train.train_step import TrainConfig, make_train_step
+
+__all__ = ["TrainConfig", "make_train_step"]

@@ -1,0 +1,85 @@
+"""Training step: microbatched grad accumulation + optimizer update.
+
+The step is a plain function of (params, opt_state, batch) suitable for
+``jax.jit(in_shardings=..., out_shardings=...)`` under a production mesh.
+Gradient accumulation scans over microbatches (remat'd), so activation
+memory scales with the microbatch, while XLA overlaps the per-layer
+FSDP all-gathers / grad reduce-scatters with compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as TF
+from repro.optim import OptConfig, opt_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat_policy: str = "nothing"  # 'nothing' | 'dots' | 'dots_no_batch'
+    loss_chunk: int = 512  # chunked CE loss (0 = whole sequence)
+    opt: OptConfig = OptConfig()
+
+
+def _split_micro(batch, n):
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(mcfg: ModelConfig, tcfg: TrainConfig,
+                    param_shardings=None):
+    def loss_fn(params, mb):
+        return TF.loss_fn(
+            params, mcfg, mb,
+            remat=True,
+            remat_policy=tcfg.remat_policy,
+            loss_chunk=tcfg.loss_chunk,
+        )
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            micro = _split_micro(batch, tcfg.microbatches)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                if param_shardings is not None:
+                    gsum = jax.lax.with_sharding_constraint(
+                        gsum, param_shardings
+                    )
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if param_shardings is not None:
+                g0 = jax.lax.with_sharding_constraint(g0, param_shardings)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        params, opt_state, om = opt_update(tcfg.opt, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step

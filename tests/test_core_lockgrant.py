@@ -1,0 +1,123 @@
+"""Unit + property tests for the segmented FIFO lock-grant primitive."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lockgrant import (
+    KEY_SENTINEL,
+    REQ_NONE,
+    REQ_READ,
+    REQ_RELEASE,
+    REQ_WRITE,
+    grant_round,
+    segment_sum_by_key,
+)
+
+
+def _round(keys, ts, kind, wh=None, rc=None, R=64):
+    keys = jnp.asarray(keys, jnp.int32)
+    ts = jnp.asarray(ts, jnp.int32)
+    kind = jnp.asarray(kind, jnp.int32)
+    wh = jnp.full((R,), -1, jnp.int32) if wh is None else jnp.asarray(wh)
+    rc = jnp.zeros((R,), jnp.int32) if rc is None else jnp.asarray(rc)
+    g, c, w = grant_round(keys, ts, kind, wh, rc, R)
+    return np.asarray(g), np.asarray(c), np.asarray(w)
+
+
+def test_reads_share():
+    g, c, _ = _round([5, 5, 5], [1, 2, 3], [REQ_READ] * 3)
+    assert g.all()
+    assert (c == 3).all()
+
+
+def test_write_exclusive():
+    g, _, _ = _round([5, 5], [1, 2], [REQ_WRITE, REQ_WRITE])
+    assert g.tolist() == [True, False]
+
+
+def test_fifo_write_blocks_later_reads():
+    # older write + younger reads: only the write goes
+    g, _, _ = _round([5, 5, 5], [1, 2, 3], [REQ_WRITE, REQ_READ, REQ_READ])
+    assert g.tolist() == [True, False, False]
+
+
+def test_reads_before_write_granted():
+    g, _, _ = _round([5, 5, 5], [1, 2, 3], [REQ_READ, REQ_READ, REQ_WRITE])
+    assert g.tolist() == [True, True, False]
+
+
+def test_write_blocked_by_read_holders():
+    rc = np.zeros(64, np.int32)
+    rc[5] = 2
+    g, _, _ = _round([5], [1], [REQ_WRITE], rc=rc)
+    assert not g[0]
+
+
+def test_write_blocked_by_write_holder():
+    wh = np.full(64, -1, np.int32)
+    wh[5] = 7
+    g, _, _ = _round([5, 5], [1, 2], [REQ_WRITE, REQ_READ], wh=wh)
+    assert not g.any()
+
+
+def test_release_counts_as_contender_but_never_grants():
+    g, c, _ = _round([5, 5], [1, 2], [REQ_RELEASE, REQ_READ])
+    assert g.tolist() == [False, True]
+    assert (c == 2).all()
+
+
+def test_sentinel_padding_ignored():
+    g, c, _ = _round(
+        [int(KEY_SENTINEL), 5], [1, 2], [REQ_NONE, REQ_READ]
+    )
+    assert g.tolist() == [False, True]
+    assert c.tolist() == [0, 1]
+
+
+def test_segment_sum_by_key():
+    keys = jnp.asarray([3, 3, 7, 3, 9], jnp.int32)
+    w = jnp.asarray([1, 2, 5, 4, 0], jnp.int32)
+    out = np.asarray(segment_sum_by_key(keys, w))
+    assert out.tolist() == [7, 7, 5, 7, 0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 7),  # key
+            st.sampled_from([REQ_READ, REQ_WRITE, REQ_RELEASE, REQ_NONE]),
+        ),
+        min_size=1,
+        max_size=40,
+    ),
+    st.randoms(use_true_random=False),
+)
+def test_grant_invariants(entries, rnd):
+    n = len(entries)
+    keys = np.array(
+        [k if kd != REQ_NONE else int(KEY_SENTINEL) for k, kd in entries],
+        np.int32,
+    )
+    kind = np.array([kd for _, kd in entries], np.int32)
+    ts = np.array(rnd.sample(range(1000), n), np.int32)
+    g, c, _ = _round(keys, ts, kind, R=8)
+
+    for key in range(8):
+        idx = [i for i in range(n) if keys[i] == key]
+        wg = [i for i in idx if g[i] and kind[i] == REQ_WRITE]
+        rg = [i for i in idx if g[i] and kind[i] == REQ_READ]
+        # at most one write grant per key, never alongside read grants
+        assert len(wg) <= 1
+        if wg:
+            assert not rg
+            # the granted write is the oldest request on the key
+            reqs = [i for i in idx if kind[i] in (REQ_READ, REQ_WRITE)]
+            assert ts[wg[0]] == min(ts[i] for i in reqs)
+        # releases never grant
+        assert not any(g[i] for i in idx if kind[i] == REQ_RELEASE)
+        # contender count == number of active entries on the key
+        if idx:
+            assert all(c[i] == len(idx) for i in idx)

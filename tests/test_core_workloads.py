@@ -1,0 +1,116 @@
+"""Workload generators + planner properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner as P
+from repro.core.lockgrant import KEY_SENTINEL
+from repro.core.workloads import (
+    MODE_READ,
+    MODE_WRITE,
+    WorkloadConfig,
+    make_workload,
+    tpcc_layout,
+)
+
+
+def test_ycsb_hot_cold_structure():
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=16, hot_per_txn=2, seed=1)
+    )
+    assert wl.keys.shape == (512, 10)
+    # hot records first (paper acquisition order)
+    assert (wl.keys[:, :2] < 16).all()
+    assert (wl.keys[:, 2:] >= 16).all()
+    # distinct hot picks
+    assert (wl.keys[:, 0] != wl.keys[:, 1]).all()
+
+
+def test_ycsb_read_only():
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=64, read_only=True)
+    )
+    assert (wl.modes == MODE_READ).all()
+
+
+def test_ycsb_partition_constraints():
+    for ppt in (1, 2):
+        wl = make_workload(
+            WorkloadConfig(
+                kind="ycsb", num_txns=256, num_records=100_000,
+                num_hot=64, partitions_per_txn=ppt, num_partitions=8,
+            )
+        )
+        parts = wl.keys % 8
+        n_distinct = np.array(
+            [len(np.unique(row)) for row in parts]
+        )
+        assert (n_distinct <= ppt).all()
+        if ppt == 2:
+            assert (n_distinct == 2).mean() > 0.9
+
+
+def test_tpcc_structure():
+    cfg = WorkloadConfig(kind="tpcc", num_txns=2048, num_warehouses=4,
+                         seed=3)
+    wl = make_workload(cfg)
+    wh_base, di_base, cu_base, st_base, total = tpcc_layout(cfg)
+    assert wl.num_records == total
+    payments = wl.nkeys == 3
+    neworders = wl.nkeys == 12
+    assert payments.sum() + neworders.sum() == 2048
+    assert 0.4 < payments.mean() < 0.6
+    # Payment: warehouse write lock is the first (hot) key
+    pk = wl.keys[payments]
+    assert (pk[:, 0] < di_base).all()
+    assert (wl.modes[payments][:, 0] == MODE_WRITE).all()
+    # ~15% remote-customer payments
+    remote = wl.part[payments][:, 2] != wl.part[payments][:, 0]
+    assert 0.08 < remote.mean() < 0.25
+    # ~60% by-name payments need OLLP
+    assert 0.5 < wl.ollp[payments].mean() < 0.7
+    # NewOrder reads the warehouse
+    assert (wl.modes[neworders][:, 0] == MODE_READ).all()
+
+
+def test_plan_sorted_canonical():
+    wl = make_workload(WorkloadConfig(kind="ycsb", num_txns=128, seed=0))
+    plan = P.plan_sorted(wl)
+    k = plan.keys.astype(np.int64)
+    assert (np.diff(k, axis=1) >= 0).all()
+
+
+def test_plan_orthrus_groups_contiguous():
+    wl = make_workload(WorkloadConfig(kind="tpcc", num_txns=256,
+                                      num_warehouses=8))
+    n_cc = 4
+    plan = P.plan_orthrus(wl, n_cc)
+    cc = plan.part.astype(np.int64) % n_cc
+    cc = np.where(plan.keys == int(KEY_SENTINEL), 10**6, cc)
+    # cc ids nondecreasing per txn -> each CC visited once, in order
+    assert (np.diff(cc, axis=1) >= 0).all()
+
+
+def test_plan_partition_store_dedup():
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=128, partitions_per_txn=2,
+                       num_partitions=8)
+    )
+    plan = P.plan_partition_store(wl, 8)
+    assert (plan.nkeys <= 2).all()
+    assert (plan.modes[:, 0] == MODE_WRITE).all()
+    assert plan.lane_stream is not None
+    # every lane's stream rows reference txns homed to that lane
+    for lane in range(8):
+        idxs = plan.lane_stream[lane]
+        idxs = idxs[idxs >= 0]
+        if len(idxs):
+            assert (plan.keys[idxs, 0] % 8 == lane).all()
+
+
+def test_plan_dynamic_clears_ollp():
+    wl = make_workload(WorkloadConfig(kind="tpcc", num_txns=128))
+    plan = P.plan_dynamic(wl)
+    assert not plan.ollp.any() and not plan.ollp_miss.any()

@@ -1,0 +1,123 @@
+"""Per-kernel interpret-mode allclose vs the pure-jnp oracles, across
+shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lockgrant import (
+    KEY_SENTINEL,
+    REQ_NONE,
+    grant_round,
+)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lock_grant.ops import lock_grant
+from repro.kernels.moe_dispatch.ops import moe_dispatch_plan
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.models.moe import plan_dispatch
+
+
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 256), (555, 128)])
+@pytest.mark.parametrize("nkeys", [4, 32])
+def test_lock_grant_vs_oracle(n, block, nkeys):
+    rng = np.random.default_rng(n + nkeys)
+    R = max(nkeys, 2)
+    keys = rng.integers(0, R, n).astype(np.int32)
+    kind = rng.integers(0, 4, n).astype(np.int32)
+    keys = np.where(kind == REQ_NONE, int(KEY_SENTINEL), keys).astype(
+        np.int32
+    )
+    ts = rng.permutation(n).astype(np.int32)
+    wh = np.full(R, -1, np.int32)
+    wh[rng.integers(0, R, R // 2)] = 3
+    rc = np.zeros(R, np.int32)
+    rc[rng.integers(0, R, R // 3)] = rng.integers(1, 4, R // 3)
+    g0, c0, _ = grant_round(
+        jnp.asarray(keys), jnp.asarray(ts), jnp.asarray(kind),
+        jnp.asarray(wh), jnp.asarray(rc), R,
+    )
+    g1, c1 = lock_grant(
+        jnp.asarray(keys), jnp.asarray(ts), jnp.asarray(kind),
+        jnp.asarray(wh), jnp.asarray(rc), num_records=R, block_n=block,
+    )
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
+@pytest.mark.parametrize("N,E,k,cap", [(512, 8, 2, 128), (1000, 16, 1, 64),
+                                       (2048, 4, 2, 640)])
+def test_moe_dispatch_vs_oracle(N, E, k, cap):
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(N + E), (N, E)), -1
+    )
+    p0 = plan_dispatch(probs, k, cap)
+    p1 = moe_dispatch_plan(probs, top_k=k, capacity=cap, block_n=256)
+    for f in ("slot_token", "slot_weight", "load"):
+        np.testing.assert_allclose(
+            np.asarray(p0[f]), np.asarray(p1[f]), rtol=1e-6, atol=1e-7
+        )
+
+
+@pytest.mark.parametrize("kind,window", [("full", 0), ("swa", 64),
+                                         ("chunked", 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,H,KV,D", [(128, 4, 2, 32), (256, 2, 2, 64)])
+def test_flash_attention_vs_oracle(kind, window, dtype, S, H, KV, D):
+    B = 2
+    key = jax.random.PRNGKey(S + H)
+    q = (jax.random.normal(key, (B, S, H, D)) * 0.2).astype(dtype)
+    k = (
+        jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D)) * 0.2
+    ).astype(dtype)
+    v = (
+        jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D)) * 0.2
+    ).astype(dtype)
+    o1 = flash_attention(q, k, v, kind=kind, window=window, q_block=64,
+                         kv_block=64)
+    kb = jnp.repeat(k, H // KV, 2).transpose(0, 2, 1, 3)
+    vb = jnp.repeat(v, H // KV, 2).transpose(0, 2, 1, 3)
+    o0 = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), kb, vb, kind=kind, window=window
+    ).transpose(0, 2, 1, 3)
+    atol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o0, np.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 128), (96, 32)])
+@pytest.mark.parametrize("D", [16, 64])
+def test_rwkv6_scan_vs_oracle(S, chunk, D):
+    B, H = 2, 3
+    key = jax.random.PRNGKey(S + D)
+    r = jax.random.normal(key, (B, H, S, D)) * 0.2
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D)) * 0.2
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D)) * 0.2
+    w = jax.nn.sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 3), (B, H, S, D))
+    ) * 0.5 + 0.4
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, D)) * 0.1
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (B, H, D, D)) * 0.1
+    o0, st0 = rwkv6_scan_ref(r, k, v, w, u, s0)
+    o1, st1 = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o0), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st0), atol=2e-4)
+
+
+def test_moe_per_shard_plan_matches_global():
+    """Hierarchical per-shard dispatch == global plan when capacity is
+    ample, and == dense compute when nothing drops."""
+    from repro.models.moe import apply_moe, init_moe
+
+    key = jax.random.PRNGKey(0)
+    p = init_moe(key, 32, 64, 4, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 32)) * 0.3
+    o1, _ = apply_moe(x, p, top_k=2, capacity_factor=8.0, mode="planned")
+    o2, _ = apply_moe(x, p, top_k=2, capacity_factor=8.0, mode="planned",
+                      dispatch_shards=4)
+    o3, _ = apply_moe(x, p, top_k=2, capacity_factor=8.0, mode="dense")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=1e-3)
