@@ -8,7 +8,7 @@ from repro.core.workloads import WorkloadConfig, make_workload
 
 SIM = dict(max_rounds=8000, warmup_rounds=2000, chunk_rounds=2000,
            target_commits=100_000)
-PROTOS = ("deadlock_free", "twopl_waitdie", "twopl_dreadlocks")
+PROTOS = ("deadlock_free", "twopl_waitdie", "twopl_dreadlocks", "dgcc")
 
 print(f"{'hot records':>12s} " + " ".join(f"{p:>18s}" for p in PROTOS))
 for hot in (4096, 256, 64, 16):
@@ -18,8 +18,12 @@ for hot in (4096, 256, 64, 16):
     )
     row = []
     for p in PROTOS:
+        # core-for-core fair: dgcc splits the 48-core budget into worker
+        # + planner lanes (paper §4.2 thread-allocation regime)
+        n_cc = 8 if p == "dgcc" else 0
         res = run_simulation(
-            EngineConfig(protocol=p, n_exec=48, **SIM), wl
+            EngineConfig(protocol=p, n_exec=48 - n_cc, n_cc=n_cc,
+                         **SIM), wl
         )
         row.append(f"{res.throughput_txn_s/1e3:15.1f}k/s")
     print(f"{hot:12d} " + " ".join(f"{v:>18s}" for v in row))

@@ -1,0 +1,31 @@
+"""Small JAX version-compatibility shims.
+
+The repo targets the current JAX APIs but must run on the pinned container
+(jax 0.4.x), where a few entry points live under older names:
+
+  - ``jax.shard_map``            -> ``jax.experimental.shard_map.shard_map``
+    (and ``check_vma`` was called ``check_rep``)
+  - ``jnp.maximum.accumulate``   -> use ``jax.lax.cummax`` directly (done at
+    the call sites; no shim needed)
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with fallback to the pre-0.5 experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -1,6 +1,6 @@
 """ORTHRUS core: the paper's transaction-management contribution, in JAX.
 
-The engine executes batches of transactions under six concurrency-control
+The engine executes batches of transactions under eight concurrency-control
 protocols with exact protocol logic and a documented multicore cost model:
 
   - twopl_waitdie      2PL + wait-die deadlock avoidance (timestamp aborts)
@@ -9,6 +9,8 @@ protocols with exact protocol logic and a documented multicore cost model:
   - deadlock_free      planned, canonical-order lock acquisition (P2 alone)
   - orthrus            partitioned CC lanes + message passing (P1 + P2)
   - partitioned_store  H-Store style coarse partition locks (baseline)
+  - dgcc               batch conflict-graph wavefronts, lock-free execution
+  - quecc              batch per-lane execution queues, lock-free execution
 """
 
 from repro.core.cost_model import CostModel

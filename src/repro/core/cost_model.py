@@ -68,6 +68,16 @@ class CostModel:
     # cycles_per_round // cc_op_cycles key-operations.
     cc_op_cycles: int = 150
 
+    # --- batch planning (DGCC / QueCC, paper P1+P2 pushed to batches) ---
+    # Planner-lane work to place one key-op into the batch's dependency
+    # graph / execution queues (hash + chain append, cache-local,
+    # vectorizable). Planning of batch b+1 is pipelined behind batch b's
+    # execution; the engine charges the pipeline's critical path.
+    batch_plan_cycles_per_op: int = 100
+    # Scheduler check that one predecessor has committed (a read of a
+    # single cache line owned by the scheduler — no coherence storm).
+    dep_check_cycles: int = 40
+
     # --- transaction logic ---
     # One stored-procedure op on a 1 KB record (probe + RMW + logic,
     # ~0.6 us — paper-scale one-shot stored procedures).

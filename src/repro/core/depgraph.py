@@ -1,0 +1,345 @@
+"""Batch dependency-graph planning: the DGCC / QueCC protocol family.
+
+The paper's two principles — functional separation (P1) and advance
+planning (P2) — are pushed furthest by systems that plan *entire batches*
+instead of single transactions:
+
+  - DGCC (Yao et al., arXiv 1503.03642) builds, per batch, the conflict
+    graph over transactions and executes it as *wavefronts*: topological
+    layers of mutually conflict-free transactions. Execution needs no lock
+    table at all — only "are my predecessors committed?" checks.
+  - QueCC (Qadah & Sadoghi, Middleware'18 / arXiv 1910.10350) partitions
+    the key space across planner lanes and materializes, per batch, one
+    totally-ordered *execution queue* per lane; a transaction runs when it
+    reaches the head of every queue it participates in. The execution
+    phase is completely lock-free and deterministic.
+
+This module is the host-side planner for both: vectorized numpy that takes
+a planned batch (keys/modes per transaction) and emits a
+:class:`BatchSchedule` — intra-batch dependency edges, wavefront levels,
+and (for QueCC) per-lane queue position stamps. The engine's batch round
+loop (``engine.make_batch_step``) consumes the schedule and performs the
+per-round readiness check with the same segmented primitive the
+``dep_wavefront`` Pallas kernel implements on device.
+
+Dependency-edge construction (``conflict_edges``) uses last-writer chains
+per key: sort all (txn, key, mode) accesses by (batch, key, txn) and emit
+
+  - a RAW/WAW edge from each access to the last *write* before it on the
+    same key (covers read-after-write and the write-after-write chain),
+  - a WAR edge from each *read* to the next write after it on the key.
+
+Every conflicting pair inside a batch is then connected by a directed path
+(write chains are totally ordered; readers hang off the chain in both
+directions), so longest-path levels are conflict-free — property-tested in
+``tests/test_core_depgraph.py``. Edge count is <= 2 ops per access, so the
+graph stays linear in batch size even on hot keys.
+
+QueCC edges (``queue_edges``) are coarser: each transaction depends on its
+immediate predecessor in every per-lane queue it touches (lane of key k =
+``part(k) % n_lanes``). Per-lane chains are total orders, so the same
+transitive argument applies at lane granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.lockgrant import KEY_SENTINEL
+from repro.core.workloads import MODE_WRITE
+
+_I64 = np.int64
+
+
+@dataclasses.dataclass
+class BatchSchedule:
+    """Engine-ready batch plan for dgcc / quecc.
+
+    All ``N`` indices are positions in the planned workload array (the
+    serial order the planner fixes); batches are contiguous runs of
+    ``batch_epoch`` transactions.
+    """
+
+    n_txns: int
+    batch_epoch: int
+    batch_of: np.ndarray  # int32[N] batch id of each txn
+    batch_start: np.ndarray  # int32[NB] first txn of each batch
+    batch_size: np.ndarray  # int32[NB]
+    plan_ops: np.ndarray  # int32[NB] key-ops planned per batch (cost model)
+    level: np.ndarray  # int32[N] wavefront level within the batch
+    npred: np.ndarray  # int32[N] in-degree (direct dependencies)
+    edge_dst: np.ndarray  # int32[E] dependent txn, sorted ascending
+    edge_src: np.ndarray  # int32[E] dependency txn (same batch, src < dst)
+    pred_pad: np.ndarray  # int32[N, P] direct predecessors, -1 padded
+    # QueCC only: per-(txn, lane) queue membership with position stamps.
+    queue_txn: np.ndarray | None = None  # int32[Q]
+    queue_lane: np.ndarray | None = None  # int32[Q]
+    queue_pos: np.ndarray | None = None  # int32[Q] 0-based within the queue
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.batch_start)
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.level.max()) + 1 if self.n_txns else 0
+
+
+# ---------------------------------------------------------------------------
+# segmented prefix helpers (host-side numpy, fully vectorized)
+# ---------------------------------------------------------------------------
+def _seg_last_true_before(seg_start: np.ndarray, flag: np.ndarray):
+    """For each position i, index of the last ``flag`` position strictly
+    before i within i's segment, or -1.
+
+    ``seg_start`` marks segment beginnings over an array sorted so that
+    each segment is contiguous.
+    """
+    m = len(seg_start)
+    if m == 0:
+        return np.full(0, -1, _I64)
+    idx = np.arange(m, dtype=_I64)
+    seg_id = np.cumsum(seg_start, dtype=_I64) - 1
+    # Monotone score: segment base dominates anything from earlier segments.
+    score = seg_id * (m + 1) + np.where(flag, idx + 1, 0)
+    acc = np.maximum.accumulate(score)
+    acc_excl = np.concatenate([[_I64(-1)], acc[:-1]])
+    rel = acc_excl - seg_id * (m + 1)
+    valid = rel > 0  # a flagged position exists before i in this segment
+    return np.where(valid, rel - 1, -1)
+
+
+def _seg_next_true_after(seg_start: np.ndarray, flag: np.ndarray):
+    """Mirror of ``_seg_last_true_before`` looking forward in the segment."""
+    m = len(seg_start)
+    if m == 0:
+        return np.full(0, -1, _I64)
+    # Segment starts of the reversed array are the segment *ends*.
+    seg_end = np.concatenate([seg_start[1:], [True]])
+    rev = _seg_last_true_before(seg_end[::-1], flag[::-1])
+    return np.where(rev >= 0, m - 1 - rev, -1)[::-1]
+
+
+def _dedupe_edges(dst: np.ndarray, src: np.ndarray):
+    """Unique (dst, src) pairs with self-edges removed, sorted by dst."""
+    keep = (dst >= 0) & (src >= 0) & (dst != src)
+    dst, src = dst[keep], src[keep]
+    packed = dst.astype(_I64) << 32 | src.astype(_I64)
+    packed = np.unique(packed)
+    return (packed >> 32).astype(np.int32), (packed & 0xFFFFFFFF).astype(
+        np.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# edge builders
+# ---------------------------------------------------------------------------
+def _flatten_ops(keys, modes, nkeys):
+    """Valid (txn, key, mode) triples from padded [N, K] arrays."""
+    n, k = keys.shape
+    valid = (np.arange(k)[None, :] < nkeys[:, None]) & (
+        keys != int(KEY_SENTINEL)
+    )
+    txn = np.broadcast_to(np.arange(n, dtype=_I64)[:, None], (n, k))[valid]
+    return txn, keys[valid].astype(_I64), modes[valid]
+
+
+def conflict_edges(keys, modes, nkeys, batch_of):
+    """DGCC record-level conflict edges (dst depends on src; src < dst)."""
+    txn, key, mode = _flatten_ops(keys, modes, nkeys)
+    batch = batch_of[txn].astype(_I64)
+    order = np.lexsort((txn, key, batch))
+    txn_s, key_s, batch_s = txn[order], key[order], batch[order]
+    is_write = mode[order] == MODE_WRITE
+    seg_start = np.concatenate(
+        [[True], (key_s[1:] != key_s[:-1]) | (batch_s[1:] != batch_s[:-1])]
+    )
+    # RAW / WAW: access -> last write before it on the key.
+    lastw = _seg_last_true_before(seg_start, is_write)
+    e1_dst = np.where(lastw >= 0, txn_s, -1)
+    e1_src = np.where(lastw >= 0, txn_s[np.maximum(lastw, 0)], -1)
+    # WAR: read -> next write after it on the key (that write depends on us).
+    nextw = _seg_next_true_after(seg_start, is_write)
+    war = (nextw >= 0) & ~is_write
+    e2_dst = np.where(war, txn_s[np.maximum(nextw, 0)], -1)
+    e2_src = np.where(war, txn_s, -1)
+    return _dedupe_edges(
+        np.concatenate([e1_dst, e2_dst]), np.concatenate([e1_src, e2_src])
+    )
+
+
+def queue_edges(keys, part, nkeys, batch_of, n_lanes: int):
+    """QueCC per-lane queue chains.
+
+    Returns (edge_dst, edge_src, queue_txn, queue_lane, queue_pos): each
+    transaction depends on the transaction immediately before it in every
+    per-(batch, lane) execution queue it belongs to.
+    """
+    n, k = keys.shape
+    valid = (np.arange(k)[None, :] < nkeys[:, None]) & (
+        keys != int(KEY_SENTINEL)
+    )
+    txn = np.broadcast_to(np.arange(n, dtype=_I64)[:, None], (n, k))[valid]
+    lane = (part[valid].astype(_I64)) % max(n_lanes, 1)
+    # dedupe (txn, lane) memberships
+    packed = np.unique(txn << 32 | lane)
+    txn_u = (packed >> 32).astype(_I64)
+    lane_u = (packed & 0xFFFFFFFF).astype(_I64)
+    batch_u = batch_of[txn_u].astype(_I64)
+    order = np.lexsort((txn_u, lane_u, batch_u))
+    txn_s, lane_s, batch_s = txn_u[order], lane_u[order], batch_u[order]
+    seg_start = np.concatenate(
+        [[True], (lane_s[1:] != lane_s[:-1]) | (batch_s[1:] != batch_s[:-1])]
+    )
+    # chain: previous queue member
+    prev = np.where(seg_start, -1, np.concatenate([[-1], txn_s[:-1]]))
+    dst, src = _dedupe_edges(
+        np.where(prev >= 0, txn_s, -1), prev
+    )
+    # queue position stamps (0-based within each (batch, lane) queue)
+    seg_id = np.cumsum(seg_start) - 1
+    first_idx = np.where(seg_start)[0]
+    pos = np.arange(len(txn_s), dtype=_I64) - first_idx[seg_id]
+    return (
+        dst,
+        src,
+        txn_s.astype(np.int32),
+        lane_s.astype(np.int32),
+        pos.astype(np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# wavefront levels (vectorized Kahn over all batches at once)
+# ---------------------------------------------------------------------------
+def wavefront_levels(n_txns: int, edge_dst, edge_src):
+    """Longest-path level per transaction (0 = no uncommitted predecessor).
+
+    Batches are independent subgraphs, so one Kahn sweep levels them all
+    simultaneously; iteration count = deepest batch's level count.
+    """
+    level = np.zeros(n_txns, np.int32)
+    remaining = np.bincount(edge_dst, minlength=n_txns).astype(np.int64)
+    if len(edge_dst) == 0:
+        return level
+    by_src = np.argsort(edge_src, kind="stable")
+    src_sorted = edge_src[by_src]
+    dst_by_src = edge_dst[by_src]
+    src_ptr = np.searchsorted(src_sorted, np.arange(n_txns + 1))
+    frontier = np.where(remaining == 0)[0]
+    lvl = 0
+    while frontier.size:
+        level[frontier] = lvl
+        starts, ends = src_ptr[frontier], src_ptr[frontier + 1]
+        counts = ends - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        base = np.repeat(starts, counts)
+        offs = np.arange(total) - np.repeat(
+            np.cumsum(counts) - counts, counts
+        )
+        dsts = dst_by_src[base + offs]
+        np.subtract.at(remaining, dsts, 1)
+        frontier = np.unique(dsts[remaining[dsts] == 0])
+        lvl += 1
+    assert (remaining == 0).all(), "dependency graph has a cycle"
+    return level
+
+
+def _pred_pad(n_txns: int, edge_dst, edge_src):
+    """Dense [N, P] direct-predecessor table (-1 padded), P = max in-degree.
+
+    This is the layout the engine's jitted round loop gathers from; it is
+    exactly the CSR edge list the ``dep_wavefront`` kernel consumes, padded
+    square (equivalence is property-tested).
+    """
+    npred = np.bincount(edge_dst, minlength=n_txns).astype(np.int32)
+    p = max(int(npred.max()) if len(edge_dst) else 0, 1)
+    pad = np.full((n_txns, p), -1, np.int32)
+    if len(edge_dst):
+        # edge_dst is sorted; position within its run:
+        first = np.searchsorted(edge_dst, edge_dst)
+        col = np.arange(len(edge_dst)) - first
+        pad[edge_dst, col] = edge_src
+    return pad, npred
+
+
+# ---------------------------------------------------------------------------
+# schedule construction
+# ---------------------------------------------------------------------------
+def build_schedule(
+    keys,
+    modes,
+    part,
+    nkeys,
+    batch_epoch: int,
+    *,
+    kind: str = "conflict",
+    n_lanes: int = 1,
+) -> BatchSchedule:
+    """Plan a workload into batches and build its dependency schedule.
+
+    kind = 'conflict' (DGCC record-level graph) or 'lane' (QueCC per-lane
+    queues over ``n_lanes`` planner lanes).
+    """
+    n = keys.shape[0]
+    b = max(int(batch_epoch), 1)
+    batch_of = (np.arange(n, dtype=np.int64) // b).astype(np.int32)
+    nb = int(batch_of[-1]) + 1 if n else 0
+    batch_start = (np.arange(nb, dtype=np.int64) * b).astype(np.int32)
+    batch_size = np.minimum(b, n - batch_start).astype(np.int32)
+    plan_ops = np.bincount(batch_of, weights=nkeys, minlength=nb).astype(
+        np.int32
+    )
+
+    queue_txn = queue_lane = queue_pos = None
+    if kind == "conflict":
+        edge_dst, edge_src = conflict_edges(keys, modes, nkeys, batch_of)
+    elif kind == "lane":
+        edge_dst, edge_src, queue_txn, queue_lane, queue_pos = queue_edges(
+            keys, part, nkeys, batch_of, n_lanes
+        )
+    else:
+        raise ValueError(f"unknown schedule kind: {kind}")
+
+    level = wavefront_levels(n, edge_dst, edge_src)
+    pred_pad, npred = _pred_pad(n, edge_dst, edge_src)
+    return BatchSchedule(
+        n_txns=n,
+        batch_epoch=b,
+        batch_of=batch_of,
+        batch_start=batch_start,
+        batch_size=batch_size,
+        plan_ops=plan_ops,
+        level=level,
+        npred=npred,
+        edge_dst=edge_dst,
+        edge_src=edge_src,
+        pred_pad=pred_pad,
+        queue_txn=queue_txn,
+        queue_lane=queue_lane,
+        queue_pos=queue_pos,
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side oracle
+# ---------------------------------------------------------------------------
+def simulate_wavefronts(sched: BatchSchedule) -> np.ndarray:
+    """Commit order of an idealized wavefront execution (batch-major,
+    level-major, txn-minor).
+
+    The deadlock-free oracle: every transaction commits exactly once, in an
+    order equivalent to the serial order the planner fixed. Tests compare
+    the engine's committed set against this.
+    """
+    return np.lexsort(
+        (
+            np.arange(sched.n_txns),
+            sched.level,
+            sched.batch_of,
+        )
+    ).astype(np.int32)

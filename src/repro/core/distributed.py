@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.lockgrant import (
     KEY_SENTINEL,
     REQ_NONE,
@@ -256,7 +257,7 @@ def make_engine(mesh: Mesh, cfg: DistConfig):
         state = jax.lax.fori_loop(0, cfg.rounds, round_body, state)
         return state["commits"].reshape(1)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P("cc", None), P("cc", None)),

@@ -1,9 +1,23 @@
-"""The ORTHRUS transaction engine: six protocols, one cycle-accounting core.
+"""The ORTHRUS transaction engine: eight protocols, one cycle-accounting core.
 
 The simulator advances in rounds (``CostModel.cycles_per_round`` cycles). In
 each round every lane interacts with the lock table at most once; waiting,
 message latency, CC-lane saturation, coherence backlog on hot records,
 deadlock handling and abort/retry all play out with exact protocol logic.
+
+Protocol families — the planning spectrum (P2) crossed with functional
+separation (P1):
+
+  family            planning          locks   protocols
+  ----------------- ----------------- ------- ---------------------------
+  dynamic           none (program     yes     twopl_waitdie, twopl_waitfor,
+                    order, inline)            twopl_dreadlocks
+  per-txn planned   access set +      yes     deadlock_free (P2),
+                    canonical order           orthrus (P1+P2),
+                                              partitioned_store (coarse)
+  batch planned     whole-batch       none    dgcc (conflict-graph
+                    dependency                wavefronts), quecc (per-lane
+                    graph / queues            execution queues)
 
 Protocols (``EngineConfig.protocol``):
   twopl_waitdie | twopl_waitfor | twopl_dreadlocks
@@ -18,6 +32,16 @@ Protocols (``EngineConfig.protocol``):
       outstanding transactions (P1 + P2).
   partitioned_store
       H-Store style: coarse partition locks, serial execution.
+  dgcc | quecc
+      batch planned (P1 + P2 at batch scope): planner lanes build, per
+      batch-epoch, a transaction dependency schedule (DGCC: record-level
+      conflict graph executed as wavefronts; QueCC: per-CC-lane
+      totally-ordered execution queues). Execution never touches a lock
+      table — a transaction starts when every planned predecessor has
+      committed (the ``dep_wavefront`` primitive), so there is no
+      deadlock handling, no abort path, and no coherence storm on record
+      meta-data; the costs are batch planning (pipelined behind the
+      previous batch) and per-dependency scheduler checks.
 
 Everything is jitted; the round loop runs in ``lax.fori_loop`` chunks.
 """
@@ -62,6 +86,8 @@ PROTOCOLS = (
     "deadlock_free",
     "orthrus",
     "partitioned_store",
+    "dgcc",
+    "quecc",
 )
 
 
@@ -84,6 +110,8 @@ class EngineConfig:
         assert self.protocol in PROTOCOLS, self.protocol
         if self.protocol == "orthrus":
             assert self.n_cc >= 1
+        if self.protocol == "quecc":
+            assert self.n_cc >= 1, "quecc needs n_cc planner/queue lanes"
 
     @property
     def n_slots(self) -> int:
@@ -92,6 +120,10 @@ class EngineConfig:
     @property
     def is_orthrus(self) -> bool:
         return self.protocol == "orthrus"
+
+    @property
+    def is_batch_planned(self) -> bool:
+        return self.protocol in ("dgcc", "quecc")
 
     @property
     def is_dynamic_2pl(self) -> bool:
@@ -321,7 +353,7 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
                 [jnp.ones((1,), jnp.bool_), cc_sorted[1:] != cc_sorted[:-1]]
             )
             pos_inc = jnp.cumsum(jnp.ones_like(cc_sorted))
-            base = jnp.maximum.accumulate(
+            base = jax.lax.cummax(
                 jnp.where(segstart, pos_inc - 1, jnp.iinfo(jnp.int32).min)
             )
             seg_pos = pos_inc - base  # 1-based within CC lane
@@ -785,6 +817,227 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
     return step
 
 
+def _batch_plan_rounds(cfg: EngineConfig, plan: planner_lib.Plan):
+    """Per-batch planning latency in rounds: planner lanes place every
+    key-op into the dependency graph / queues and run OLLP reconnaissance
+    for data-dependent access sets (P1: planners, not exec lanes)."""
+    cm = cfg.cost
+    sched = plan.sched
+    n_ollp = np.bincount(
+        sched.batch_of, weights=plan.ollp.astype(np.int64),
+        minlength=sched.num_batches,
+    )
+    plan_cycles = (
+        sched.plan_ops.astype(np.int64) * cm.batch_plan_cycles_per_op
+        + n_ollp.astype(np.int64) * cm.recon_cycles
+    ) // max(cfg.n_cc, 1)
+    return np.asarray(cm.rounds(plan_cycles), np.int32)  # [NB]
+
+
+def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
+    i32 = jnp.int32
+    sched = plan.sched
+    N = sched.n_txns
+    return dict(
+        r=jnp.zeros((), i32),
+        next_txn=jnp.zeros((), i32),
+        cur_batch=jnp.zeros((), i32),
+        bpos=jnp.zeros((), i32),
+        batch_left=jnp.asarray(int(sched.batch_size[0]), i32),
+        plan_fin=jnp.asarray(int(_batch_plan_rounds(cfg, plan)[0]), i32),
+        done=jnp.zeros((N,), jnp.bool_),
+        tid=jnp.full((T,), -1, i32),
+        widx=jnp.zeros((T,), i32),
+        ts=jnp.zeros((T,), i32),
+        phase=jnp.zeros((T,), i32),
+        busy_until=jnp.zeros((T,), i32),
+        busy_kind=jnp.zeros((T,), i32),
+        msg_arrive=jnp.zeros((T,), i32),
+        commits=jnp.zeros((), i32),
+        aborts_dl=jnp.zeros((), i32),
+        aborts_ollp=jnp.zeros((), i32),
+        wasted=jnp.zeros((), i32),
+        cat=jnp.zeros((NCAT,), i32),
+    )
+
+
+def make_batch_step(cfg: EngineConfig, plan: planner_lib.Plan):
+    """Jitted single-round transition for the batch-planned protocols
+    (dgcc / quecc): lock-free execution over a precomputed dependency
+    schedule.
+
+    The round loop performs only (a) batch-boundary bookkeeping, (b)
+    admission of the current batch's transactions to exec-lane slots, and
+    (c) the wavefront-eligibility check "all planned predecessors
+    committed" — the dense-gather formulation of the ``dep_wavefront``
+    kernel contract (equivalence is property-tested). There is no lock
+    table, no deadlock logic, and no abort path.
+    """
+    cm = cfg.cost
+    sched = plan.sched
+    assert sched is not None, "batch protocols require a planned schedule"
+    T = cfg.n_slots
+    N = sched.n_txns
+    W = cfg.window
+    NB = sched.num_batches
+
+    wexec = jnp.asarray(plan.exec_ops, jnp.int32)
+    wnpred = jnp.asarray(sched.npred, jnp.int32)
+    pred_pad = jnp.asarray(sched.pred_pad, jnp.int32)  # [N, P]
+    batch_of = jnp.asarray(sched.batch_of, jnp.int32)  # [N]
+    bstart = jnp.asarray(sched.batch_start, jnp.int32)  # [NB]
+    bsize = jnp.asarray(sched.batch_size, jnp.int32)
+    plan_rounds = jnp.asarray(_batch_plan_rounds(cfg, plan))  # [NB]
+
+    lane_of = jnp.arange(T, dtype=jnp.int32) // W
+    shared_index = not cfg.split_index
+    exec_cycles_per_op = cm.exec_op_cycles + (
+        cm.shared_index_penalty_cycles if shared_index else 0
+    )
+    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+    exec_rounds_one = rounds_of(exec_cycles_per_op)
+    imax = jnp.iinfo(jnp.int32).max
+
+    def step(_, s):
+        r = s["r"]
+
+        # -------------------------------------------- 1. batch rollover
+        # When every transaction of the current batch has committed, open
+        # the next one. Planning is pipelined: planners started on the
+        # next batch the moment they finished this one, so the new
+        # batch's plan-ready round advances by its own planning span.
+        adv = s["batch_left"] == 0
+        new_b = jnp.where(adv, (s["cur_batch"] + 1) % NB, s["cur_batch"])
+        s["done"] = jnp.where(adv & (batch_of == new_b), False, s["done"])
+        s["bpos"] = jnp.where(adv, bstart[new_b], s["bpos"])
+        s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
+        s["plan_fin"] = jnp.where(
+            adv, s["plan_fin"] + plan_rounds[new_b], s["plan_fin"]
+        )
+        s["cur_batch"] = new_b
+
+        # -------------------------------------------- 2. admission
+        # Empty slots pull the next positions of the current batch, in
+        # the planner's serial order, once the batch's plan is ready.
+        empty = s["phase"] == EMPTY
+        rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
+        pos = s["bpos"] + rank
+        bend = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
+        adm = empty & (pos < bend) & (r >= s["plan_fin"])
+        s["widx"] = jnp.where(adm, pos, s["widx"])
+        new_tid = s["next_txn"] + rank
+        s["tid"] = jnp.where(adm, new_tid, s["tid"])
+        s["ts"] = jnp.where(adm, new_tid, s["ts"])
+        n_adm = adm.sum(dtype=jnp.int32)
+        s["bpos"] = s["bpos"] + n_adm
+        s["next_txn"] = s["next_txn"] + n_adm
+        npred_t = wnpred[s["widx"]]
+        init_busy = rounds_of(
+            cm.txn_fixed_cycles + npred_t * cm.dep_check_cycles
+        )
+        s["phase"] = jnp.where(adm, INIT, s["phase"])
+        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
+        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
+
+        # -------------------------------------------- 3. INIT -> MSG
+        # The exec lane fetches its next planned entry from the scheduler
+        # queue: one SPSC hop (functional separation, as in ORTHRUS).
+        free = s["busy_until"] <= r
+        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
+        s["phase"] = jnp.where(start, MSG, s["phase"])
+        s["msg_arrive"] = jnp.where(
+            start, r + cm.msg_hop_rounds, s["msg_arrive"]
+        )
+        got = (s["phase"] == MSG) & (s["msg_arrive"] <= r)
+        s["phase"] = jnp.where(got, READY, s["phase"])
+
+        # -------------------------------------------- 4. wavefront check
+        # "All planned predecessors committed" — the dep_wavefront
+        # primitive in dense per-slot form.
+        preds = pred_pad[s["widx"]]  # [T, P]
+        pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
+        dep_ok = pred_ok.all(axis=1)
+        ready = (s["phase"] == READY) & dep_ok
+
+        # -------------------------------------------- 5. lane scheduling
+        busy = s["busy_until"] > r
+        lane_busy = jax.ops.segment_sum(
+            ((s["phase"] == EXEC) & busy).astype(jnp.int32),
+            lane_of,
+            num_segments=cfg.n_exec,
+        )
+        ready_ts = jnp.where(ready, s["ts"], imax)
+        lane_min = jax.ops.segment_min(
+            ready_ts, lane_of, num_segments=cfg.n_exec
+        )
+        startx = (
+            ready
+            & (ready_ts == lane_min[lane_of])
+            & (lane_busy[lane_of] == 0)
+        )
+        exec_t = wexec[s["widx"]]
+        s["phase"] = jnp.where(startx, EXEC, s["phase"])
+        s["busy_until"] = jnp.where(
+            startx, r + exec_t * exec_rounds_one, s["busy_until"]
+        )
+        s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+
+        # -------------------------------------------- 6. commit
+        # No locks to release and no abort path: planned execution is
+        # conflict-free by construction.
+        free = s["busy_until"] <= r
+        fin = (s["phase"] == EXEC) & free
+        s["done"] = s["done"].at[jnp.where(fin, s["widx"], N)].set(
+            True, mode="drop"
+        )
+        ncom = fin.sum(dtype=jnp.int32)
+        s["commits"] = s["commits"] + ncom
+        s["batch_left"] = s["batch_left"] - ncom
+        s["phase"] = jnp.where(fin, EMPTY, s["phase"])
+        s["tid"] = jnp.where(fin, -1, s["tid"])
+
+        # -------------------------------------------- 7. lane accounting
+        busy2 = s["busy_until"] > r
+        slot_cat = jnp.where(
+            busy2,
+            s["busy_kind"],
+            jnp.where(
+                s["phase"] == MSG,
+                CAT_MSG,
+                jnp.where(s["phase"] == READY, CAT_WAIT, CAT_IDLE),
+            ),
+        )
+        lane_exec = jax.ops.segment_max(
+            (busy2 & (slot_cat == CAT_EXEC)).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_wait = jax.ops.segment_max(
+            (slot_cat == CAT_WAIT).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_msg = jax.ops.segment_max(
+            (slot_cat == CAT_MSG).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_cat = jnp.where(
+            lane_exec == 1,
+            CAT_EXEC,
+            jnp.where(lane_wait == 1, CAT_WAIT,
+                      jnp.where(lane_msg == 1, CAT_MSG, CAT_IDLE)),
+        )
+        cat_counts = jax.ops.segment_sum(
+            jnp.ones((cfg.n_exec,), jnp.int32),
+            lane_cat,
+            num_segments=NCAT,
+        )
+        s["cat"] = s["cat"] + cat_counts
+
+        s["r"] = r + 1
+        return s
+
+    return step
+
+
 def _compact_keys(plan: planner_lib.Plan) -> planner_lib.Plan:
     """Remap record keys to a dense id space (simulation-side compaction).
 
@@ -815,18 +1068,27 @@ def run_simulation(
         plan = planner_lib.plan_sorted(workload)
     elif cfg.protocol == "partitioned_store":
         plan = planner_lib.plan_partition_store(workload, cfg.n_exec)
+    elif cfg.protocol == "dgcc":
+        plan = planner_lib.plan_dgcc(workload, workload.cfg.batch_epoch)
+    elif cfg.protocol == "quecc":
+        plan = planner_lib.plan_quecc(
+            workload, max(cfg.n_cc, 1), workload.cfg.batch_epoch
+        )
     else:
         plan = planner_lib.plan_dynamic(workload)
-    plan = _compact_keys(plan)
 
     T, K = cfg.n_slots, plan.keys.shape[1]
-    step = make_step(cfg, plan)
+    if cfg.is_batch_planned:
+        step = make_batch_step(cfg, plan)
+        state = _batch_state0(cfg, plan, T)
+    else:
+        plan = _compact_keys(plan)
+        step = make_step(cfg, plan)
+        state = _state0(cfg, plan.num_records, T, K)
 
     @functools.partial(jax.jit, donate_argnums=0)
     def run_chunk(state):
         return jax.lax.fori_loop(0, cfg.chunk_rounds, step, state)
-
-    state = _state0(cfg, plan.num_records, T, K)
     warm_commits = 0
     warm_aborts = 0
     warm_cat = np.zeros(NCAT, np.int64)

@@ -28,6 +28,7 @@ sorting by (key, ts) uses two stable argsorts instead of a packed composite.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 REQ_READ = 0
@@ -78,7 +79,7 @@ def segmented_grant(keys, ts, kind, wh_free, rc, weight=None):
     def seg_cumsum(x):
         """Inclusive segmented cumsum of int32 x along the sorted order."""
         total = jnp.cumsum(x)
-        base = jnp.maximum.accumulate(
+        base = jax.lax.cummax(
             jnp.where(seg_start, total - x, _I32_MIN)
         )
         return total - base
@@ -127,7 +128,7 @@ def segment_sum_by_key(keys, weight):
     )
     seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
     total = jnp.cumsum(weight[order])
-    base = jnp.maximum.accumulate(
+    base = jax.lax.cummax(
         jnp.where(seg_start, total - weight[order], _I32_MIN)
     )
     return _segment_broadcast_last(total - base, seg_id)[inv]

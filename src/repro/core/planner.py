@@ -15,6 +15,15 @@ request and the canonical order in which it requests them:
                               CC_i -> CC_{i+1} (N_cc + 1 messages, §3.3).
   - ``plan_partition_store``— H-Store baseline: the lock set becomes the set
                               of *partition* locks, sorted (coarse-grain CC).
+  - ``plan_dgcc``           — DGCC: batch-level planning; per batch the
+                              planner builds the transaction conflict graph
+                              (last-writer chains per key) and wavefront
+                              levels; execution is lock-free (dependency
+                              checks only).
+  - ``plan_quecc``          — QueCC: batch-level planning; per batch the
+                              planner materializes one totally-ordered
+                              execution queue per CC lane with intra-batch
+                              dependency stamps; execution is lock-free.
 
 Deadlock freedom of the sorted plans is structural: a transaction never
 waits on lock j while holding a lock that sorts after j, so the waits-for
@@ -38,6 +47,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import depgraph as depgraph_lib
 from repro.core.lockgrant import KEY_SENTINEL
 from repro.core.workloads import MODE_WRITE, Workload
 
@@ -58,6 +68,9 @@ class Plan:
     # (partitioned-store executes a txn on its home partition's worker, so
     # single-partition spinlocks stay core-local).
     lane_stream: np.ndarray | None = None
+    # Batch-planned protocols (dgcc / quecc): the per-batch dependency
+    # schedule (conflict graph + wavefront levels, or per-lane queues).
+    sched: depgraph_lib.BatchSchedule | None = None
 
 
 def _reorder(w: Workload, order: np.ndarray) -> Plan:
@@ -100,6 +113,42 @@ def plan_orthrus(w: Workload, n_cc: int) -> Plan:
     composite = cc * (1 << 32) + w.keys.astype(np.int64)
     order = np.argsort(composite, axis=1, kind="stable")
     return _reorder(w, order)
+
+
+def plan_dgcc(w: Workload, batch_epoch: int) -> Plan:
+    """DGCC: batch dependency-graph planning over the program-order batch.
+
+    Execution acquires no locks, so key order inside a transaction is
+    irrelevant; the schedule fixes the serial order (= submission order)
+    and the conflict-graph wavefronts. OLLP reconnaissance stays charged
+    (the planner must know the full access set to build the graph), but
+    estimate misses never reach execution: the planner corrects the graph
+    before the batch is released, so ``ollp_miss`` is cleared.
+    """
+    n, k = w.keys.shape
+    p = _reorder(w, np.broadcast_to(np.arange(k), (n, k)).copy())
+    p.ollp_miss = np.zeros(n, bool)
+    p.sched = depgraph_lib.build_schedule(
+        p.keys, p.modes, p.part, p.nkeys, batch_epoch, kind="conflict"
+    )
+    return p
+
+
+def plan_quecc(w: Workload, n_cc: int, batch_epoch: int) -> Plan:
+    """QueCC: per-CC-lane execution queues with dependency stamps.
+
+    CC lane of a key is ``part % n_cc`` (as in ORTHRUS); per batch each
+    lane's queue is totally ordered by submission order, and a transaction
+    depends on its immediate predecessor in every queue it appears in.
+    """
+    n, k = w.keys.shape
+    p = _reorder(w, np.broadcast_to(np.arange(k), (n, k)).copy())
+    p.ollp_miss = np.zeros(n, bool)
+    p.sched = depgraph_lib.build_schedule(
+        p.keys, p.modes, p.part, p.nkeys, batch_epoch,
+        kind="lane", n_lanes=n_cc,
+    )
+    return p
 
 
 def plan_partition_store(w: Workload, n_partitions: int) -> Plan:

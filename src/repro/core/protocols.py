@@ -1,4 +1,4 @@
-"""Protocol registry: the six concurrency-control designs under test.
+"""Protocol registry: the eight concurrency-control designs under test.
 
 Thin façade over ``repro.core.engine`` — the engine implements all
 protocols over one cycle-accounting core; this module names them, maps
@@ -51,6 +51,18 @@ REGISTRY = {
         "partition set, sorted; home-partition execution",
         "ordered coarse partition locks", "§4.3",
     ),
+    "dgcc": ProtocolInfo(
+        "DGCC (batch conflict-graph wavefronts)",
+        "whole-batch dependency graph; lock-free wavefront execution",
+        "structurally impossible (acyclic batch DAG); no lock table",
+        "P1+P2 at batch scope; Yao et al., arXiv 1503.03642",
+    ),
+    "quecc": ProtocolInfo(
+        "QueCC (batch per-lane execution queues)",
+        "whole-batch per-CC-lane totally-ordered queues + dep stamps",
+        "structurally impossible (per-lane total orders); no lock table",
+        "P1+P2 at batch scope; Qadah & Sadoghi, arXiv 1910.10350",
+    ),
 }
 
 PLANNERS = {
@@ -60,6 +72,8 @@ PLANNERS = {
     "deadlock_free": planner_lib.plan_sorted,
     "orthrus": planner_lib.plan_orthrus,
     "partitioned_store": planner_lib.plan_partition_store,
+    "dgcc": planner_lib.plan_dgcc,
+    "quecc": planner_lib.plan_quecc,
 }
 
 assert set(REGISTRY) == set(PROTOCOLS)

@@ -39,6 +39,11 @@ class WorkloadConfig:
     kind: str = "ycsb"  # 'ycsb' | 'tpcc'
     num_txns: int = 1 << 15
     seed: int = 0
+    # Batch-epoch size for batch-planned protocols (dgcc / quecc): how many
+    # transactions the planner groups into one dependency-graph / queue
+    # batch. Larger epochs amortize planning and widen wavefronts but add
+    # batching latency.
+    batch_epoch: int = 512
 
     # --- YCSB (Appendix A): 10M x 1KB records, 10 ops/txn ---
     num_records: int = 10_000_000

@@ -9,6 +9,8 @@ This container is CPU-only: kernels are validated with interpret=True
 against their oracles across shape/dtype sweeps (tests/test_kernels_*).
 
   lock_grant      — segmented FIFO lock-grant (the lock manager's hot loop)
+  dep_wavefront   — segmented dependency-miss scan (dgcc/quecc wavefront
+                    eligibility: all planned predecessors committed)
   moe_dispatch    — canonical-order capacity-bounded dispatch plan (P2)
   flash_attention — blocked online-softmax attention (full/SWA/chunked)
   rwkv6_scan      — RWKV6 WKV recurrence, time-chunked with VMEM state

@@ -1,0 +1,3 @@
+from repro.kernels.dep_wavefront.ops import dep_wavefront_ready
+
+__all__ = ["dep_wavefront_ready"]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: segmented dependency-miss counts over sorted edges.
+
+Tiling: 1-D grid over edge blocks of ``block_n``; each block lives in
+VMEM. The segmented prefix state (last dst seen, running miss / edge
+counts for the segment crossing the block boundary) is carried across
+grid steps in SMEM scratch — TPU grids execute sequentially, so the carry
+is the standard Pallas pattern for cross-block scans (same structure as
+the ``lock_grant`` kernel).
+
+This is the DGCC/QueCC scheduler's inner loop: on a real deployment one
+scheduler TensorCore evaluates per-round wavefront eligibility for the
+whole batch with this kernel while execution cores run transaction logic —
+the planned, queue-oriented analogue of the ORTHRUS CC-lane kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lockgrant import KEY_SENTINEL
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _kernel(dst_ref, ok_ref, miss_ref, pos_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        carry_ref[0] = jnp.iinfo(jnp.int32).min  # last dst (none)
+        carry_ref[1] = 0  # running miss count in open segment
+        carry_ref[2] = 0  # running edge count
+
+    dst = dst_ref[...]
+    ok = ok_ref[...]
+    active = dst != KEY_SENTINEL
+
+    prev_dst = jnp.concatenate(
+        [jnp.full((1,), carry_ref[0], jnp.int32), dst[:-1]]
+    )
+    seg_start = (dst != prev_dst) | ~active
+
+    def seg_cumsum(x, carry_base):
+        total = jnp.cumsum(x) + carry_base
+        base = jax.lax.cummax(jnp.where(seg_start, total - x, _I32_MIN))
+        # if no segment start yet in this block, base stays at the carried
+        # segment's origin (0 by construction of `total + carry_base`)
+        base = jnp.maximum(base, 0)
+        return total - base
+
+    miss = seg_cumsum((active & ~ok).astype(jnp.int32), carry_ref[1])
+    pos = seg_cumsum(active.astype(jnp.int32), carry_ref[2])
+    miss_ref[...] = miss
+    pos_ref[...] = pos
+
+    # carry out: state of the (possibly open) final segment
+    carry_ref[0] = dst[-1]
+    carry_ref[1] = miss[-1]
+    carry_ref[2] = pos[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dep_wavefront_kernel(dst, src_ok, *, block_n=1024, interpret=True):
+    n = dst.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    bs = lambda: pl.BlockSpec((block_n,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[bs(), bs()],
+        out_specs=(bs(), bs()),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.SMEM((3,), jnp.int32)],
+        interpret=interpret,
+    )(dst, src_ok)

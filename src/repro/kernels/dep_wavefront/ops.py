@@ -1,0 +1,63 @@
+"""jit'd wrapper for the dep_wavefront kernel.
+
+Handles sorting by dst, padding to the block size, the XLA-side
+segment-total broadcast, and the scatter back to per-transaction
+readiness — so callers get the engine-facing contract: given a batch's
+dependency edges and the committed bitmap, which transactions have every
+predecessor committed?
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lockgrant import KEY_SENTINEL, _segment_broadcast_last
+from repro.kernels.dep_wavefront.kernel import dep_wavefront_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_txns", "block_n", "interpret")
+)
+def dep_wavefront_ready(edge_dst, edge_src, done, *, num_txns,
+                        block_n=1024, interpret=True):
+    """ready[t] = every dependency edge into t has a committed source.
+
+    Args:
+      edge_dst: int32[E] dependent txn per edge; KEY_SENTINEL = padding.
+      edge_src: int32[E] dependency txn per edge (ignored for padding).
+      done:     bool[N] committed bitmap over transactions.
+
+    Returns bool[num_txns]; transactions with no edges are ready.
+    """
+    n = edge_dst.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        edge_dst = jnp.concatenate(
+            [edge_dst, jnp.full((pad,), KEY_SENTINEL, edge_dst.dtype)]
+        )
+        edge_src = jnp.concatenate(
+            [edge_src, jnp.zeros((pad,), edge_src.dtype)]
+        )
+    src_ok = done[jnp.clip(edge_src, 0, num_txns - 1)] | (
+        edge_dst == KEY_SENTINEL
+    )
+
+    order = jnp.argsort(edge_dst, stable=True)
+    ds = edge_dst[order]
+    miss, _pos = dep_wavefront_kernel(
+        ds, src_ok[order], block_n=block_n, interpret=interpret
+    )
+    # segment-total miss from the kernel's prefix counts
+    active = ds != KEY_SENTINEL
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), ds[1:] != ds[:-1]]
+    ) | ~active
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    total_miss = _segment_broadcast_last(miss, seg_id)
+    ready = jnp.ones((num_txns,), jnp.bool_)
+    return ready.at[jnp.where(active, ds, num_txns)].min(
+        total_miss == 0, mode="drop"
+    )

@@ -1,0 +1,48 @@
+"""Oracle for the dep_wavefront kernel: segmented prefix counts over a
+batch's dependency edges.
+
+Contract (mirrors ``lock_grant``): entries are the batch's dependency
+edges sorted by dependent transaction (``dst``); padding entries carry
+``dst == KEY_SENTINEL``. For each edge the kernel emits prefix statistics
+of its dst segment:
+
+  miss[i]  inclusive count of edges so far in the segment whose source
+           transaction has NOT committed,
+  pos[i]   inclusive count of edges so far in the segment.
+
+A transaction is wavefront-eligible ("all predecessors committed ->
+ready") exactly when its segment's total miss count is zero — the
+segment-total broadcast and the scatter back to transaction ids are
+embarrassingly parallel and live in ops.py on the XLA side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lockgrant import KEY_SENTINEL
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def dep_wavefront_ref(dst, src_ok):
+    """Edges sorted by dst; padding dst == KEY_SENTINEL.
+
+    Returns (miss int32[E], pos int32[E]) — inclusive prefix counts of
+    not-committed sources / of all edges within each dst segment.
+    """
+    active = dst != KEY_SENTINEL
+    seg_start = (
+        jnp.concatenate([jnp.ones((1,), jnp.bool_), dst[1:] != dst[:-1]])
+        | ~active
+    )
+
+    def seg_cumsum(x):
+        total = jnp.cumsum(x)
+        base = jax.lax.cummax(jnp.where(seg_start, total - x, _I32_MIN))
+        return total - base
+
+    miss = seg_cumsum((active & ~src_ok).astype(jnp.int32))
+    pos = seg_cumsum(active.astype(jnp.int32))
+    return miss, pos

@@ -51,7 +51,7 @@ def _kernel(keys_ref, kind_ref, whfree_ref, rc_ref,
 
     def seg_cumsum(x, carry_base):
         total = jnp.cumsum(x) + carry_base
-        base = jnp.maximum.accumulate(
+        base = jax.lax.cummax(
             jnp.where(seg_start, total - x, _I32_MIN)
         )
         # if no segment start yet in this block, base stays at the carried

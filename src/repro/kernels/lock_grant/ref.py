@@ -9,6 +9,7 @@ live in ops.py on the XLA side.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.lockgrant import (
@@ -38,7 +39,7 @@ def lock_grant_ref(keys, kind, wh_free, rc):
 
     def seg_cumsum(x):
         total = jnp.cumsum(x)
-        base = jnp.maximum.accumulate(
+        base = jax.lax.cummax(
             jnp.where(seg_start, total - x, _I32_MIN)
         )
         return total - base

@@ -34,7 +34,7 @@ def _kernel(e_ref, pos_ref, keep_ref, carry_ref, *, capacity):
     seg_start = (e != prev) | ~active
     ones = active.astype(jnp.int32)
     total = jnp.cumsum(ones) + carry_ref[1]
-    base = jnp.maximum.accumulate(
+    base = jax.lax.cummax(
         jnp.where(seg_start, total - ones, _I32_MIN)
     )
     base = jnp.maximum(base, 0)

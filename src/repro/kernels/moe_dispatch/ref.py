@@ -9,6 +9,7 @@ twin of the lock-grant kernel.)
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 _I32_MIN = jnp.iinfo(jnp.int32).min
@@ -24,7 +25,7 @@ def dispatch_positions_ref(experts_sorted, capacity):
     )
     ones = active.astype(jnp.int32)
     total = jnp.cumsum(ones)
-    base = jnp.maximum.accumulate(
+    base = jax.lax.cummax(
         jnp.where(seg_start, total - ones, _I32_MIN)
     )
     pos = total - base - 1  # 0-based within expert

@@ -121,7 +121,7 @@ def plan_dispatch(router_probs, top_k, capacity):
     )
     ones = jnp.ones_like(ee_s)
     total = jnp.cumsum(ones)
-    base = jnp.maximum.accumulate(
+    base = jax.lax.cummax(
         jnp.where(seg_start, total - ones, jnp.iinfo(jnp.int32).min)
     )
     pos = total - base - 1  # 0-based position within expert

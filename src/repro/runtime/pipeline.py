@@ -21,6 +21,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -80,7 +82,7 @@ def pipeline_forward(stage_fn, params, x_micro, *, mesh: Mesh,
         jax.tree.map(lambda _: P(axis), params),
         P(),
     )
-    return jax.shard_map(
+    return shard_map(
         shard_body, mesh=mesh, in_specs=in_specs, out_specs=P(),
         check_vma=False,
     )(params, x_micro)

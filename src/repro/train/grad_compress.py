@@ -17,6 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -58,7 +60,7 @@ def compressed_psum_pod(grads, err_state, mesh):
             return tot / mesh.shape["pod"]
 
         spec = P()  # payload replicated over 'pod'; other axes untouched
-        red = jax.shard_map(
+        red = shard_map(
             inner, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
             check_vma=False,
         )(q, scale)

@@ -1,0 +1,251 @@
+"""Batch dependency-graph planning (dgcc / quecc): schedule structure,
+wavefront conflict-freedom, commit-set equivalence with the deadlock-free
+oracle, and dep_wavefront kernel-vs-oracle equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import depgraph as dg
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.lockgrant import KEY_SENTINEL
+from repro.core.workloads import (
+    MODE_READ,
+    MODE_WRITE,
+    WorkloadConfig,
+    make_workload,
+)
+from repro.kernels.dep_wavefront.kernel import dep_wavefront_kernel
+from repro.kernels.dep_wavefront.ops import dep_wavefront_ready
+from repro.kernels.dep_wavefront.ref import dep_wavefront_ref
+
+BATCH = 128
+FAST = dict(max_rounds=4000, warmup_rounds=1000, chunk_rounds=1000,
+            target_commits=10_000)
+
+
+@pytest.fixture(scope="module")
+def ycsb():
+    # partition-constrained (2 partitions/txn) so quecc's per-lane queues
+    # stay shallow — the partition-friendly regime queue-oriented schemes
+    # are designed for
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=50_000,
+                       num_hot=32, partitions_per_txn=2, num_partitions=16,
+                       seed=0, batch_epoch=BATCH)
+    )
+
+
+@pytest.fixture(scope="module")
+def tpcc():
+    return make_workload(
+        WorkloadConfig(kind="tpcc", num_txns=512, num_warehouses=8,
+                       seed=3, batch_epoch=BATCH)
+    )
+
+
+def _schedules(wl):
+    return [
+        dg.build_schedule(wl.keys, wl.modes, wl.part, wl.nkeys, BATCH,
+                          kind="conflict"),
+        dg.build_schedule(wl.keys, wl.modes, wl.part, wl.nkeys, BATCH,
+                          kind="lane", n_lanes=4),
+    ]
+
+
+def _assert_levels_conflict_free(wl, sched):
+    """No two same-batch same-level txns share a key one of them writes."""
+    n, k = wl.keys.shape
+    valid = (np.arange(k)[None, :] < wl.nkeys[:, None]) & (
+        wl.keys != int(KEY_SENTINEL)
+    )
+    txn = np.broadcast_to(np.arange(n)[:, None], (n, k))[valid]
+    key = wl.keys[valid].astype(np.int64)
+    wr = (wl.modes[valid] == MODE_WRITE).astype(np.int64)
+    grp = (
+        sched.batch_of[txn].astype(np.int64) << 40
+        | sched.level[txn].astype(np.int64) << 24
+        | key
+    )
+    order = np.lexsort((txn, grp))
+    grp, txn, wr = grp[order], txn[order], wr[order]
+    _, inv = np.unique(grp, return_inverse=True)
+    nwrites = np.bincount(inv, weights=wr)
+    # distinct txns per group: count first occurrences of (group, txn)
+    gt = grp << 20 | txn  # txn < 2**20 in these tests
+    ndistinct = np.bincount(inv, weights=np.concatenate(
+        [[1], (np.diff(gt) != 0).astype(np.int64)]
+    ))
+    assert not ((nwrites >= 1) & (ndistinct >= 2)).any(), (
+        "conflicting transactions share a wavefront level"
+    )
+
+
+@pytest.mark.parametrize("wl_name", ["ycsb", "tpcc"])
+def test_schedule_structure(wl_name, request):
+    wl = request.getfixturevalue(wl_name)
+    for s in _schedules(wl):
+        assert (s.edge_src < s.edge_dst).all()  # deps point backward
+        assert (np.diff(s.edge_dst) >= 0).all()  # CSR sorted by dst
+        assert (s.batch_of[s.edge_src] == s.batch_of[s.edge_dst]).all()
+        assert (s.level[s.edge_src] < s.level[s.edge_dst]).all()
+        assert ((s.pred_pad >= 0).sum(axis=1) == s.npred).all()
+        assert s.batch_size.sum() == s.n_txns
+
+
+@pytest.mark.parametrize("wl_name", ["ycsb", "tpcc"])
+def test_wavefront_levels_conflict_free(wl_name, request):
+    wl = request.getfixturevalue(wl_name)
+    for s in _schedules(wl):
+        _assert_levels_conflict_free(wl, s)
+
+
+def test_quecc_queues_totally_ordered(ycsb):
+    s = dg.build_schedule(ycsb.keys, ycsb.modes, ycsb.part, ycsb.nkeys,
+                          BATCH, kind="lane", n_lanes=4)
+    q = np.lexsort((s.queue_pos, s.queue_lane,
+                    s.batch_of[s.queue_txn]))
+    txn, lane, pos = s.queue_txn[q], s.queue_lane[q], s.queue_pos[q]
+    batch = s.batch_of[txn]
+    same_q = (np.diff(lane) == 0) & (np.diff(batch) == 0)
+    # positions are consecutive and txns ascend within each queue
+    assert (np.diff(pos)[same_q] == 1).all()
+    assert (np.diff(txn)[same_q] > 0).all()
+    # dependency stamps respect queue order: level ascends along the queue
+    assert (np.diff(s.level[txn])[same_q] > 0).all()
+
+
+def test_wavefront_levels_tiny_chain():
+    # txn0 -> txn1 -> txn2 (WW chain) and txn3 independent
+    dst = np.array([1, 2], np.int32)
+    src = np.array([0, 1], np.int32)
+    level = dg.wavefront_levels(4, dst, src)
+    assert level.tolist() == [0, 1, 2, 0]
+
+
+@pytest.mark.parametrize("wl_name", ["ycsb", "tpcc"])
+def test_oracle_commit_set_complete(wl_name, request):
+    wl = request.getfixturevalue(wl_name)
+    for s in _schedules(wl):
+        order = dg.simulate_wavefronts(s)
+        # the deadlock-free oracle's commit set: every planned txn, once
+        assert sorted(order.tolist()) == list(range(s.n_txns))
+        # commit order respects batches and levels
+        assert (np.diff(s.batch_of[order]) >= 0).all()
+
+
+@pytest.mark.parametrize(
+    "protocol,kw",
+    [
+        ("dgcc", dict(n_cc=4, n_exec=16, window=4)),
+        ("quecc", dict(n_cc=8, n_exec=16, window=4)),
+    ],
+)
+@pytest.mark.parametrize("wl_name", ["ycsb", "tpcc"])
+def test_engine_commit_set_matches_oracle(wl_name, protocol, kw, request):
+    """dgcc/quecc commit every planned transaction with zero aborts —
+    the same committed set as the deadlock-free oracle — end-to-end
+    through EngineConfig."""
+    wl = request.getfixturevalue(wl_name)
+    n = wl.keys.shape[0]
+    cfg = EngineConfig(protocol=protocol, **kw, max_rounds=60_000,
+                       warmup_rounds=0, chunk_rounds=2000,
+                       target_commits=n)
+    res = run_simulation(cfg, wl)
+    assert res.commits >= n, f"{protocol} did not finish a workload pass"
+    assert res.aborts_deadlock == 0 and res.aborts_ollp == 0, (
+        "batch-planned execution must be abort-free"
+    )
+
+
+def test_batch_protocols_beat_locking_under_high_contention():
+    hi = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=2048, num_records=200_000,
+                       num_hot=8, seed=3, batch_epoch=256)
+    )
+    thr = {}
+    for proto, kw in [("dgcc", dict(n_cc=4, n_exec=32, window=4)),
+                      ("twopl_dreadlocks", dict(n_exec=32))]:
+        cfg = EngineConfig(protocol=proto, **kw, **FAST)
+        thr[proto] = run_simulation(cfg, hi).throughput_txn_s
+    assert thr["dgcc"] > thr["twopl_dreadlocks"], thr
+
+
+# ---------------------------------------------------------------------------
+# dep_wavefront kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 256), (555, 128)])
+def test_dep_wavefront_kernel_vs_ref(n, block):
+    rng = np.random.default_rng(n)
+    n_txns = 64
+    dst = np.sort(rng.integers(0, n_txns, n)).astype(np.int32)
+    ok = rng.random(n) < 0.7
+    pad = (-n) % block
+    dstp = np.concatenate(
+        [dst, np.full(pad, int(KEY_SENTINEL), np.int32)]
+    )
+    okp = np.concatenate([ok, np.ones(pad, bool)])
+    m0, p0 = dep_wavefront_ref(jnp.asarray(dstp), jnp.asarray(okp))
+    m1, p1 = dep_wavefront_kernel(
+        jnp.asarray(dstp), jnp.asarray(okp), block_n=block
+    )
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+
+@pytest.mark.parametrize("wl_name", ["ycsb", "tpcc"])
+def test_dep_wavefront_matches_engine_dense_check(wl_name, request):
+    """Kernel readiness == the engine's dense pred_pad formulation."""
+    wl = request.getfixturevalue(wl_name)
+    for s in _schedules(wl):
+        rng = np.random.default_rng(1)
+        for _ in range(3):
+            done = rng.random(s.n_txns) < rng.random()
+            dense = (
+                (s.pred_pad < 0) | done[np.maximum(s.pred_pad, 0)]
+            ).all(axis=1)
+            kern = np.asarray(dep_wavefront_ready(
+                jnp.asarray(s.edge_dst), jnp.asarray(s.edge_src),
+                jnp.asarray(done), num_txns=s.n_txns, block_n=256,
+            ))
+            np.testing.assert_array_equal(dense, kern)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 5),  # key
+            st.sampled_from([MODE_READ, MODE_WRITE]),
+        ),
+        min_size=1,
+        max_size=60,
+    ),
+    st.integers(2, 6),  # ops per txn
+    st.integers(2, 16),  # batch epoch
+)
+def test_random_schedules_conflict_free(oplist, k, batch):
+    """Property: wavefront levels of arbitrary random batches are
+    conflict-free and acyclic (both schedule kinds)."""
+    n = (len(oplist) + k - 1) // k
+    keys = np.full((n, k), int(KEY_SENTINEL), np.int32)
+    modes = np.zeros((n, k), np.int32)
+    nkeys = np.zeros(n, np.int32)
+    for i, (key, mode) in enumerate(oplist):
+        t, j = divmod(i, k)
+        keys[t, j] = key
+        modes[t, j] = mode
+        nkeys[t] = j + 1
+    part = np.where(keys == int(KEY_SENTINEL), 0, keys)
+
+    class _W:
+        pass
+
+    wl = _W()
+    wl.keys, wl.modes, wl.nkeys = keys, modes, nkeys
+    for kind, lanes in (("conflict", 1), ("lane", 3)):
+        s = dg.build_schedule(keys, modes, part, nkeys, batch,
+                              kind=kind, n_lanes=lanes)
+        _assert_levels_conflict_free(wl, s)
+        assert sorted(dg.simulate_wavefronts(s).tolist()) == list(range(n))

@@ -38,6 +38,8 @@ def ycsb_uniform():
         ("deadlock_free", {}),
         ("orthrus", dict(n_cc=4, n_exec=12, window=4)),
         ("partitioned_store", {}),
+        ("dgcc", dict(n_cc=4, n_exec=12, window=4)),
+        ("quecc", dict(n_cc=8, n_exec=12, window=4)),
     ],
 )
 def test_protocol_commits(ycsb_small, protocol, kw):
@@ -51,7 +53,9 @@ def test_protocol_commits(ycsb_small, protocol, kw):
 
 def test_planned_protocols_never_deadlock_abort(ycsb_small):
     for proto, kw in [("deadlock_free", {}),
-                      ("orthrus", dict(n_cc=4, n_exec=12, window=4))]:
+                      ("orthrus", dict(n_cc=4, n_exec=12, window=4)),
+                      ("dgcc", dict(n_cc=4, n_exec=12, window=4)),
+                      ("quecc", dict(n_cc=8, n_exec=12, window=4))]:
         cfg = EngineConfig(protocol=proto, n_exec=kw.pop("n_exec", 16),
                            **kw, **FAST)
         res = run_simulation(cfg, ycsb_small)

@@ -11,6 +11,7 @@ from repro.core.lockgrant import (
     REQ_NONE,
     grant_round,
 )
+from repro.kernels.dep_wavefront.ops import dep_wavefront_ready
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.lock_grant.ops import lock_grant
@@ -45,6 +46,24 @@ def test_lock_grant_vs_oracle(n, block, nkeys):
     )
     np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
     np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 256), (777, 128)])
+@pytest.mark.parametrize("n_txns", [16, 200])
+def test_dep_wavefront_vs_dense_oracle(n, block, n_txns):
+    """Wrapper-level contract: per-txn readiness == the engine's dense
+    all-predecessors-committed formulation."""
+    rng = np.random.default_rng(n + n_txns)
+    dst = np.sort(rng.integers(0, n_txns, n)).astype(np.int32)
+    src = rng.integers(0, n_txns, n).astype(np.int32)
+    done = rng.random(n_txns) < 0.5
+    ready = np.asarray(dep_wavefront_ready(
+        jnp.asarray(dst), jnp.asarray(src), jnp.asarray(done),
+        num_txns=n_txns, block_n=block,
+    ))
+    expect = np.ones(n_txns, bool)
+    np.logical_and.at(expect, dst, done[src])
+    np.testing.assert_array_equal(ready, expect)
 
 
 @pytest.mark.parametrize("N,E,k,cap", [(512, 8, 2, 128), (1000, 16, 1, 64),

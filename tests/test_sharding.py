@@ -28,7 +28,12 @@ def _mesh2(a=1, b=1):
 
 def _abs_mesh(data=16, model=16):
     """Production-shaped mesh without devices (rule-resolution tests)."""
-    return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+    try:
+        return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+    except TypeError:  # jax 0.4.x: shape_tuple of (name, size) pairs
+        return jax.sharding.AbstractMesh(
+            (("data", data), ("model", model))
+        )
 
 
 def test_spec_for_divisibility_fallback():
