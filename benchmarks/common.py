@@ -1,16 +1,50 @@
-"""Shared benchmark harness: run engine configs, emit CSV rows, cache
-results (each figure sweep is minutes of simulation on one CPU core)."""
+"""Shared benchmark harness: run engine cells, emit CSV rows, cache
+results, and record the simulator-performance trajectory.
+
+Execution model (this PR's sweep driver):
+
+  * ``run_cells`` is the batch API every figure routes through: it
+    resolves cached cells, de-duplicates identical cells that appear
+    under several names (e.g. the fig13 ``h64`` and ``l40`` axes), and
+    runs the misses grouped by engine configuration so each group shares
+    one XLA compilation (``repro.core.sweep``'s runner cache).
+  * Groups run across a small process pool by default (CPU backend:
+    per-op dispatch dominates these tiny-array round loops, so two
+    single-threaded workers beat one vmapped program). Set
+    ``REPRO_BENCH_PROCS=1`` to force in-process serial execution, or
+    ``REPRO_BENCH_VMAP=1`` to drive each group through the vmapped
+    ``sweep.run_cells`` path instead (the right choice on accelerator
+    backends, where one batched program amortizes everything).
+  * Cache keys include ``repro.core.sweep.ENGINE_VERSION``, so results
+    simulated by an older engine can never silently mix with fresh ones.
+  * Fresh (non-cached) runs append per-cell ``wall_s`` and
+    simulated-rounds-per-second into ``artifacts/BENCH_engine.json`` —
+    the engine's performance trajectory (see ``benchmarks/README.md``).
+"""
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
 
-from repro.core.engine import EngineConfig, run_simulation
-from repro.core.workloads import WorkloadConfig, make_workload
+# XLA's newer CPU thunk runtime is ~20% slower for the engine's
+# tiny-array round loops; prefer the legacy runtime for benchmark runs
+# (results are identical — this only changes the executor). Appended
+# only if the user hasn't already configured the flag themselves.
+# Must run before the first JAX computation in this process and is
+# inherited by the benchmark worker processes.
+_XLA_TUNING = "--xla_cpu_use_thunk_runtime=false"
+if "xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _XLA_TUNING
+    ).strip()
 
 CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "artifacts/bench_cache")
+BENCH_ENGINE_PATH = os.environ.get(
+    "REPRO_BENCH_ENGINE_JSON", "artifacts/BENCH_engine.json"
+)
 
 # Simulation budget (rounds @0.25us). Override with REPRO_BENCH_FAST=1 for
 # quick smoke passes.
@@ -22,26 +56,31 @@ SIM = dict(
     target_commits=100_000_000,
 )
 
+# Parallel group execution. 0 = auto (min(2, cpu count)); 1 = in-process.
+PROCS = int(os.environ.get("REPRO_BENCH_PROCS", "0"))
+USE_VMAP = bool(int(os.environ.get("REPRO_BENCH_VMAP", "0")))
 
-def run_cell(name: str, wl_cfg: WorkloadConfig, eng_kw: dict) -> dict:
-    os.makedirs(CACHE_DIR, exist_ok=True)
+_POOL = None
+
+
+def _cell_hash(wl_cfg, eng_kw: dict) -> str:
+    from repro.core.sweep import ENGINE_VERSION
+
     key = json.dumps(
-        {"wl": wl_cfg.__dict__, "eng": {k: str(v) for k, v in eng_kw.items()},
-         "sim": SIM},
-        sort_keys=True, default=str,
+        {
+            "wl": wl_cfg.__dict__,
+            "eng": {k: str(v) for k, v in eng_kw.items()},
+            "sim": SIM,
+            "engine": ENGINE_VERSION,
+        },
+        sort_keys=True,
+        default=str,
     )
-    import hashlib
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
 
-    h = hashlib.sha1(key.encode()).hexdigest()[:16]
-    cache = os.path.join(CACHE_DIR, f"{name}_{h}.json")
-    if os.path.exists(cache):
-        with open(cache) as f:
-            return json.load(f)
-    wl = make_workload(wl_cfg)
-    cfg = EngineConfig(**eng_kw, **SIM)
-    t0 = time.time()
-    res = run_simulation(cfg, wl)
-    out = dict(
+
+def _result_row(name: str, res, wall_s: float) -> dict:
+    return dict(
         name=name,
         throughput_txn_s=res.throughput_txn_s,
         commits=res.commits,
@@ -49,11 +88,194 @@ def run_cell(name: str, wl_cfg: WorkloadConfig, eng_kw: dict) -> dict:
         aborts_ollp=res.aborts_ollp,
         wasted_ops=res.wasted_ops,
         breakdown=res.breakdown,
-        wall_s=round(time.time() - t0, 1),
+        wall_s=round(wall_s, 2),
+        rounds_total=res.raw["rounds_total"],
+        steps_executed=res.raw.get("steps_executed", 0),
+        engine_version=res.raw.get("engine_version", "?"),
     )
-    with open(cache, "w") as f:
-        json.dump(out, f)
+
+
+def _simulate_cells(payload):
+    """Run one group of cells serially in this process, sharing the
+    engine's compile cache across cells. Top-level so process-pool
+    workers can import it."""
+    sim, cells = payload
+    from repro.core.engine import EngineConfig, run_simulation
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    out = []
+    for name, wl_kw, eng_kw in cells:
+        wl = make_workload(WorkloadConfig(**wl_kw))
+        cfg = EngineConfig(**eng_kw, **sim)
+        t0 = time.time()
+        res = run_simulation(cfg, wl)
+        out.append((name, _result_row(name, res, time.time() - t0)))
     return out
+
+
+def _simulate_cells_vmapped(payload):
+    """Accelerator-friendly variant: the whole group runs as one vmapped
+    program via ``sweep.run_cells`` (identical results, one compile).
+
+    Cells in a vmapped group share one wall clock, so each row carries
+    the amortized wall and a *group-level* simulated-rounds-per-second
+    (total group rounds / group wall), tagged ``perf_scope`` so the perf
+    trajectory never mixes it up with per-cell serial numbers."""
+    sim, cells = payload
+    from repro.core import sweep
+    from repro.core.engine import EngineConfig
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    t0 = time.time()
+    pairs = [
+        (EngineConfig(**eng_kw, **sim), make_workload(WorkloadConfig(**wl_kw)))
+        for _name, wl_kw, eng_kw in cells
+    ]
+    results = sweep.run_cells(pairs)
+    wall = max(time.time() - t0, 1e-9)
+    group_rounds = sum(res.raw["rounds_total"] for res in results)
+    out = []
+    for (name, _w, _e), res in zip(cells, results):
+        row = _result_row(name, res, wall / len(cells))
+        row["sim_rounds_per_s"] = round(group_rounds / wall, 1)
+        row["perf_scope"] = "vmap_group"
+        out.append((name, row))
+    return out
+
+
+def _worker_init():
+    # one XLA thread per worker: the pool provides the parallelism, and
+    # co-scheduled workers otherwise fight over cores with their intra-op
+    # thread pools (runs before the worker's first JAX computation)
+    extra = "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
+    if "intra_op_parallelism_threads" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + extra
+        ).strip()
+
+
+def _pool(n_workers: int):
+    global _POOL
+    if _POOL is None:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+
+        # spawn: workers initialize their own XLA runtime from scratch
+        # (forking a process with a live XLA backend is unsafe)
+        _POOL = ProcessPoolExecutor(
+            max_workers=n_workers,
+            mp_context=mp.get_context("spawn"),
+            initializer=_worker_init,
+        )
+    return _POOL
+
+
+def run_cells(cells: list[tuple]) -> dict[str, dict]:
+    """Run many named cells: ``cells`` is a list of
+    ``(name, WorkloadConfig, eng_kw)``. Returns ``{name: row}``.
+
+    Cached cells are loaded; identical cells under different names are
+    simulated once; the rest run grouped by engine configuration (one
+    compile per group), optionally across a process pool.
+    """
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    out: dict[str, dict] = {}
+    by_hash: dict[str, list] = {}  # content hash -> [(name, wl, eng)]
+    for name, wl_cfg, eng_kw in cells:
+        h = _cell_hash(wl_cfg, eng_kw)
+        cache = os.path.join(CACHE_DIR, f"{name}_{h}.json")
+        if os.path.exists(cache):
+            with open(cache) as f:
+                out[name] = json.load(f)
+        else:
+            by_hash.setdefault(h, []).append((name, wl_cfg, eng_kw))
+
+    # one simulation per distinct content hash
+    todo = [entries[0] for entries in by_hash.values()]
+    # group by engine config: cells of one group share the compiled runner
+    groups: dict[tuple, list] = {}
+    for name, wl_cfg, eng_kw in todo:
+        gkey = tuple(sorted((k, str(v)) for k, v in eng_kw.items()))
+        groups.setdefault(gkey, []).append(
+            (name, dict(wl_cfg.__dict__), dict(eng_kw))
+        )
+    # heaviest groups first so the pool drains evenly
+    weight = lambda g: -sum(
+        int(c[2].get("n_exec", 1)) * int(c[2].get("window", 1)) for c in g
+    )
+    payloads = [
+        (SIM, grp) for grp in sorted(groups.values(), key=weight)
+    ]
+
+    fresh: dict[str, dict] = {}
+    runner = _simulate_cells_vmapped if USE_VMAP else _simulate_cells
+    n_workers = PROCS if PROCS > 0 else min(2, os.cpu_count() or 1)
+    if len(payloads) > 1 and n_workers > 1:
+        for rows in _pool(n_workers).map(runner, payloads):
+            fresh.update(dict(rows))
+    else:
+        for payload in payloads:
+            fresh.update(dict(runner(payload)))
+
+    # write caches (fan the row out to every name sharing the hash)
+    for h, entries in by_hash.items():
+        row = fresh[entries[0][0]]
+        for name, wl_cfg, eng_kw in entries:
+            named = dict(row, name=name)
+            out[name] = named
+            cache = os.path.join(CACHE_DIR, f"{name}_{h}.json")
+            with open(cache, "w") as f:
+                json.dump(named, f)
+    if fresh:
+        record_perf_samples(fresh.values())
+    return out
+
+
+def run_cell(name: str, wl_cfg, eng_kw: dict) -> dict:
+    """Single-cell convenience wrapper over :func:`run_cells`."""
+    return run_cells([(name, wl_cfg, eng_kw)])[name]
+
+
+def load_bench_engine() -> dict:
+    if os.path.exists(BENCH_ENGINE_PATH):
+        with open(BENCH_ENGINE_PATH) as f:
+            return json.load(f)
+    return {"history": [], "samples": {}}
+
+
+def save_bench_engine(data: dict) -> None:
+    os.makedirs(os.path.dirname(BENCH_ENGINE_PATH) or ".", exist_ok=True)
+    with open(BENCH_ENGINE_PATH, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+
+
+def record_perf_samples(rows) -> None:
+    """Record per-cell wall seconds + simulated-rounds-per-second for
+    freshly simulated cells into the engine perf trajectory."""
+    from repro.core.sweep import ENGINE_VERSION
+
+    data = load_bench_engine()
+    data["engine_version"] = ENGINE_VERSION
+    samples = data.setdefault("samples", {})
+    for row in rows:
+        wall = max(row.get("wall_s", 0.0), 1e-9)
+        rounds = row.get("rounds_total", 0)
+        sample = dict(
+            wall_s=row.get("wall_s", 0.0),
+            rounds_total=rounds,
+            steps_executed=row.get("steps_executed", 0),
+            # vmapped groups carry a group-level rounds/s; serial rows
+            # are computed per cell
+            sim_rounds_per_s=row.get(
+                "sim_rounds_per_s", round(rounds / wall, 1)
+            ),
+            commits=row.get("commits", 0),
+            engine_version=row.get("engine_version", ENGINE_VERSION),
+        )
+        if "perf_scope" in row:
+            sample["perf_scope"] = row["perf_scope"]
+        samples[row["name"]] = sample
+    save_bench_engine(data)
 
 
 def emit(rows: list[tuple]):

@@ -2,11 +2,18 @@
 
 Each returns (csv_rows, claims) where claims is a list of
 (description, bool) validations of the paper's qualitative statements.
+
+Every figure builds its full cell list up front and routes it through
+``benchmarks.common.run_cells``, which loads cached cells, de-duplicates
+identical cells across axes, and runs the misses grouped by engine
+configuration so each group shares one compiled runner (and groups run
+across the benchmark process pool). Cell names and simulated results are
+identical to running the cells one at a time.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import run_cell
+from benchmarks.common import run_cells
 from repro.core.workloads import WorkloadConfig
 
 YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0)
@@ -14,15 +21,19 @@ YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0)
 
 def fig1_readonly_scaling():
     """Fig 1 / Fig 11b: read-only 2PL stops scaling under high contention."""
-    rows = [("fig", "lanes", "throughput_txn_s")]
-    thr = {}
-    for lanes in (10, 20, 40, 60, 80):
-        r = run_cell(
+    lanes_axis = (10, 20, 40, 60, 80)
+    res = run_cells([
+        (
             f"fig1_l{lanes}",
             WorkloadConfig(**YCSB, num_hot=64, read_only=True),
             dict(protocol="twopl_waitdie", n_exec=lanes),
         )
-        thr[lanes] = r["throughput_txn_s"]
+        for lanes in lanes_axis
+    ])
+    rows = [("fig", "lanes", "throughput_txn_s")]
+    thr = {}
+    for lanes in lanes_axis:
+        thr[lanes] = res[f"fig1_l{lanes}"]["throughput_txn_s"]
         rows.append(("fig1", lanes, round(thr[lanes])))
     claims = [
         ("read-only 2PL scales 10->40 lanes", thr[40] > 1.8 * thr[10]),
@@ -39,19 +50,24 @@ def fig4_deadlock_overhead():
     """Fig 4: deadlock-handling overhead vs hot-set size, 10 vs 80 lanes."""
     protos = ("deadlock_free", "twopl_waitdie", "twopl_dreadlocks",
               "twopl_waitfor")
+    lanes_axis, hots = (10, 80), (1024, 256, 64, 16)
+    res = run_cells([
+        (
+            f"fig4_l{lanes}_h{hot}_{p}",
+            WorkloadConfig(**YCSB, num_hot=hot),
+            dict(protocol=p, n_exec=lanes),
+        )
+        for lanes in lanes_axis for hot in hots for p in protos
+    ])
     rows = [("fig", "lanes", "hot", *protos)]
     thr = {}
-    for lanes in (10, 80):
-        for hot in (1024, 256, 64, 16):
+    for lanes in lanes_axis:
+        for hot in hots:
             vals = []
             for p in protos:
-                r = run_cell(
-                    f"fig4_l{lanes}_h{hot}_{p}",
-                    WorkloadConfig(**YCSB, num_hot=hot),
-                    dict(protocol=p, n_exec=lanes),
-                )
-                thr[(lanes, hot, p)] = r["throughput_txn_s"]
-                vals.append(round(r["throughput_txn_s"]))
+                thr[(lanes, hot, p)] = res[
+                    f"fig4_l{lanes}_h{hot}_{p}"]["throughput_txn_s"]
+                vals.append(round(thr[(lanes, hot, p)]))
             rows.append(("fig4", lanes, hot, *vals))
     hi = 16
     claims = [
@@ -95,18 +111,23 @@ def fig4_deadlock_overhead():
 
 def fig5_thread_allocation():
     """Fig 5: throughput plateaus in proportion to CC-lane count."""
+    axis = [(n_cc, n_exec) for n_cc in (1, 2, 4)
+            for n_exec in (4, 8, 16, 32, 64)]
+    res = run_cells([
+        (
+            f"fig5_cc{n_cc}_e{n_exec}",
+            WorkloadConfig(**YCSB, num_hot=0, partitions_per_txn=1,
+                           num_partitions=64),
+            dict(protocol="orthrus", n_cc=n_cc, n_exec=n_exec, window=4),
+        )
+        for n_cc, n_exec in axis
+    ])
     rows = [("fig", "n_cc", "n_exec", "throughput_txn_s")]
     thr = {}
-    for n_cc in (1, 2, 4):
-        for n_exec in (4, 8, 16, 32, 64):
-            r = run_cell(
-                f"fig5_cc{n_cc}_e{n_exec}",
-                WorkloadConfig(**YCSB, num_hot=0, partitions_per_txn=1,
-                               num_partitions=64),
-                dict(protocol="orthrus", n_cc=n_cc, n_exec=n_exec, window=4),
-            )
-            thr[(n_cc, n_exec)] = r["throughput_txn_s"]
-            rows.append(("fig5", n_cc, n_exec, round(r["throughput_txn_s"])))
+    for n_cc, n_exec in axis:
+        thr[(n_cc, n_exec)] = res[
+            f"fig5_cc{n_cc}_e{n_exec}"]["throughput_txn_s"]
+        rows.append(("fig5", n_cc, n_exec, round(thr[(n_cc, n_exec)])))
     claims = [
         (
             "throughput rises with exec lanes until CC saturates",
@@ -127,26 +148,33 @@ def fig5_thread_allocation():
 def fig6_partitions_per_txn():
     """Fig 6: partitioned-store cliff vs ORTHRUS/DF when txns span
     partitions."""
-    rows = [("fig", "partitions_per_txn", "pstore", "orthrus", "df",
-             "split_orthrus", "split_df")]
+    names = ("pstore", "orthrus", "df", "split_orthrus", "split_df")
+    kws = {
+        "pstore": dict(protocol="partitioned_store", n_exec=64),
+        "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48, window=4),
+        "df": dict(protocol="deadlock_free", n_exec=64),
+        "split_orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48,
+                              window=4, split_index=True),
+        "split_df": dict(protocol="deadlock_free", n_exec=64,
+                         split_index=True),
+    }
+    ppts = (1, 2, 4)
+    res = run_cells([
+        (
+            f"fig6_p{ppt}_{nm}",
+            WorkloadConfig(**YCSB, num_hot=0, partitions_per_txn=ppt,
+                           num_partitions=64),
+            kws[nm],
+        )
+        for ppt in ppts for nm in names
+    ])
+    rows = [("fig", "partitions_per_txn", *names)]
     thr = {}
-    for ppt in (1, 2, 4):
-        wl = WorkloadConfig(**YCSB, num_hot=0, partitions_per_txn=ppt,
-                            num_partitions=64)
-        cells = {
-            "pstore": dict(protocol="partitioned_store", n_exec=64),
-            "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48, window=4),
-            "df": dict(protocol="deadlock_free", n_exec=64),
-            "split_orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48,
-                                  window=4, split_index=True),
-            "split_df": dict(protocol="deadlock_free", n_exec=64,
-                             split_index=True),
-        }
+    for ppt in ppts:
         vals = []
-        for nm, kw in cells.items():
-            r = run_cell(f"fig6_p{ppt}_{nm}", wl, kw)
-            thr[(ppt, nm)] = r["throughput_txn_s"]
-            vals.append(round(r["throughput_txn_s"]))
+        for nm in names:
+            thr[(ppt, nm)] = res[f"fig6_p{ppt}_{nm}"]["throughput_txn_s"]
+            vals.append(round(thr[(ppt, nm)]))
         rows.append(("fig6", ppt, *vals))
     claims = [
         ("pstore wins when all txns are single-partition (paper Fig 6)",
@@ -166,48 +194,64 @@ def fig6_partitions_per_txn():
 
 def fig7_multipartition_fraction():
     """Fig 7: crossover as the multi-partition fraction grows."""
-    rows = [("fig", "mp_frac", "pstore", "orthrus", "df")]
+    names = ("pstore", "orthrus", "df")
+    kws = {
+        "pstore": dict(protocol="partitioned_store", n_exec=64),
+        "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48, window=4),
+        "df": dict(protocol="deadlock_free", n_exec=64),
+    }
+    fracs = (0.0, 0.2, 0.6, 1.0)
+    res = run_cells([
+        (
+            f"fig7_f{frac}_{nm}",
+            WorkloadConfig(**YCSB, num_hot=0, multipart_frac=frac,
+                           num_partitions=64),
+            kws[nm],
+        )
+        for frac in fracs for nm in names
+    ])
+    rows = [("fig", "mp_frac", *names)]
     thr = {}
-    for frac in (0.0, 0.2, 0.6, 1.0):
-        wl = WorkloadConfig(**YCSB, num_hot=0, multipart_frac=frac,
-                            num_partitions=64)
-        for nm, kw in {
-            "pstore": dict(protocol="partitioned_store", n_exec=64),
-            "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=48, window=4),
-            "df": dict(protocol="deadlock_free", n_exec=64),
-        }.items():
-            r = run_cell(f"fig7_f{frac}_{nm}", wl, kw)
-            thr[(frac, nm)] = r["throughput_txn_s"]
+    for frac in fracs:
+        for nm in names:
+            thr[(frac, nm)] = res[f"fig7_f{frac}_{nm}"]["throughput_txn_s"]
         rows.append(
-            ("fig7", frac, *[round(thr[(frac, n)]) for n in
-                             ("pstore", "orthrus", "df")])
+            ("fig7", frac, *[round(thr[(frac, n)]) for n in names])
         )
     claims = [
         ("pstore degrades as multi-partition fraction rises (paper Fig 7)",
          thr[(1.0, "pstore")] < 0.5 * thr[(0.0, "pstore")]),
         ("ORTHRUS always outperforms deadlock-free (paper Fig 7)",
          all(thr[(f, "orthrus")] > 0.95 * thr[(f, "df")]
-             for f in (0.0, 0.2, 0.6, 1.0))),
+             for f in fracs)),
     ]
     return rows, claims
 
 
 def fig8_tpcc_contention():
     """Fig 8: TPC-C throughput vs warehouse count."""
-    rows = [("fig", "warehouses", "orthrus", "df", "twopl")]
+    names = ("orthrus", "df", "twopl")
+    kws = {
+        "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=64, window=4),
+        "df": dict(protocol="deadlock_free", n_exec=80),
+        "twopl": dict(protocol="twopl_dreadlocks", n_exec=80),
+    }
+    whs = (4, 16, 64, 128)
+    res = run_cells([
+        (
+            f"fig8_w{wh}_{nm}",
+            WorkloadConfig(kind="tpcc", num_txns=8192, num_warehouses=wh,
+                           seed=0),
+            kws[nm],
+        )
+        for wh in whs for nm in names
+    ])
+    rows = [("fig", "warehouses", *names)]
     thr = {}
-    for wh in (4, 16, 64, 128):
-        wl = WorkloadConfig(kind="tpcc", num_txns=8192, num_warehouses=wh,
-                            seed=0)
-        for nm, kw in {
-            "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=64, window=4),
-            "df": dict(protocol="deadlock_free", n_exec=80),
-            "twopl": dict(protocol="twopl_dreadlocks", n_exec=80),
-        }.items():
-            r = run_cell(f"fig8_w{wh}_{nm}", wl, kw)
-            thr[(wh, nm)] = r["throughput_txn_s"]
-        rows.append(("fig8", wh, *[round(thr[(wh, n)]) for n in
-                                   ("orthrus", "df", "twopl")]))
+    for wh in whs:
+        for nm in names:
+            thr[(wh, nm)] = res[f"fig8_w{wh}_{nm}"]["throughput_txn_s"]
+        rows.append(("fig8", wh, *[round(thr[(wh, n)]) for n in names]))
     claims = [
         ("ORTHRUS >> 2PL at few warehouses (paper Fig 8)",
          thr[(4, "orthrus")] > 1.5 * thr[(4, "twopl")]),
@@ -219,20 +263,27 @@ def fig8_tpcc_contention():
 
 def fig9_tpcc_scaling():
     """Fig 9: core scaling at 16 warehouses."""
-    rows = [("fig", "cores", "orthrus", "df", "twopl")]
-    thr = {}
-    for cores in (10, 20, 40, 80):
+    cores_axis = (10, 20, 40, 80)
+    cells = []
+    for cores in cores_axis:
+        n_cc = max(2, cores // 5)
         wl = WorkloadConfig(kind="tpcc", num_txns=8192, num_warehouses=16,
                             seed=0)
-        n_cc = max(2, cores // 5)
-        for nm, kw in {
-            "orthrus": dict(protocol="orthrus", n_cc=n_cc,
-                            n_exec=cores - n_cc, window=4),
-            "df": dict(protocol="deadlock_free", n_exec=cores),
-            "twopl": dict(protocol="twopl_dreadlocks", n_exec=cores),
-        }.items():
-            r = run_cell(f"fig9_c{cores}_{nm}", wl, kw)
-            thr[(cores, nm)] = r["throughput_txn_s"]
+        cells += [
+            (f"fig9_c{cores}_orthrus", wl,
+             dict(protocol="orthrus", n_cc=n_cc, n_exec=cores - n_cc,
+                  window=4)),
+            (f"fig9_c{cores}_df", wl,
+             dict(protocol="deadlock_free", n_exec=cores)),
+            (f"fig9_c{cores}_twopl", wl,
+             dict(protocol="twopl_dreadlocks", n_exec=cores)),
+        ]
+    res = run_cells(cells)
+    rows = [("fig", "cores", "orthrus", "df", "twopl")]
+    thr = {}
+    for cores in cores_axis:
+        for nm in ("orthrus", "df", "twopl"):
+            thr[(cores, nm)] = res[f"fig9_c{cores}_{nm}"]["throughput_txn_s"]
         rows.append(("fig9", cores, *[round(thr[(cores, n)]) for n in
                                       ("orthrus", "df", "twopl")]))
     claims = [
@@ -250,19 +301,28 @@ def fig9_tpcc_scaling():
 
 def fig10_breakdown():
     """Fig 10: exec-lane time breakdown at high/low contention."""
+    names = ("orthrus", "df", "twopl")
+    kws = {
+        "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=64, window=4),
+        "df": dict(protocol="deadlock_free", n_exec=80),
+        "twopl": dict(protocol="twopl_dreadlocks", n_exec=80),
+    }
+    whs = ((16, "high"), (128, "low"))
+    res = run_cells([
+        (
+            f"fig10_w{wh}_{nm}",
+            WorkloadConfig(kind="tpcc", num_txns=8192, num_warehouses=wh,
+                           seed=0),
+            kws[nm],
+        )
+        for wh, _tag in whs for nm in names
+    ])
     rows = [("fig", "warehouses", "system", "exec", "lock", "wait",
              "deadlock", "msg", "idle")]
     frac = {}
-    for wh, tag in ((16, "high"), (128, "low")):
-        wl = WorkloadConfig(kind="tpcc", num_txns=8192, num_warehouses=wh,
-                            seed=0)
-        for nm, kw in {
-            "orthrus": dict(protocol="orthrus", n_cc=16, n_exec=64, window=4),
-            "df": dict(protocol="deadlock_free", n_exec=80),
-            "twopl": dict(protocol="twopl_dreadlocks", n_exec=80),
-        }.items():
-            r = run_cell(f"fig10_w{wh}_{nm}", wl, kw)
-            b = r["breakdown"]
+    for wh, tag in whs:
+        for nm in names:
+            b = res[f"fig10_w{wh}_{nm}"]["breakdown"]
             frac[(tag, nm)] = b["exec"]
             rows.append(
                 ("fig10", wh, nm, *[round(b[k], 3) for k in
@@ -286,11 +346,11 @@ def fig10_breakdown():
 
 def fig11_ycsb_readonly():
     """Fig 11: YCSB read-only, low/high contention, ORTHRUS placements."""
-    rows = [("fig", "contention", "system", "throughput_txn_s")]
-    thr = {}
+    cells = []
+    axes = []
     for hot, tag in ((0, "low"), (64, "high")):
         base = dict(**YCSB, read_only=True)
-        cells = {
+        placements = {
             "orthrus_single": (
                 WorkloadConfig(**base, num_hot=hot, partitions_per_txn=1,
                                num_partitions=64),
@@ -314,10 +374,15 @@ def fig11_ycsb_readonly():
                 dict(protocol="twopl_waitdie", n_exec=80),
             ),
         }
-        for nm, (wl, kw) in cells.items():
-            r = run_cell(f"fig11_{tag}_{nm}", wl, kw)
-            thr[(tag, nm)] = r["throughput_txn_s"]
-            rows.append(("fig11", tag, nm, round(r["throughput_txn_s"])))
+        for nm, (wl, kw) in placements.items():
+            cells.append((f"fig11_{tag}_{nm}", wl, kw))
+            axes.append((tag, nm))
+    res = run_cells(cells)
+    rows = [("fig", "contention", "system", "throughput_txn_s")]
+    thr = {}
+    for tag, nm in axes:
+        thr[(tag, nm)] = res[f"fig11_{tag}_{nm}"]["throughput_txn_s"]
+        rows.append(("fig11", tag, nm, round(thr[(tag, nm)])))
     claims = [
         ("single-partition ORTHRUS beats the locking baselines "
          "(paper Fig 11a)",
@@ -334,10 +399,10 @@ def fig11_ycsb_readonly():
 
 def fig12_ycsb_rmw():
     """Fig 12: YCSB 10RMW, low/high contention."""
-    rows = [("fig", "contention", "system", "throughput_txn_s")]
-    thr = {}
+    cells = []
+    axes = []
     for hot, tag in ((0, "low"), (64, "high")):
-        cells = {
+        placements = {
             "orthrus_single": (
                 WorkloadConfig(**YCSB, num_hot=hot, partitions_per_txn=1,
                                num_partitions=64),
@@ -357,10 +422,15 @@ def fig12_ycsb_rmw():
                 dict(protocol="twopl_waitdie", n_exec=80),
             ),
         }
-        for nm, (wl, kw) in cells.items():
-            r = run_cell(f"fig12_{tag}_{nm}", wl, kw)
-            thr[(tag, nm)] = r["throughput_txn_s"]
-            rows.append(("fig12", tag, nm, round(r["throughput_txn_s"])))
+        for nm, (wl, kw) in placements.items():
+            cells.append((f"fig12_{tag}_{nm}", wl, kw))
+            axes.append((tag, nm))
+    res = run_cells(cells)
+    rows = [("fig", "contention", "system", "throughput_txn_s")]
+    thr = {}
+    for tag, nm in axes:
+        thr[(tag, nm)] = res[f"fig12_{tag}_{nm}"]["throughput_txn_s"]
+        rows.append(("fig12", tag, nm, round(thr[(tag, nm)])))
     claims = [
         ("high contention: single > dual partition ORTHRUS (lock hold "
          "time, paper Fig 12b)",
@@ -402,33 +472,41 @@ def fig13_batch_planned():
             protocol="quecc", n_cc=max(lanes // 5, 1),
             n_exec=lanes - max(lanes // 5, 1), window=4),
     }
+    lane_names = ("dgcc", "quecc", "orthrus", "deadlock_free",
+                  "twopl_waitdie")
+    cells = [
+        (
+            f"fig13_h{hot}_{name}",
+            WorkloadConfig(**YCSB, num_hot=hot),
+            kw(40),
+        )
+        for hot in (1024, 64, 16) for name, kw in protos.items()
+    ] + [
+        (
+            f"fig13_l{lanes}_{name}",
+            WorkloadConfig(**YCSB, num_hot=64),
+            protos[name](lanes),
+        )
+        for lanes in (10, 40, 80) for name in lane_names
+    ]
+    res = run_cells(cells)
+
     rows = [("fig", "axis", "x", "protocol", "throughput_txn_s",
              "aborts_deadlock")]
     thr, aborts = {}, {}
-
     # contention axis: 40 lanes, hot-set size sweeps the conflict rate
     for hot in (1024, 64, 16):
-        for name, kw in protos.items():
-            r = run_cell(
-                f"fig13_h{hot}_{name}",
-                WorkloadConfig(**YCSB, num_hot=hot),
-                kw(40),
-            )
+        for name in protos:
+            r = res[f"fig13_h{hot}_{name}"]
             thr[("hot", hot, name)] = r["throughput_txn_s"]
             aborts[("hot", hot, name)] = r["aborts_deadlock"]
             rows.append(("fig13", "hot", hot, name,
                          round(r["throughput_txn_s"]),
                          r["aborts_deadlock"]))
-
     # threads axis at high contention (paper-style throughput-vs-threads)
     for lanes in (10, 40, 80):
-        for name in ("dgcc", "quecc", "orthrus", "deadlock_free",
-                     "twopl_waitdie"):
-            r = run_cell(
-                f"fig13_l{lanes}_{name}",
-                WorkloadConfig(**YCSB, num_hot=64),
-                protos[name](lanes),
-            )
+        for name in lane_names:
+            r = res[f"fig13_l{lanes}_{name}"]
             thr[("lanes", lanes, name)] = r["throughput_txn_s"]
             rows.append(("fig13", "lanes", lanes, name,
                          round(r["throughput_txn_s"]),

@@ -1,0 +1,103 @@
+"""Engine perf smoke: run a small fig13 subset end-to-end on the
+event-leaping engine, record wall seconds + simulated-rounds-per-second
+into ``artifacts/BENCH_engine.json``, and fail if throughput regresses
+more than 3x below the recorded CI baseline.
+
+  PYTHONPATH=src REPRO_BENCH_FAST=1 python -m benchmarks.perf_smoke
+  PYTHONPATH=src python -m benchmarks.perf_smoke --reset-baseline
+
+The three cells cover the engine's step-cost regimes: dynamic 2PL
+(dense rounds, deadlock logic), per-transaction planned locking, and a
+batch-planned protocol (where event leaping skips ~80% of rounds). Runs
+always bypass the benchmark cache — the point is to time the engine,
+not to reread old results.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+REGRESSION_FACTOR = 3.0
+
+YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0,
+            num_hot=64)
+SMOKE_CELLS = [
+    ("smoke_twopl_waitdie", YCSB, dict(protocol="twopl_waitdie", n_exec=40)),
+    ("smoke_deadlock_free", YCSB, dict(protocol="deadlock_free", n_exec=40)),
+    ("smoke_dgcc", YCSB, dict(protocol="dgcc", n_cc=8, n_exec=32, window=4)),
+]
+
+
+def run_smoke() -> dict[str, dict]:
+    from benchmarks.common import SIM
+    from repro.core.engine import EngineConfig, run_simulation
+    from repro.core.sweep import ENGINE_VERSION
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    out = {}
+    for name, wl_kw, eng_kw in SMOKE_CELLS:
+        wl = make_workload(WorkloadConfig(**wl_kw))
+        cfg = EngineConfig(**eng_kw, **SIM)
+        t0 = time.time()
+        res = run_simulation(cfg, wl)
+        wall = max(time.time() - t0, 1e-9)
+        out[name] = dict(
+            wall_s=round(wall, 2),
+            rounds_total=res.raw["rounds_total"],
+            steps_executed=res.raw["steps_executed"],
+            sim_rounds_per_s=round(res.raw["rounds_total"] / wall, 1),
+            commits=res.commits,
+            aborts_deadlock=res.aborts_deadlock,
+            engine_version=ENGINE_VERSION,
+        )
+        print(
+            f"{name:24s} wall={out[name]['wall_s']:6.2f}s "
+            f"rounds/s={out[name]['sim_rounds_per_s']:9.1f} "
+            f"steps={out[name]['steps_executed']}/{out[name]['rounds_total']}"
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reset-baseline", action="store_true",
+                    help="record this run as the new CI baseline")
+    args = ap.parse_args()
+    os.environ.setdefault("REPRO_BENCH_FAST", "1")
+
+    from benchmarks.common import load_bench_engine, save_bench_engine
+    from repro.core.sweep import ENGINE_VERSION
+
+    smoke = run_smoke()
+    data = load_bench_engine()
+    data["engine_version"] = ENGINE_VERSION
+    baseline = data.get("ci_baseline")
+
+    failures = []
+    if baseline and not args.reset_baseline:
+        for name, cur in smoke.items():
+            base_rps = baseline.get(name, {}).get("sim_rounds_per_s")
+            if base_rps and cur["sim_rounds_per_s"] * REGRESSION_FACTOR < base_rps:
+                failures.append(
+                    f"{name}: {cur['sim_rounds_per_s']:.0f} rounds/s is >"
+                    f"{REGRESSION_FACTOR:.0f}x below baseline {base_rps:.0f}"
+                )
+    else:
+        data["ci_baseline"] = smoke
+        print("# recorded new CI baseline")
+
+    data["last_smoke"] = smoke
+    save_bench_engine(data)
+
+    if failures:
+        for f in failures:
+            print(f"PERF REGRESSION: {f}", file=sys.stderr)
+        sys.exit(1)
+    print("# perf smoke OK")
+
+
+if __name__ == "__main__":
+    main()

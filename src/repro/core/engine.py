@@ -43,13 +43,27 @@ Protocols (``EngineConfig.protocol``):
       meta-data; the costs are batch planning (pipelined behind the
       previous batch) and per-dependency scheduler checks.
 
-Everything is jitted; the round loop runs in ``lax.fori_loop`` chunks.
+Execution model (this file + ``repro.core.sweep``):
+
+  * The step builders take a static :class:`PlanMeta` (shapes only) and a
+    dict of *traced* plan arrays, so one XLA compilation serves every cell
+    of a figure sweep that shares (protocol statics, shapes). The compile
+    cache and the vmapped multi-cell driver live in ``repro.core.sweep``.
+  * **Event leaping** (``EngineConfig.event_leap``, on by default): each
+    step computes the earliest future round at which any slot can act —
+    the min over ``busy_until`` / ``msg_arrive`` / ``release_at`` /
+    ``plan_fin`` timers, restricted to slots whose phase cannot act sooner
+    — and advances ``r`` by the whole gap, scaling the lane-accounting
+    increment by the leap width. Commits, aborts, round counts and the
+    Fig-10 breakdown are bit-identical to the dense loop (property-tested
+    in ``tests/test_engine_leap.py``). Round chunks therefore run as a
+    ``lax.while_loop`` on the absolute round counter instead of a dense
+    ``fori_loop``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -64,8 +78,9 @@ from repro.core.lockgrant import (
     REQ_READ,
     REQ_RELEASE,
     REQ_WRITE,
+    inverse_permutation,
     lex_order,
-    segment_sum_by_key,
+    segment_sum_sorted,
     segmented_grant,
 )
 from repro.core.workloads import MODE_READ, MODE_WRITE, Workload
@@ -78,6 +93,8 @@ EPOCH_BITS = 12
 # Lane-time categories (paper Fig 10 breakdown)
 CAT_IDLE, CAT_EXEC, CAT_LOCK, CAT_WAIT, CAT_DL, CAT_MSG = range(6)
 NCAT = 6
+
+_IMAX = jnp.iinfo(jnp.int32).max
 
 PROTOCOLS = (
     "twopl_waitdie",
@@ -100,6 +117,11 @@ class EngineConfig:
     # SPLIT ORTHRUS / Split Deadlock-free (paper §4.3): indexes physically
     # partitioned across worker threads -> no shared-index cache penalty.
     split_index: bool = False
+    # Event leaping: advance r straight to the next-event round instead of
+    # stepping every dense round. Simulated results are identical either
+    # way; False forces the dense reference loop (used by the equivalence
+    # property tests).
+    event_leap: bool = True
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -137,6 +159,38 @@ class EngineConfig:
             "twopl_dreadlocks": "dreadlocks",
         }.get(self.protocol, "none")
 
+    def trace_statics(self) -> tuple:
+        """The config fields the traced step computation depends on.
+
+        Chunk length and termination targets are host-loop concerns (the
+        chunk end is a traced argument), so two cells differing only in
+        simulation budget share one compilation.
+        """
+        return (
+            self.protocol,
+            self.n_exec,
+            self.n_cc,
+            self.window,
+            self.split_index,
+            self.event_leap,
+            self.cost,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMeta:
+    """Static (shape-only) description of a plan: everything ``make_step``
+    bakes into the compiled computation. Plans sharing a ``PlanMeta`` (and
+    ``EngineConfig.trace_statics``) share one XLA compilation; the actual
+    plan arrays are traced arguments."""
+
+    n_txns: int  # N
+    max_keys: int  # K
+    num_records: int  # R, padded to a pow2 bucket by _compact_keys
+    lane_cols: int = 0  # H-Store lane_stream width; 0 = absent
+    pred_width: int = 0  # batch schedule: pred_pad columns
+    num_batches: int = 0  # batch schedule: NB
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -149,6 +203,53 @@ class SimResult:
     throughput_txn_s: float
     breakdown: dict[str, float]  # exec-lane time fractions
     raw: dict[str, Any]
+
+
+def plan_meta(cfg: EngineConfig, plan: planner_lib.Plan) -> PlanMeta:
+    """Shape signature of a plan for the compile cache / vmap grouping."""
+    if cfg.is_batch_planned:
+        sched = plan.sched
+        assert sched is not None, "batch protocols require a planned schedule"
+        return PlanMeta(
+            n_txns=sched.n_txns,
+            max_keys=plan.keys.shape[1],
+            num_records=plan.num_records,
+            pred_width=plan.sched.pred_pad.shape[1],
+            num_batches=sched.num_batches,
+        )
+    return PlanMeta(
+        n_txns=plan.keys.shape[0],
+        max_keys=plan.keys.shape[1],
+        num_records=plan.num_records,
+        lane_cols=0 if plan.lane_stream is None else plan.lane_stream.shape[1],
+    )
+
+
+def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
+    """The traced plan arrays consumed by the step builders."""
+    if cfg.is_batch_planned:
+        sched = plan.sched
+        return dict(
+            exec_ops=np.asarray(plan.exec_ops, np.int32),
+            npred=np.asarray(sched.npred, np.int32),
+            pred_pad=np.asarray(sched.pred_pad, np.int32),
+            batch_of=np.asarray(sched.batch_of, np.int32),
+            batch_start=np.asarray(sched.batch_start, np.int32),
+            batch_size=np.asarray(sched.batch_size, np.int32),
+            plan_rounds=_batch_plan_rounds(cfg, plan),
+        )
+    p = dict(
+        keys=np.asarray(plan.keys, np.int32),
+        modes=np.asarray(plan.modes, np.int32),
+        part=np.asarray(plan.part, np.int32),
+        nkeys=np.asarray(plan.nkeys, np.int32),
+        exec_ops=np.asarray(plan.exec_ops, np.int32),
+        ollp=np.asarray(plan.ollp, bool),
+        ollp_miss=np.asarray(plan.ollp_miss, bool),
+    )
+    if plan.lane_stream is not None:
+        p["lane_stream"] = np.asarray(plan.lane_stream, np.int32)
+    return p
 
 
 def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
@@ -182,36 +283,40 @@ def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
         reach=jnp.zeros((T, T), jnp.bool_),
         wh=jnp.full((R,), -1, i32),
         rc=jnp.zeros((R,), i32),
-        lnf=jnp.zeros((R,), i32),
-        ep=jnp.full((R,), -10, i32),
-        cnt_cur=jnp.zeros((R,), i32),
-        cnt_prev=jnp.zeros((R,), i32),
-        last_lane=jnp.full((R,), -1, i32),
+        # packed per-record cost-model state (one gather + one scatter per
+        # round each instead of five):
+        #   heat[:, 0] = ep, heat[:, 1] = cnt_cur, heat[:, 2] = cnt_prev
+        #   line[:, 0] = lnf (line-free round), line[:, 1] = last_lane
+        heat=jnp.concatenate(
+            [jnp.full((R, 1), -10, i32), jnp.zeros((R, 2), i32)], axis=1
+        ),
+        line=jnp.concatenate(
+            [jnp.zeros((R, 1), i32), jnp.full((R, 1), -1, i32)], axis=1
+        ),
         commits=jnp.zeros((), i32),
         aborts_dl=jnp.zeros((), i32),
         aborts_ollp=jnp.zeros((), i32),
         wasted=jnp.zeros((), i32),
         cat=jnp.zeros((NCAT,), jnp.int32),
+        steps=jnp.zeros((), i32),
     )
 
 
-def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
-    """Build the jitted single-round transition for this config + plan."""
+def make_step(cfg: EngineConfig, meta: PlanMeta):
+    """Build the single-round transition for this config + plan shape.
+
+    Returns ``step(p, s, r_end)`` where ``p`` is the traced plan-array dict
+    (see :func:`plan_device`), ``s`` the round state, and ``r_end`` the
+    exclusive chunk bound that event leaps are clamped to.
+    """
     cm = cfg.cost
-    T, K = cfg.n_slots, plan.keys.shape[1]
-    R = plan.num_records
-    N = plan.keys.shape[0]
+    T, K = cfg.n_slots, meta.max_keys
+    R = meta.num_records
+    N = meta.n_txns
     W = cfg.window
     n_cc = max(cfg.n_cc, 1)
     cap_keys = cm.cc_keys_per_round  # per CC lane per round, in key-ops
-
-    wkeys = jnp.asarray(plan.keys, jnp.int32)
-    wmodes = jnp.asarray(plan.modes, jnp.int32)
-    wpart = jnp.asarray(plan.part, jnp.int32)
-    wnkeys = jnp.asarray(plan.nkeys, jnp.int32)
-    wexec = jnp.asarray(plan.exec_ops, jnp.int32)
-    wollp = jnp.asarray(plan.ollp)
-    wmiss = jnp.asarray(plan.ollp_miss)
+    has_lane_stream = meta.lane_cols > 0
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
@@ -234,30 +339,33 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
         "dreadlocks": cm.dreadlocks_spin_cycles,
     }.get(dl, 0)
 
-    lane_stream = (
-        None
-        if plan.lane_stream is None
-        else jnp.asarray(plan.lane_stream, jnp.int32)
-    )
-
-    def gather_txn(s):
-        """Per-slot workload arrays for the currently-loaded txns."""
-        widx = jnp.where(s["tid"] >= 0, s["widx"] % N, 0)
-        return (
-            wkeys[widx],
-            wmodes[widx],
-            wpart[widx] % n_cc,
-            wnkeys[widx],
-            wexec[widx],
-            wollp[widx],
-            wmiss[widx],
-        )
-
     rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
 
-    def step(_, s):
+    def step(p, s, r_end):
         r = s["r"]
-        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn(s)
+        wkeys = p["keys"]
+        wmodes = p["modes"]
+        wpart = p["part"]
+        wnkeys = p["nkeys"]
+        wexec = p["exec_ops"]
+        wollp = p["ollp"]
+        wmiss = p["ollp_miss"]
+        lane_stream = p["lane_stream"] if has_lane_stream else None
+
+        def gather_txn():
+            """Per-slot workload arrays for the currently-loaded txns."""
+            widx = jnp.where(s["tid"] >= 0, s["widx"] % N, 0)
+            return (
+                wkeys[widx],
+                wmodes[widx],
+                wpart[widx] % n_cc,
+                wnkeys[widx],
+                wexec[widx],
+                wollp[widx],
+                wmiss[widx],
+            )
+
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
         kvalid = kk[None, :] < nkeys[:, None]
         free = s["busy_until"] <= r
 
@@ -272,7 +380,7 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
         else:
             # H-Store routing: each worker lane pulls the next txn homed to
             # its partition (lanes with no homed txns stay idle).
-            M = lane_stream.shape[1]
+            M = meta.lane_cols
             widx = lane_stream[slot_ids, s["lane_ctr"] % M]
             adm = empty & (widx >= 0)
             new_tid = s["lane_ctr"] * T + slot_ids
@@ -283,7 +391,7 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
         s["ts"] = jnp.where(adm, new_tid, s["ts"])
         s["attempt"] = jnp.where(adm, 0, s["attempt"])
         # re-gather for freshly admitted slots
-        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn(s)
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
         kvalid = kk[None, :] < nkeys[:, None]
         init_busy = rounds_of(
             cm.txn_fixed_cycles
@@ -343,23 +451,31 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
             acq_keys = acq_cand[:, None] & in_cur_group & ~s["adm_done"]
             rel_cand = (s["phase"] == REL) & (s["release_at"] <= r)
             rel_keys = rel_cand[:, None] & s["granted"] & ~s["rel_done"]
-            ent_active = (acq_keys | rel_keys).reshape(-1)
-            ent_cc = jnp.where(ent_active.reshape(T, K), ccids, n_cc).reshape(-1)
-            ent_ts = jnp.broadcast_to(s["ts"][:, None], (T, K)).reshape(-1)
-            order = lex_order(ent_cc, ent_ts)
-            inv = jnp.argsort(order)
-            cc_sorted = ent_cc[order]
-            segstart = jnp.concatenate(
-                [jnp.ones((1,), jnp.bool_), cc_sorted[1:] != cc_sorted[:-1]]
+            # Rank every active entry within its CC lane by (ts, key slot)
+            # — the admission order — without sorting all T*K entries: a
+            # slot's entries share its (unique) ts, so a [T] slot sort plus
+            # per-CC prefix counts reproduces the (cc, ts, entry) rank
+            # exactly at a fraction of the cost.
+            act2d = acq_keys | rel_keys  # [T, K]
+            cc_act = jnp.where(act2d, ccids, n_cc)
+            cnt_tc = (
+                jnp.zeros((T, n_cc + 1), jnp.int32)
+                .at[jnp.broadcast_to(slot_ids[:, None], (T, K)), cc_act]
+                .add(1)
             )
-            pos_inc = jnp.cumsum(jnp.ones_like(cc_sorted))
-            base = jax.lax.cummax(
-                jnp.where(segstart, pos_inc - 1, jnp.iinfo(jnp.int32).min)
+            slot_order = jnp.argsort(s["ts"], stable=True)  # ts unique
+            cnt_sorted = cnt_tc[slot_order]
+            excl_sorted = jnp.cumsum(cnt_sorted, axis=0) - cnt_sorted
+            excl = jnp.zeros_like(excl_sorted).at[slot_order].set(excl_sorted)
+            base_rank = jnp.take_along_axis(excl, cc_act, axis=1)
+            same_cc_earlier = (
+                (cc_act[:, :, None] == cc_act[:, None, :])
+                & act2d[:, None, :]
+                & (kk[None, None, :] < kk[None, :, None])
             )
-            seg_pos = pos_inc - base  # 1-based within CC lane
-            processed = (seg_pos <= cap_keys)[inv] & ent_active
-
-            proc2d = processed.reshape(T, K)
+            within = same_cc_earlier.sum(-1, dtype=jnp.int32)
+            seg_pos2d = base_rank + within + 1  # 1-based within CC lane
+            proc2d = (seg_pos2d <= cap_keys) & act2d
             s["adm_done"] = s["adm_done"] | (proc2d & acq_keys.reshape(T, K))
             # group fully admitted -> requests live in the CC's lock table
             grp_all = jnp.where(in_cur_group, s["adm_done"], True).all(axis=1)
@@ -445,7 +561,7 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
         rcv = jnp.where(in_rng, s["rc"][safe], 0)
         newop2d = want_new | rel_entries  # fresh lock-table ops this round
         order = lex_order(ent_key, ent_enq)
-        inv = jnp.argsort(order)
+        inv = inverse_permutation(order)
         g_sorted, cont_sorted, new_sorted = segmented_grant(
             ent_key[order],
             ent_enq[order],
@@ -582,16 +698,18 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
             mutate = newop & ~abort_dl[:, None]  # dies don't enqueue
             e = r >> EPOCH_BITS
             opk_r = jnp.minimum(jnp.where(newop, keys, 0), R - 1)
-            ep_k = s["ep"][opk_r]
-            cur_k = s["cnt_cur"][opk_r]
-            prev_k = s["cnt_prev"][opk_r]
+            heat_k = s["heat"][opk_r]  # [T, K, 3] = (ep, cnt_cur, cnt_prev)
+            ep_k = heat_k[..., 0]
+            cur_k = heat_k[..., 1]
+            prev_k = heat_k[..., 2]
+            line_k = s["line"][opk_r]  # [T, K, 2] = (lnf, last_lane)
             sharers = jnp.where(
                 ep_k == e,
                 jnp.maximum(prev_k, cur_k),
                 jnp.where(ep_k == e - 1, cur_k, 0),
             )
             lane2d = jnp.broadcast_to(lane_of[:, None], (T, K))
-            remote = s["last_lane"][opk_r] != lane2d
+            remote = line_k[..., 1] != lane2d
             coh = jnp.where(
                 remote,
                 cm.coherence_cycles_per_sharer
@@ -606,32 +724,38 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
                     contend - 1, 0
                 )
             dur = rounds_of(lock_op_cycles + coh)
-            lnf_cur = s["lnf"][opk_r]
+            lnf_cur = line_k[..., 0]
             backlog = jnp.maximum(jnp.where(mutate, lnf_cur - r, 0), 0)
             charge = jnp.where(newop, backlog + dur, 0).sum(axis=1)
             # occupancy: same-round queue mutations serialize on the line
-            mut_in_seg = segment_sum_by_key(
-                jnp.where(mutate, keys, KEY_SENTINEL).reshape(-1),
-                mutate.reshape(-1).astype(jnp.int32),
-            ).reshape(T, K)
+            # per-key mutation count, reusing the grant pass's (key, enq)
+            # sort: every mutating entry was an active entry there, and the
+            # result is consumed only at mutating entries
+            mut_in_seg = segment_sum_sorted(
+                ent_key[order],
+                mutate.reshape(-1).astype(jnp.int32)[order],
+            )[inv].reshape(T, K)
             occupy = jnp.where(mutate, mut_in_seg * dur, 0)
             tgt = jnp.maximum(lnf_cur, r) + occupy
-            opk_scatter = jnp.where(mutate, opk_r, R)
-            s["lnf"] = s["lnf"].at[opk_scatter].max(tgt, mode="drop")
-            # epoch sharer-heat bookkeeping (same value per key: idempotent)
             opk_heat = jnp.where(newop, opk_r, R)
+            # packed writes: lnf applies only at mutating entries (a die
+            # probe occupies nothing), masked inside the max via INT32_MIN;
+            # last_lane applies at every fresh op. Heat values are
+            # per-key-identical, so duplicate-index set is idempotent.
+            line_upd = jnp.stack(
+                [jnp.where(mutate, tgt, jnp.iinfo(jnp.int32).min), lane2d],
+                axis=-1,
+            )
+            s["line"] = s["line"].at[opk_heat].max(line_upd, mode="drop")
             new_prev = jnp.where(
                 ep_k == e, prev_k, jnp.where(ep_k == e - 1, cur_k, 0)
             )
             new_cur = jnp.where(ep_k == e, cur_k, 0) + new_in_seg
-            s["cnt_prev"] = s["cnt_prev"].at[opk_heat].set(
-                new_prev, mode="drop"
+            heat_upd = jnp.stack(
+                [jnp.broadcast_to(e, new_cur.shape), new_cur, new_prev],
+                axis=-1,
             )
-            s["cnt_cur"] = s["cnt_cur"].at[opk_heat].set(new_cur, mode="drop")
-            s["ep"] = s["ep"].at[opk_heat].set(e, mode="drop")
-            s["last_lane"] = s["last_lane"].at[opk_heat].max(
-                lane2d, mode="drop"
-            )
+            s["heat"] = s["heat"].at[opk_heat].set(heat_upd, mode="drop")
             charged = charge > 0
             s["busy_until"] = jnp.where(
                 charged, jnp.maximum(s["busy_until"], r) + charge,
@@ -809,9 +933,73 @@ def make_step(cfg: EngineConfig, plan: planner_lib.Plan):
             cat_counts = jax.ops.segment_sum(
                 jnp.ones((T,), jnp.int32), slot_cat, num_segments=NCAT
             )
-        s["cat"] = s["cat"] + cat_counts
 
-        s["r"] = r + 1
+        # ------------------------------------------------ 12. event leap
+        # Advance straight to the next round at which any slot can act.
+        # Every skipped round is provably a no-op: every per-slot timer
+        # (busy_until / msg_arrive / release_at) lies beyond it and no slot
+        # is in a phase that acts unconditionally each round. Lane
+        # accounting is exact because the post-transition lane state (the
+        # `cat_counts` just computed) persists unchanged through the gap.
+        if cfg.event_leap:
+            ph = s["phase"]
+            busy2 = s["busy_until"] > r
+            free2 = ~busy2
+            # future per-slot timers; a busy expiry is always an event (it
+            # changes lane accounting even when no transition follows)
+            cand = jnp.where(busy2, s["busy_until"], _IMAX)
+            # admission, release processing and message arrival ignore the
+            # busy timer (stages 1, 4, 5 have no `free` gate), so their
+            # timers and ready-to-act states are tracked unconditionally
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], _IMAX))
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == REL) & (s["release_at"] > r), s["release_at"], _IMAX))
+            if lane_stream is None:
+                can_adm = jnp.ones((T,), jnp.bool_)
+            else:
+                can_adm = (
+                    lane_stream[slot_ids, s["lane_ctr"] % meta.lane_cols] >= 0
+                )
+            act_next = (
+                ((ph == EMPTY) & can_adm)
+                | ((ph == MSG) & (s["msg_arrive"] <= r))
+                | ((ph == REL) & (s["release_at"] <= r))
+                | (free2 & ((ph == INIT) | (ph == BACKOFF)))
+            )
+            if cfg.is_orthrus:
+                # a READY slot starts the round its lane goes idle; while
+                # the lane runs another slot, that slot's busy_until is the
+                # wake-up event (already a candidate above)
+                lane_exec_busy = jax.ops.segment_max(
+                    ((ph == EXEC) & busy2).astype(jnp.int32), lane_of,
+                    num_segments=cfg.n_exec,
+                )
+                act_next = act_next | (
+                    (ph == READY) & (lane_exec_busy[lane_of] == 0)
+                )
+            else:
+                # an acquiring slot with no pending (un-granted) request
+                # places its next one immediately; a blocked waiter is
+                # woken by its holder's release timer
+                blocked = jnp.take_along_axis(
+                    s["want"] & ~s["granted"],
+                    jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                ).squeeze(1)
+                act_next = act_next | ((ph == ACQ) & free2 & ~blocked)
+            if dl in ("waitfor", "dreadlocks"):
+                # graph detectors evolve every waiting round (reach-matrix
+                # propagation + per-round spin debt): stay dense while any
+                # slot waits
+                act_next = act_next | s["waited"].any()
+            cand = jnp.where(act_next, r + 1, cand)
+            nxt = jnp.clip(jnp.min(cand), r + 1, r_end)
+        else:
+            nxt = r + 1
+        leap = nxt - r
+        s["cat"] = s["cat"] + cat_counts * leap
+        s["steps"] = s["steps"] + 1
+        s["r"] = nxt
         return s
 
     return step
@@ -858,36 +1046,27 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         aborts_ollp=jnp.zeros((), i32),
         wasted=jnp.zeros((), i32),
         cat=jnp.zeros((NCAT,), i32),
+        steps=jnp.zeros((), i32),
     )
 
 
-def make_batch_step(cfg: EngineConfig, plan: planner_lib.Plan):
-    """Jitted single-round transition for the batch-planned protocols
-    (dgcc / quecc): lock-free execution over a precomputed dependency
-    schedule.
+def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
+    """Single-round transition for the batch-planned protocols (dgcc /
+    quecc): lock-free execution over a precomputed dependency schedule.
 
-    The round loop performs only (a) batch-boundary bookkeeping, (b)
-    admission of the current batch's transactions to exec-lane slots, and
-    (c) the wavefront-eligibility check "all planned predecessors
-    committed" — the dense-gather formulation of the ``dep_wavefront``
-    kernel contract (equivalence is property-tested). There is no lock
-    table, no deadlock logic, and no abort path.
+    Returns ``step(p, s, r_end)`` with the same contract as
+    :func:`make_step`. The round loop performs only (a) batch-boundary
+    bookkeeping, (b) admission of the current batch's transactions to
+    exec-lane slots, and (c) the wavefront-eligibility check "all planned
+    predecessors committed" — the dense-gather formulation of the
+    ``dep_wavefront`` kernel contract (equivalence is property-tested).
+    There is no lock table, no deadlock logic, and no abort path.
     """
     cm = cfg.cost
-    sched = plan.sched
-    assert sched is not None, "batch protocols require a planned schedule"
     T = cfg.n_slots
-    N = sched.n_txns
+    N = meta.n_txns
     W = cfg.window
-    NB = sched.num_batches
-
-    wexec = jnp.asarray(plan.exec_ops, jnp.int32)
-    wnpred = jnp.asarray(sched.npred, jnp.int32)
-    pred_pad = jnp.asarray(sched.pred_pad, jnp.int32)  # [N, P]
-    batch_of = jnp.asarray(sched.batch_of, jnp.int32)  # [N]
-    bstart = jnp.asarray(sched.batch_start, jnp.int32)  # [NB]
-    bsize = jnp.asarray(sched.batch_size, jnp.int32)
-    plan_rounds = jnp.asarray(_batch_plan_rounds(cfg, plan))  # [NB]
+    NB = meta.num_batches
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     shared_index = not cfg.split_index
@@ -898,8 +1077,15 @@ def make_batch_step(cfg: EngineConfig, plan: planner_lib.Plan):
     exec_rounds_one = rounds_of(exec_cycles_per_op)
     imax = jnp.iinfo(jnp.int32).max
 
-    def step(_, s):
+    def step(p, s, r_end):
         r = s["r"]
+        wexec = p["exec_ops"]
+        wnpred = p["npred"]
+        pred_pad = p["pred_pad"]  # [N, P]
+        batch_of = p["batch_of"]  # [N]
+        bstart = p["batch_start"]  # [NB]
+        bsize = p["batch_size"]
+        plan_rounds = p["plan_rounds"]  # [NB]
 
         # -------------------------------------------- 1. batch rollover
         # When every transaction of the current batch has committed, open
@@ -1030,9 +1216,57 @@ def make_batch_step(cfg: EngineConfig, plan: planner_lib.Plan):
             lane_cat,
             num_segments=NCAT,
         )
-        s["cat"] = s["cat"] + cat_counts
 
-        s["r"] = r + 1
+        # -------------------------------------------- 8. event leap
+        # Timers: busy_until (init dep-check spans, exec, pred commits),
+        # msg_arrive, and the scalar admission gate (plan_fin / batch
+        # rollover). A dep-blocked READY slot is woken by its predecessor's
+        # commit (the pred's busy_until); a dep-clear READY slot starts the
+        # round its lane goes idle.
+        if cfg.event_leap:
+            ph = s["phase"]
+            busy3 = s["busy_until"] > r
+            free3 = ~busy3
+            cand = jnp.where(busy3, s["busy_until"], imax)
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], imax))
+            act_next = (
+                (free3 & (ph == INIT))
+                | ((ph == MSG) & (s["msg_arrive"] <= r))
+            )
+            preds2 = pred_pad[s["widx"]]
+            dep_ok2 = (
+                (preds2 < 0) | s["done"][jnp.maximum(preds2, 0)]
+            ).all(axis=1)
+            lane_exec_busy = jax.ops.segment_max(
+                ((ph == EXEC) & busy3).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            act_next = act_next | (
+                (ph == READY) & dep_ok2 & (lane_exec_busy[lane_of] == 0)
+            )
+            cand = jnp.where(act_next, r + 1, cand)
+            # admission is a scalar event: the next batch opens the round
+            # after batch_left hits zero; within a batch, empty slots admit
+            # once plan_fin has passed and positions remain
+            bend2 = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
+            adm_evt = jnp.where(
+                s["batch_left"] == 0,
+                r + 1,
+                jnp.where(
+                    s["bpos"] < bend2,
+                    jnp.maximum(s["plan_fin"], r + 1),
+                    imax,
+                ),
+            )
+            adm_evt = jnp.where((ph == EMPTY).any(), adm_evt, imax)
+            nxt = jnp.clip(jnp.minimum(jnp.min(cand), adm_evt), r + 1, r_end)
+        else:
+            nxt = r + 1
+        leap = nxt - r
+        s["cat"] = s["cat"] + cat_counts * leap
+        s["steps"] = s["steps"] + 1
+        s["r"] = nxt
         return s
 
     return step
@@ -1043,7 +1277,11 @@ def _compact_keys(plan: planner_lib.Plan) -> planner_lib.Plan:
 
     np.unique is monotone, so canonical (sorted) acquisition orders are
     preserved; only the lock-table array size changes (10M-record tables
-    would otherwise dominate simulator memory traffic).
+    would otherwise dominate simulator memory traffic). The dense space is
+    padded up to a power-of-two bucket: padding records are never touched
+    by any key (all reads are masked by ``in_rng`` / ``kvalid``), so the
+    simulation is unchanged, while cells whose true record counts differ
+    only slightly land in the same bucket and share one compilation.
     """
     keys = plan.keys
     uniq, inv = np.unique(keys, return_inverse=True)
@@ -1052,16 +1290,16 @@ def _compact_keys(plan: planner_lib.Plan) -> planner_lib.Plan:
     if uniq[-1] == int(KEY_SENTINEL):  # keep padding as sentinel
         dense = np.where(keys == int(KEY_SENTINEL), int(KEY_SENTINEL), dense)
         num -= 1
-    plan = dataclasses.replace(plan, keys=dense, num_records=max(int(num), 1))
+    num = max(int(num), 1)
+    # 25% headroom before rounding up, so sweep cells whose distinct-key
+    # counts straddle a power of two still land in one bucket
+    r_pad = max(16, 1 << (num + (num >> 2) - 1).bit_length())
+    plan = dataclasses.replace(plan, keys=dense, num_records=r_pad)
     return plan
 
 
-def run_simulation(
-    cfg: EngineConfig,
-    workload: Workload,
-    seed: int = 0,
-) -> SimResult:
-    """Plan the workload for the protocol, then simulate."""
+def make_plan(cfg: EngineConfig, workload: Workload) -> planner_lib.Plan:
+    """Plan the workload for the protocol (engine-ready arrays)."""
     if cfg.protocol == "orthrus":
         plan = planner_lib.plan_orthrus(workload, cfg.n_cc)
     elif cfg.protocol == "deadlock_free":
@@ -1076,58 +1314,23 @@ def run_simulation(
         )
     else:
         plan = planner_lib.plan_dynamic(workload)
-
-    T, K = cfg.n_slots, plan.keys.shape[1]
-    if cfg.is_batch_planned:
-        step = make_batch_step(cfg, plan)
-        state = _batch_state0(cfg, plan, T)
-    else:
+    if not cfg.is_batch_planned:
         plan = _compact_keys(plan)
-        step = make_step(cfg, plan)
-        state = _state0(cfg, plan.num_records, T, K)
+    return plan
 
-    @functools.partial(jax.jit, donate_argnums=0)
-    def run_chunk(state):
-        return jax.lax.fori_loop(0, cfg.chunk_rounds, step, state)
-    warm_commits = 0
-    warm_aborts = 0
-    warm_cat = np.zeros(NCAT, np.int64)
-    rounds_done = 0
-    warm_rounds = 0
-    while rounds_done < cfg.max_rounds:
-        state = run_chunk(state)
-        rounds_done += cfg.chunk_rounds
-        commits = int(state["commits"])
-        if rounds_done <= cfg.warmup_rounds:
-            warm_commits = commits
-            warm_aborts = int(state["aborts_dl"])
-            warm_cat = np.asarray(state["cat"])
-            warm_rounds = rounds_done
-        if commits - warm_commits >= cfg.target_commits:
-            break
 
-    cm = cfg.cost
-    commits = int(state["commits"]) - warm_commits
-    meas_rounds = rounds_done - warm_rounds
-    sim_seconds = meas_rounds * cm.round_seconds
-    cat = np.asarray(state["cat"]) - warm_cat
-    total_lane_rounds = max(int(cat.sum()), 1)
-    names = ["idle", "exec", "lock", "wait", "deadlock", "msg"]
-    breakdown = {
-        n: float(cat[i]) / total_lane_rounds for i, n in enumerate(names)
-    }
-    return SimResult(
-        commits=commits,
-        aborts_deadlock=int(state["aborts_dl"]) - warm_aborts,
-        aborts_ollp=int(state["aborts_ollp"]),
-        wasted_ops=int(state["wasted"]),
-        rounds=meas_rounds,
-        sim_seconds=sim_seconds,
-        throughput_txn_s=commits / max(sim_seconds, 1e-12),
-        breakdown=breakdown,
-        raw=dict(
-            total_commits=int(state["commits"]),
-            next_txn=int(state["next_txn"]),
-            rounds_total=rounds_done,
-        ),
-    )
+def run_simulation(
+    cfg: EngineConfig,
+    workload: Workload,
+    seed: int = 0,
+) -> SimResult:
+    """Plan the workload for the protocol, then simulate.
+
+    Routed through :mod:`repro.core.sweep`, which caches the compiled
+    round-chunk runner across calls that share (protocol statics, plan
+    shapes) — an entire figure sweep typically compiles once.
+    """
+    from repro.core import sweep as sweep_lib  # deferred: sweep imports us
+
+    plan = make_plan(cfg, workload)
+    return sweep_lib.simulate_plans(cfg, [plan])[0]

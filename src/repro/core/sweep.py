@@ -1,0 +1,239 @@
+"""Shared-compilation sweep driver for the ORTHRUS engine.
+
+The paper's figures are sweeps — protocols x contention x thread counts x
+workloads — and the expensive part of every cell used to be a fresh XLA
+compile: plan arrays were baked into ``make_step`` as constants. This
+module separates *what varies per cell* (the traced plan/workload arrays)
+from *what forces recompilation* (protocol statics + array shapes):
+
+  * :func:`get_runner` — a process-wide cache of jitted round-chunk
+    runners keyed on ``(EngineConfig.trace_statics(), PlanMeta)``. One
+    compilation serves every cell of a figure that shares the key (the
+    chunk bound ``r_end`` is a traced argument, so cells may even differ
+    in simulation budget).
+  * :func:`simulate_plans` — the host loop (warmup snapshot, chunked
+    round execution, per-cell termination) over one *or several*
+    same-shape plans. Multiple plans are stacked and driven through a
+    single ``jax.vmap``-ed runner: one compiled program advances every
+    cell of a sweep concurrently, and each cell's counters are captured
+    at exactly the chunk boundary where the serial loop would have
+    stopped, so results are identical to running cells one at a time
+    (property-tested in ``tests/test_engine_leap.py``).
+  * :func:`run_cells` — batch API over (config, workload) cells: plans
+    each cell, groups by compile key, and vmaps each group.
+
+Warmup accounting: the warmup snapshot subtracts *all four* counters
+(commits, deadlock aborts, OLLP aborts, wasted ops) plus the lane-time
+breakdown, consistently — previously ``aborts_ollp``/``wasted_ops`` were
+reported raw while the others subtracted the snapshot.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as engine_lib
+from repro.core.engine import EngineConfig, NCAT, PlanMeta, SimResult
+from repro.core.workloads import Workload
+
+# Engine-code version tag. Bump whenever step semantics, accounting, or
+# planner output change in any result-visible way: benchmark caches
+# (benchmarks/common.py) hash this tag into their keys so stale cache
+# entries from an older engine can never silently mix with fresh ones.
+ENGINE_VERSION = "2-event-leap"
+
+_RUNNER_CACHE: dict = {}
+
+_SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps")
+
+
+def runner_cache_info() -> dict:
+    """Introspection for tests/tools: number of cached compiled runners."""
+    return {"entries": len(_RUNNER_CACHE), "keys": list(_RUNNER_CACHE)}
+
+
+def get_runner(cfg: EngineConfig, meta: PlanMeta, batched: bool):
+    """The jitted chunk runner for this (config-statics, plan-shape) key.
+
+    ``runner(p, state, r_end)`` advances ``state`` to round ``r_end``
+    (event-leaping when ``cfg.event_leap``); with ``batched=True`` the
+    runner is vmapped over a leading cell axis of ``p`` and ``state``.
+    """
+    key = (cfg.trace_statics(), meta, batched)
+    fn = _RUNNER_CACHE.get(key)
+    if fn is None:
+        builder = (
+            engine_lib.make_batch_step
+            if cfg.is_batch_planned
+            else engine_lib.make_step
+        )
+        step = builder(cfg, meta)
+
+        def run_chunk(p, state, r_end):
+            return jax.lax.while_loop(
+                lambda s: s["r"] < r_end,
+                lambda s: step(p, s, r_end),
+                state,
+            )
+
+        if batched:
+            run_chunk = jax.vmap(run_chunk, in_axes=(0, 0, None))
+        fn = jax.jit(run_chunk, donate_argnums=1)
+        _RUNNER_CACHE[key] = fn
+    return fn
+
+
+def _read_counters(state, n: int) -> dict[str, np.ndarray]:
+    """Device -> host transfer of the small per-cell counters."""
+    out = {k: np.atleast_1d(np.asarray(state[k])) for k in _SCALARS}
+    out["cat"] = np.asarray(state["cat"]).reshape(n, NCAT)
+    return out
+
+
+def _zeros_like_counters(n: int) -> dict[str, np.ndarray]:
+    out = {k: np.zeros((n,), np.int64) for k in _SCALARS}
+    out["cat"] = np.zeros((n, NCAT), np.int64)
+    return out
+
+
+def _cell_slice(host: dict[str, np.ndarray], i: int) -> dict[str, np.ndarray]:
+    return {k: np.array(v[i], copy=True) for k, v in host.items()}
+
+
+def simulate_plans(
+    cfg: EngineConfig, plans: list, time_sink: dict | None = None
+) -> list[SimResult]:
+    """Run one simulation per plan, sharing a single compiled runner.
+
+    All plans must share a :class:`PlanMeta` (same shapes); a single plan
+    runs unbatched, several run stacked under ``jax.vmap``. Per-cell
+    counters are snapshotted at the chunk boundary where that cell meets
+    ``target_commits`` — exactly where a serial run would have stopped —
+    so batched and serial execution produce identical :class:`SimResult`s.
+    """
+    n = len(plans)
+    metas = {engine_lib.plan_meta(cfg, pl) for pl in plans}
+    assert len(metas) == 1, f"plans must share shapes, got {metas}"
+    meta = next(iter(metas))
+
+    ps = [engine_lib.plan_device(cfg, pl) for pl in plans]
+    T = cfg.n_slots
+    if cfg.is_batch_planned:
+        states = [engine_lib._batch_state0(cfg, pl, T) for pl in plans]
+    else:
+        states = [
+            engine_lib._state0(cfg, pl.num_records, T, meta.max_keys)
+            for pl in plans
+        ]
+    if n == 1:
+        p, state = ps[0], states[0]
+    else:
+        p = {k: np.stack([q[k] for q in ps]) for k in ps[0]}
+        state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    runner = get_runner(cfg, meta, batched=n > 1)
+
+    t0 = time.time()
+    warm = _zeros_like_counters(n)
+    warm_rounds = 0
+    # per-cell capture: (counters, warm-counters, rounds, warm-rounds)
+    snaps: list[tuple | None] = [None] * n
+    rounds_done = 0
+    while rounds_done < cfg.max_rounds:
+        r_end = rounds_done + cfg.chunk_rounds
+        state = runner(p, state, jnp.asarray(r_end, jnp.int32))
+        rounds_done = r_end
+        host = _read_counters(state, n)
+        if rounds_done <= cfg.warmup_rounds:
+            warm = host
+            warm_rounds = rounds_done
+        for i in range(n):
+            if (
+                snaps[i] is None
+                and host["commits"][i] - warm["commits"][i]
+                >= cfg.target_commits
+            ):
+                snaps[i] = (
+                    _cell_slice(host, i),
+                    _cell_slice(warm, i),
+                    rounds_done,
+                    warm_rounds,
+                )
+        if all(sn is not None for sn in snaps):
+            break
+    final = _read_counters(state, n)
+    wall = time.time() - t0
+    if time_sink is not None:
+        time_sink["wall_s"] = wall
+        time_sink["group_cells"] = n
+
+    cm = cfg.cost
+    results = []
+    for i in range(n):
+        snap, wsnap, ri, wri = snaps[i] or (
+            _cell_slice(final, i),
+            _cell_slice(warm, i),
+            rounds_done,
+            warm_rounds,
+        )
+        commits = int(snap["commits"]) - int(wsnap["commits"])
+        meas_rounds = ri - wri
+        sim_seconds = meas_rounds * cm.round_seconds
+        cat = snap["cat"].astype(np.int64) - wsnap["cat"].astype(np.int64)
+        total_lane_rounds = max(int(cat.sum()), 1)
+        names = ["idle", "exec", "lock", "wait", "deadlock", "msg"]
+        breakdown = {
+            nm: float(cat[k]) / total_lane_rounds for k, nm in enumerate(names)
+        }
+        results.append(
+            SimResult(
+                commits=commits,
+                aborts_deadlock=int(snap["aborts_dl"])
+                - int(wsnap["aborts_dl"]),
+                aborts_ollp=int(snap["aborts_ollp"])
+                - int(wsnap["aborts_ollp"]),
+                wasted_ops=int(snap["wasted"]) - int(wsnap["wasted"]),
+                rounds=meas_rounds,
+                sim_seconds=sim_seconds,
+                throughput_txn_s=commits / max(sim_seconds, 1e-12),
+                breakdown=breakdown,
+                raw=dict(
+                    total_commits=int(snap["commits"]),
+                    next_txn=int(snap["next_txn"]),
+                    rounds_total=ri,
+                    steps_executed=int(snap["steps"]),
+                    wall_s_group=round(wall, 3),
+                    group_cells=n,
+                    engine_version=ENGINE_VERSION,
+                ),
+            )
+        )
+    return results
+
+
+def run_cells(
+    cells: list[tuple[EngineConfig, Workload]],
+) -> list[SimResult]:
+    """Simulate many (config, workload) cells, sharing compilation.
+
+    Cells are planned, grouped by compile key — identical
+    ``EngineConfig`` + identical plan shapes — and each group runs as one
+    vmapped simulation. Results come back in input order and are
+    identical to calling :func:`engine_lib.run_simulation` per cell.
+    """
+    plans = [engine_lib.make_plan(cfg, wl) for cfg, wl in cells]
+    groups: dict = {}
+    for idx, ((cfg, _wl), plan) in enumerate(zip(cells, plans)):
+        key = (cfg, engine_lib.plan_meta(cfg, plan))
+        groups.setdefault(key, []).append(idx)
+    out: list = [None] * len(cells)
+    for (cfg, _meta), idxs in groups.items():
+        for idx, res in zip(
+            idxs, simulate_plans(cfg, [plans[i] for i in idxs])
+        ):
+            out[idx] = res
+    return out

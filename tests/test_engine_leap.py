@@ -1,0 +1,170 @@
+"""Event-leaping engine: equivalence and sweep-driver identity.
+
+The leaping engine's contract is *bit-identical simulation*: commits,
+aborts (both kinds), wasted ops, round counts, and the Fig-10 lane-time
+breakdown must match the dense reference loop exactly, for every
+protocol — and the vmapped multi-cell driver must match serial
+execution exactly. These tests are the guard rail for any future engine
+change (see ENGINE_VERSION in repro.core.sweep).
+"""
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import sweep
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+FAST = dict(max_rounds=2000, warmup_rounds=500, chunk_rounds=500,
+            target_commits=10**9)
+
+PROTO_KW = {
+    "twopl_waitdie": dict(n_exec=8),
+    "twopl_waitfor": dict(n_exec=8),
+    "twopl_dreadlocks": dict(n_exec=8),
+    "deadlock_free": dict(n_exec=8),
+    "orthrus": dict(n_cc=2, n_exec=6, window=2),
+    "partitioned_store": dict(n_exec=8),
+    "dgcc": dict(n_cc=2, n_exec=6, window=2),
+    "quecc": dict(n_cc=4, n_exec=6, window=2),
+}
+
+
+def _fingerprint(res):
+    """Everything the engine reports except wall-clock measurements."""
+    return (
+        res.commits,
+        res.aborts_deadlock,
+        res.aborts_ollp,
+        res.wasted_ops,
+        res.rounds,
+        res.sim_seconds,
+        tuple(sorted(res.breakdown.items())),
+        res.raw["total_commits"],
+        res.raw["next_txn"],
+        res.raw["rounds_total"],
+    )
+
+
+def _run(protocol, wl, leap, sim=FAST):
+    cfg = EngineConfig(protocol=protocol, event_leap=leap,
+                       **PROTO_KW[protocol], **sim)
+    return run_simulation(cfg, wl)
+
+
+@pytest.fixture(scope="module")
+def ycsb_hot():
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                       num_hot=8, seed=0)
+    )
+
+
+@pytest.mark.parametrize("protocol", sorted(PROTO_KW))
+def test_leap_matches_dense(ycsb_hot, protocol):
+    leap = _run(protocol, ycsb_hot, leap=True)
+    dense = _run(protocol, ycsb_hot, leap=False)
+    assert _fingerprint(leap) == _fingerprint(dense)
+    # leaping may only ever *reduce* the number of executed round steps
+    assert leap.raw["steps_executed"] <= dense.raw["steps_executed"]
+    assert dense.raw["steps_executed"] == dense.raw["rounds_total"]
+
+
+def test_leap_actually_skips_rounds(ycsb_hot):
+    """Batch-planned execution is mostly barrier waits: the leap must
+    skip a large fraction of rounds (this is the perf mechanism — if it
+    stops skipping, the speedup is silently gone)."""
+    res = _run("dgcc", ycsb_hot, leap=True)
+    assert res.raw["steps_executed"] < 0.7 * res.raw["rounds_total"]
+
+
+def test_leap_matches_dense_tpcc_ollp():
+    """TPC-C exercises OLLP reconnaissance, miss-aborts and retries."""
+    wl = make_workload(
+        WorkloadConfig(kind="tpcc", num_txns=512, num_warehouses=4,
+                       ollp_miss_prob=0.5, seed=4)
+    )
+    for protocol in ("deadlock_free", "twopl_waitdie"):
+        leap = _run(protocol, wl, leap=True)
+        dense = _run(protocol, wl, leap=False)
+        assert _fingerprint(leap) == _fingerprint(dense)
+        if protocol == "deadlock_free":
+            # dynamic 2PL reads indexes inline (its planner clears the
+            # OLLP flags); the planned protocol must exercise the
+            # miss-abort-retry path
+            assert leap.aborts_ollp > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    protocol=st.sampled_from(sorted(PROTO_KW)),
+    num_hot=st.sampled_from([0, 4, 64, 1024]),
+    read_only=st.booleans(),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_leap_matches_dense_property(protocol, num_hot, read_only, seed):
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, read_only=read_only, seed=seed)
+    )
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    leap = _run(protocol, wl, leap=True, sim=sim)
+    dense = _run(protocol, wl, leap=False, sim=sim)
+    assert _fingerprint(leap) == _fingerprint(dense)
+
+
+def test_run_cells_vmapped_matches_serial():
+    """The vmapped multi-cell driver must reproduce serial execution
+    exactly, including per-cell warmup/termination accounting."""
+    cfg = EngineConfig(protocol="deadlock_free", n_exec=8, **FAST)
+    wls = [
+        make_workload(WorkloadConfig(kind="ycsb", num_txns=512,
+                                     num_records=20_000, num_hot=h, seed=1))
+        for h in (8, 64, 512)
+    ]
+    batched = sweep.run_cells([(cfg, w) for w in wls])
+    # the three cells must actually have shared one vmapped program
+    assert [r.raw["group_cells"] for r in batched] == [3, 3, 3]
+    serial = [run_simulation(cfg, w) for w in wls]
+    for b, s in zip(batched, serial):
+        assert _fingerprint(b) == _fingerprint(s)
+
+
+def test_compile_cache_shared_across_cells():
+    """Cells differing only in workload content (same shapes) must
+    reuse one compiled runner; simulation budget is not part of the
+    trace either."""
+    before = sweep.runner_cache_info()["entries"]
+    for hot, rounds in ((16, 1000), (128, 1500)):
+        cfg = EngineConfig(protocol="twopl_waitfor", n_exec=9,
+                           max_rounds=rounds, warmup_rounds=500,
+                           chunk_rounds=500, target_commits=10**9)
+        wl = make_workload(
+            WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                           num_hot=hot, seed=2)
+        )
+        run_simulation(cfg, wl)
+    assert sweep.runner_cache_info()["entries"] == before + 1
+
+
+def test_warmup_subtracts_all_counters():
+    """aborts_ollp and wasted_ops subtract the warmup snapshot exactly
+    like commits/aborts_deadlock (they used to be reported raw)."""
+    wl = make_workload(
+        WorkloadConfig(kind="tpcc", num_txns=512, num_warehouses=4,
+                       ollp_miss_prob=0.5, seed=4)
+    )
+    base = dict(max_rounds=2000, chunk_rounds=500, target_commits=10**9)
+    cfg_raw = EngineConfig(protocol="deadlock_free", n_exec=8,
+                           warmup_rounds=0, **base)
+    cfg_warm = EngineConfig(protocol="deadlock_free", n_exec=8,
+                            warmup_rounds=1000, **base)
+    raw = run_simulation(cfg_raw, wl)
+    warm = run_simulation(cfg_warm, wl)
+    # the warmup window contains OLLP aborts, so the measured counts
+    # must be strictly smaller than the full-run totals
+    assert raw.aborts_ollp > 0
+    assert warm.aborts_ollp < raw.aborts_ollp
+    assert warm.wasted_ops < raw.wasted_ops
+    assert warm.commits < raw.commits
