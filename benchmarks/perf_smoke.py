@@ -1,21 +1,29 @@
-"""Engine perf smoke: run a small fig13 subset end-to-end on the
-event-leaping engine, record wall seconds + simulated-rounds-per-second
-into ``artifacts/BENCH_engine.json``, and fail if throughput regresses
-more than 3x below the recorded CI baseline.
+"""Engine perf smoke: run a small fig13 subset end-to-end on the packed
+[SLOT_F, T] state-matrix engine, record wall seconds +
+simulated-rounds-per-second into ``artifacts/BENCH_engine.json``, and
+fail if throughput regresses more than 3x below the recorded CI
+baseline.
 
   PYTHONPATH=src REPRO_BENCH_FAST=1 python -m benchmarks.perf_smoke
   PYTHONPATH=src python -m benchmarks.perf_smoke --reset-baseline
+  PYTHONPATH=src python -m benchmarks.perf_smoke --compare-legacy
 
 The three cells cover the engine's step-cost regimes: dynamic 2PL
 (dense rounds, deadlock logic), per-transaction planned locking, and a
-batch-planned protocol (where event leaping skips ~80% of rounds). Runs
-always bypass the benchmark cache — the point is to time the engine,
-not to reread old results.
+batch-planned protocol (where event leaping skips ~80% of rounds). The
+first two are the saturated-lock-table cells whose wall-clock is pure
+per-round step cost — the regime the packed-state rewrite targets.
+``--compare-legacy`` additionally times the frozen pre-rewrite step
+builders (``state_layout="legacy"``) on the same cells and records the
+per-cell speedup under ``packed_vs_legacy`` (results are bit-identical;
+only the wall clock may differ). Runs always bypass the benchmark
+cache — the point is to time the engine, not to reread old results.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import sys
 import time
@@ -31,7 +39,7 @@ SMOKE_CELLS = [
 ]
 
 
-def run_smoke() -> dict[str, dict]:
+def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
     from benchmarks.common import SIM
     from repro.core.engine import EngineConfig, run_simulation
     from repro.core.sweep import ENGINE_VERSION
@@ -53,28 +61,61 @@ def run_smoke() -> dict[str, dict]:
             aborts_deadlock=res.aborts_deadlock,
             engine_version=ENGINE_VERSION,
         )
+        if compare_legacy:
+            # warm-vs-warm: both layouts have compiled runners cached, so
+            # the ratio is pure per-round step cost
+            t0 = time.time()
+            run_simulation(cfg, wl)
+            pwall = max(time.time() - t0, 1e-9)
+            legacy_cfg = dataclasses.replace(cfg, state_layout="legacy")
+            run_simulation(legacy_cfg, wl)  # warm the compile cache
+            t0 = time.time()
+            lres = run_simulation(legacy_cfg, wl)
+            lwall = max(time.time() - t0, 1e-9)
+            assert (lres.commits, lres.aborts_deadlock, lres.rounds) == (
+                res.commits, res.aborts_deadlock, res.rounds
+            ), f"{name}: legacy/packed results diverged"
+            out[name]["warm_wall_s"] = round(pwall, 2)
+            out[name]["legacy_warm_wall_s"] = round(lwall, 2)
+            out[name]["packed_vs_legacy"] = round(lwall / pwall, 2)
         print(
             f"{name:24s} wall={out[name]['wall_s']:6.2f}s "
             f"rounds/s={out[name]['sim_rounds_per_s']:9.1f} "
             f"steps={out[name]['steps_executed']}/{out[name]['rounds_total']}"
+            + (f" packed_vs_legacy={out[name]['packed_vs_legacy']:.2f}x"
+               if compare_legacy else "")
         )
     return out
+
+
+def baseline_version(baseline: dict) -> str | None:
+    versions = {c.get("engine_version") for c in baseline.values()}
+    return versions.pop() if len(versions) == 1 else None
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reset-baseline", action="store_true",
                     help="record this run as the new CI baseline")
+    ap.add_argument("--compare-legacy", action="store_true",
+                    help="also time the frozen pre-rewrite step builders "
+                         "and record the per-cell packed speedup")
     args = ap.parse_args()
     os.environ.setdefault("REPRO_BENCH_FAST", "1")
 
     from benchmarks.common import load_bench_engine, save_bench_engine
     from repro.core.sweep import ENGINE_VERSION
 
-    smoke = run_smoke()
+    smoke = run_smoke(compare_legacy=args.compare_legacy)
     data = load_bench_engine()
     data["engine_version"] = ENGINE_VERSION
     baseline = data.get("ci_baseline")
+    if baseline and baseline_version(baseline) != ENGINE_VERSION:
+        # an ENGINE_VERSION bump invalidates the recorded baseline: gate
+        # against stale-engine numbers only after an explicit re-record
+        print(f"# baseline is {baseline_version(baseline)!r}, engine is "
+              f"{ENGINE_VERSION!r}: re-recording baseline")
+        baseline = None
 
     failures = []
     if baseline and not args.reset_baseline:

@@ -59,6 +59,15 @@ Execution model (this file + ``repro.core.sweep``):
     in ``tests/test_engine_leap.py``). Round chunks therefore run as a
     ``lax.while_loop`` on the absolute round counter instead of a dense
     ``fori_loop``.
+  * **Packed state matrix**: all per-slot scalar fields live in one
+    field-major ``[SLOT_F, T]`` int32 matrix (see the ``C_*`` row
+    constants below); saturated lock tables leap almost never, so their
+    wall-clock is pure per-round step cost, and the packed layout plus a
+    sort-free FIFO grant pass cut that roughly in half. The pre-rewrite
+    step builders are frozen verbatim in ``repro.core.engine_legacy``
+    and selectable via ``EngineConfig(state_layout="legacy")`` — the
+    oracle for the differential conformance tests
+    (``tests/test_golden_traces.py``, ``tests/test_engine_leap.py``).
 """
 
 from __future__ import annotations
@@ -80,13 +89,78 @@ from repro.core.lockgrant import (
     REQ_WRITE,
     inverse_permutation,
     lex_order,
-    segment_sum_sorted,
     segmented_grant,
 )
 from repro.core.workloads import MODE_READ, MODE_WRITE, Workload
 
 # Phases
 EMPTY, INIT, ACQ, MSG, READY, EXEC, REL, BACKOFF = range(8)
+
+# ---------------------------------------------------------------------------
+# Packed state-matrix layout.
+#
+# Every per-slot scalar field lives in one int32 matrix ``state["slots"]``
+# of shape [SLOT_F, T] — one named row (C_* constant) per field, one
+# column per exec-lane slot; boolean fields are stored 0/1. This is the
+# SoA packing of the logical [T, F] per-slot record: stored field-major
+# so each field is a *contiguous* row (slot-major columns would make
+# every unpack a strided slice, measurably slower on the CPU backend). A
+# round unpacks the rows it needs into locals, runs ordinary column
+# algebra, and repacks with a single ``jnp.stack``: XLA carries one
+# buffer through the round loop instead of threading ~20 independent
+# tiny [T] arrays through every masked update.
+# [T, K] per-key masks and [R, ·] per-record state keep their own arrays.
+(
+    C_TID,         # loaded txn id (-1 = none)
+    C_WIDX,        # workload index of the loaded txn
+    C_LANE_CTR,    # H-Store per-lane stream cursor
+    C_TS,          # timestamp (= txn id; unique per slot)
+    C_PHASE,       # EMPTY .. BACKOFF
+    C_COMMITTING,  # bool: REL path ends in commit (vs abort/backoff)
+    C_BUSY_UNTIL,  # round until which the slot is busy
+    C_BUSY_KIND,   # CAT_* charged while busy
+    C_KPTR,        # next key index (program/canonical order)
+    C_ATTEMPT,     # retry attempt counter
+    C_CCPTR,       # ORTHRUS: first key of the current CC group
+    C_MSG_ARRIVE,  # ORTHRUS/batch: message arrival round
+    C_MSG_STAGE,   # ORTHRUS: 0 = acquire hop, 1 = response hop
+    C_RELEASE_AT,  # round the release (message) lands
+    C_WAITED,      # bool: slot was lock-waiting last round
+    C_DL_DEBT,     # accumulated deadlock-handling cycles (mod round)
+) = range(16)
+SLOT_F = 16
+SLOT_COLS = (
+    "tid", "widx", "lane_ctr", "ts", "phase", "committing", "busy_until",
+    "busy_kind", "kptr", "attempt", "ccptr", "msg_arrive", "msg_stage",
+    "release_at", "waited", "dl_debt",
+)
+
+# Batch-planned engine: a narrower [T, BATCH_SLOT_F] matrix (no lock
+# table, no deadlock/retry state).
+(
+    BC_TID,
+    BC_WIDX,
+    BC_TS,
+    BC_PHASE,
+    BC_BUSY_UNTIL,
+    BC_BUSY_KIND,
+    BC_MSG_ARRIVE,
+) = range(7)
+BATCH_SLOT_F = 7
+BATCH_SLOT_COLS = (
+    "tid", "widx", "ts", "phase", "busy_until", "busy_kind", "msg_arrive",
+)
+
+
+def slot_col(state: dict, col: int):
+    """Read one packed slot-matrix field (int32 [T]) from a state dict."""
+    return state["slots"][col]
+
+
+def slot_col_bool(state: dict, col: int):
+    """Read a 0/1 slot-matrix field as bool [T]."""
+    return state["slots"][col] != 0
+
 # Sharer-heat epoch length (rounds) for the coherence model: roughly how
 # long a hot line's sharer population stays cache-resident (~1 ms).
 EPOCH_BITS = 12
@@ -122,6 +196,12 @@ class EngineConfig:
     # way; False forces the dense reference loop (used by the equivalence
     # property tests).
     event_leap: bool = True
+    # State layout: "packed" = the [SLOT_F, T] slot-matrix engine (this
+    # file — the SoA packing of the logical [T, F] per-slot record);
+    # "legacy" = the frozen pre-rewrite dict-of-[T]-arrays step builders
+    # (repro.core.engine_legacy), kept only as the bit-exactness oracle
+    # for the differential conformance tests. Results are identical.
+    state_layout: str = "packed"
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -130,6 +210,7 @@ class EngineConfig:
 
     def __post_init__(self):
         assert self.protocol in PROTOCOLS, self.protocol
+        assert self.state_layout in ("packed", "legacy"), self.state_layout
         if self.protocol == "orthrus":
             assert self.n_cc >= 1
         if self.protocol == "quecc":
@@ -173,6 +254,7 @@ class EngineConfig:
             self.window,
             self.split_index,
             self.event_leap,
+            self.state_layout,
             self.cost,
         )
 
@@ -226,26 +308,50 @@ def plan_meta(cfg: EngineConfig, plan: planner_lib.Plan) -> PlanMeta:
 
 
 def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
-    """The traced plan arrays consumed by the step builders."""
+    """The traced plan arrays consumed by the step builders.
+
+    The packed engine reads fused per-txn scalar matrices
+    (``txn_scalars`` [N, 4]; batch: ``txn_ne`` [N, 2]) so each round
+    gathers one matrix row per slot instead of one gather per scalar
+    field; the legacy oracle reads the individual arrays. Both views are
+    emitted — jit drops whichever set the selected step builder leaves
+    unused. (The [N, K] key/mode/part arrays stay separate: fusing them
+    into an [N, K, 3] tensor makes every downstream use a strided slice,
+    which measured slower than three contiguous gathers.)
+    """
     if cfg.is_batch_planned:
         sched = plan.sched
+        npred = np.asarray(sched.npred, np.int32)
+        exec_ops = np.asarray(plan.exec_ops, np.int32)
         return dict(
-            exec_ops=np.asarray(plan.exec_ops, np.int32),
-            npred=np.asarray(sched.npred, np.int32),
+            exec_ops=exec_ops,
+            npred=npred,
+            txn_ne=np.stack([npred, exec_ops], axis=1),
             pred_pad=np.asarray(sched.pred_pad, np.int32),
             batch_of=np.asarray(sched.batch_of, np.int32),
             batch_start=np.asarray(sched.batch_start, np.int32),
             batch_size=np.asarray(sched.batch_size, np.int32),
             plan_rounds=_batch_plan_rounds(cfg, plan),
         )
+    keys = np.asarray(plan.keys, np.int32)
+    modes = np.asarray(plan.modes, np.int32)
+    part = np.asarray(plan.part, np.int32)
+    nkeys = np.asarray(plan.nkeys, np.int32)
+    exec_ops = np.asarray(plan.exec_ops, np.int32)
+    ollp = np.asarray(plan.ollp, bool)
+    ollp_miss = np.asarray(plan.ollp_miss, bool)
     p = dict(
-        keys=np.asarray(plan.keys, np.int32),
-        modes=np.asarray(plan.modes, np.int32),
-        part=np.asarray(plan.part, np.int32),
-        nkeys=np.asarray(plan.nkeys, np.int32),
-        exec_ops=np.asarray(plan.exec_ops, np.int32),
-        ollp=np.asarray(plan.ollp, bool),
-        ollp_miss=np.asarray(plan.ollp_miss, bool),
+        keys=keys,
+        modes=modes,
+        part=part,
+        nkeys=nkeys,
+        exec_ops=exec_ops,
+        ollp=ollp,
+        ollp_miss=ollp_miss,
+        txn_scalars=np.stack(
+            [nkeys, exec_ops, ollp.astype(np.int32),
+             ollp_miss.astype(np.int32)], axis=1
+        ),
     )
     if plan.lane_stream is not None:
         p["lane_stream"] = np.asarray(plan.lane_stream, np.int32)
@@ -255,31 +361,17 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
 def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
     R = num_records
     i32 = jnp.int32
-    return dict(
+    s = dict(
         r=jnp.zeros((), i32),
         next_txn=jnp.zeros((), i32),
         enq_ctr=jnp.ones((), i32),
-        tid=jnp.full((T,), -1, i32),
-        widx=jnp.zeros((T,), i32),
-        lane_ctr=jnp.zeros((T,), i32),
-        ts=jnp.zeros((T,), i32),
-        phase=jnp.zeros((T,), i32),
-        committing=jnp.zeros((T,), jnp.bool_),
-        busy_until=jnp.zeros((T,), i32),
-        busy_kind=jnp.zeros((T,), i32),
-        kptr=jnp.zeros((T,), i32),
-        attempt=jnp.zeros((T,), i32),
+        # all per-slot scalar fields: one [SLOT_F, T] matrix (see C_*)
+        slots=jnp.zeros((SLOT_F, T), i32).at[C_TID].set(-1),
         want=jnp.zeros((T, K), jnp.bool_),
         granted=jnp.zeros((T, K), jnp.bool_),
         enq=jnp.zeros((T, K), i32),
         adm_done=jnp.zeros((T, K), jnp.bool_),
         rel_done=jnp.zeros((T, K), jnp.bool_),
-        ccptr=jnp.zeros((T,), i32),
-        msg_arrive=jnp.zeros((T,), i32),
-        msg_stage=jnp.zeros((T,), i32),
-        release_at=jnp.zeros((T,), i32),
-        waited=jnp.zeros((T,), jnp.bool_),
-        dl_debt=jnp.zeros((T,), i32),
         reach=jnp.zeros((T, T), jnp.bool_),
         wh=jnp.full((R,), -1, i32),
         rc=jnp.zeros((R,), i32),
@@ -300,6 +392,18 @@ def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
         cat=jnp.zeros((NCAT,), jnp.int32),
         steps=jnp.zeros((), i32),
     )
+    if cfg.protocol != "orthrus":
+        # carried per-record same-round contention sums (see stage 9 of
+        # make_step): a single scatter-add per round removes the previous
+        # round's contributions (agg_prev_*) and applies the current
+        # ones, so the [R, 3] buffer is mutated once and only *then*
+        # read — XLA aliases it in place. (Any formulation that gathers
+        # the buffer both before and after its scatter makes copy
+        # insertion duplicate the whole [R, 3] buffer every round.)
+        s["agg_sum"] = jnp.zeros((R, 3), i32)
+        s["agg_prev_idx"] = jnp.full((T, K), R, i32)
+        s["agg_prev_upd"] = jnp.zeros((T, K, 3), i32)
+    return s
 
 
 def make_step(cfg: EngineConfig, meta: PlanMeta):
@@ -308,6 +412,24 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
     Returns ``step(p, s, r_end)`` where ``p`` is the traced plan-array dict
     (see :func:`plan_device`), ``s`` the round state, and ``r_end`` the
     exclusive chunk bound that event leaps are clamped to.
+
+    Packed layout: the round unpacks the [SLOT_F, T] slot matrix into
+    column locals, runs the protocol logic as straight-line column
+    algebra, and repacks with a single ``jnp.stack`` at the end.
+    Semantics are bit-identical to the frozen reference in
+    ``repro.core.engine_legacy`` (golden traces + differential property
+    tests enforce this).
+
+    Grant-pass formulation: every non-ORTHRUS protocol has at most one
+    pending lock request per slot (the ``kptr`` column), so FIFO grant
+    decisions reduce to an all-pairs [T, T] enqueue-stamp comparison
+    over compact [T] request vectors, and per-key same-round contention
+    counts come from the carried ``agg_sum`` accumulator (one
+    cancel-previous-and-apply scatter-add per round). This replaces the
+    legacy engine's (key, enq) sort + segmented scans — the hottest ops
+    of its round loop on saturated lock tables. ORTHRUS admits whole
+    key-groups at once (several pending entries per slot), so it keeps
+    the sorted segmented-grant path.
     """
     cm = cfg.cost
     T, K = cfg.n_slots, meta.max_keys
@@ -321,6 +443,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
     kk = jnp.arange(K, dtype=jnp.int32)
+    i32 = jnp.int32
 
     lock_op_cycles = (
         cm.partition_lock_cycles
@@ -346,110 +469,110 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         wkeys = p["keys"]
         wmodes = p["modes"]
         wpart = p["part"]
-        wnkeys = p["nkeys"]
-        wexec = p["exec_ops"]
-        wollp = p["ollp"]
-        wmiss = p["ollp_miss"]
+        sc_all = p["txn_scalars"]  # [N, 4] = (nkeys, exec_ops, ollp, miss)
         lane_stream = p["lane_stream"] if has_lane_stream else None
 
-        def gather_txn():
-            """Per-slot workload arrays for the currently-loaded txns."""
-            widx = jnp.where(s["tid"] >= 0, s["widx"] % N, 0)
-            return (
-                wkeys[widx],
-                wmodes[widx],
-                wpart[widx] % n_cc,
-                wnkeys[widx],
-                wexec[widx],
-                wollp[widx],
-                wmiss[widx],
-            )
+        sl = s["slots"]
+        tid = sl[C_TID]
+        widx = sl[C_WIDX]
+        lane_ctr = sl[C_LANE_CTR]
+        ts = sl[C_TS]
+        phase = sl[C_PHASE]
+        committing = sl[C_COMMITTING] != 0
+        busy_until = sl[C_BUSY_UNTIL]
+        busy_kind = sl[C_BUSY_KIND]
+        kptr = sl[C_KPTR]
+        attempt = sl[C_ATTEMPT]
+        ccptr = sl[C_CCPTR]
+        msg_arrive = sl[C_MSG_ARRIVE]
+        msg_stage = sl[C_MSG_STAGE]
+        release_at = sl[C_RELEASE_AT]
+        waited = sl[C_WAITED] != 0
+        dl_debt = sl[C_DL_DEBT]
 
-        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
-        kvalid = kk[None, :] < nkeys[:, None]
-        free = s["busy_until"] <= r
+        free = busy_until <= r
 
-        # ------------------------------------------------ 1. new admissions
-        empty = s["phase"] == EMPTY
+        # ------------------------------------------ 1+2. admission & retry
+        # New admissions (EMPTY slots) and backoff->retry (BACKOFF slots
+        # whose timer expired) are disjoint and share most column resets,
+        # so they run as one fused masked update.
+        empty = phase == EMPTY
         if lane_stream is None:
-            rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
+            rank = jnp.cumsum(empty.astype(i32)) - 1
             new_tid = s["next_txn"] + rank
             adm = empty
-            s["widx"] = jnp.where(adm, new_tid % N, s["widx"])
-            s["next_txn"] = s["next_txn"] + empty.sum(dtype=jnp.int32)
+            new_widx = new_tid % N
+            s["next_txn"] = s["next_txn"] + empty.sum(dtype=i32)
         else:
             # H-Store routing: each worker lane pulls the next txn homed to
             # its partition (lanes with no homed txns stay idle).
             M = meta.lane_cols
-            widx = lane_stream[slot_ids, s["lane_ctr"] % M]
-            adm = empty & (widx >= 0)
-            new_tid = s["lane_ctr"] * T + slot_ids
-            s["widx"] = jnp.where(adm, widx, s["widx"])
-            s["lane_ctr"] = jnp.where(adm, s["lane_ctr"] + 1, s["lane_ctr"])
-            s["next_txn"] = s["next_txn"] + adm.sum(dtype=jnp.int32)
-        s["tid"] = jnp.where(adm, new_tid, s["tid"])
-        s["ts"] = jnp.where(adm, new_tid, s["ts"])
-        s["attempt"] = jnp.where(adm, 0, s["attempt"])
-        # re-gather for freshly admitted slots
-        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
+            new_widx = lane_stream[slot_ids, lane_ctr % M]
+            adm = empty & (new_widx >= 0)
+            new_tid = lane_ctr * T + slot_ids
+            lane_ctr = jnp.where(adm, lane_ctr + 1, lane_ctr)
+            s["next_txn"] = s["next_txn"] + adm.sum(dtype=i32)
+        retry = (phase == BACKOFF) & free
+        reset = adm | retry
+        widx = jnp.where(adm, new_widx, widx)
+        tid = jnp.where(adm, new_tid, tid)
+        ts = jnp.where(adm, new_tid, ts)
+        attempt = jnp.where(adm, 0, jnp.where(retry, attempt + 1, attempt))
+        # per-slot workload columns for the loaded txns (the scalar
+        # per-txn fields ride one fused [N, 4] gather)
+        wsafe = jnp.where(tid >= 0, widx % N, 0)
+        keys = wkeys[wsafe]
+        modes = wmodes[wsafe]
+        ccids = wpart[wsafe] % n_cc
+        sc = sc_all[wsafe]
+        nkeys = sc[:, 0]
+        execops = sc[:, 1]
+        ollp = sc[:, 2] != 0
+        miss = sc[:, 3] != 0
         kvalid = kk[None, :] < nkeys[:, None]
         init_busy = rounds_of(
             cm.txn_fixed_cycles
             + jnp.where(ollp, cm.recon_cycles, 0)
         )
-        s["phase"] = jnp.where(adm, INIT, s["phase"])
-        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
-        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
-        for f in ("want", "granted", "adm_done", "rel_done"):
-            s[f] = jnp.where(adm[:, None], False, s[f])
-        s["kptr"] = jnp.where(adm, 0, s["kptr"])
-        s["ccptr"] = jnp.where(adm, 0, s["ccptr"])
-        s["waited"] = jnp.where(adm, False, s["waited"])
-
-        # ------------------------------------------------ 2. backoff -> retry
-        retry = (s["phase"] == BACKOFF) & free
-        s["phase"] = jnp.where(retry, INIT, s["phase"])
-        s["busy_until"] = jnp.where(
-            retry, r + rounds_of(cm.txn_fixed_cycles), s["busy_until"]
+        phase = jnp.where(reset, INIT, phase)
+        busy_until = jnp.where(
+            adm,
+            r + init_busy,
+            jnp.where(retry, r + rounds_of(cm.txn_fixed_cycles), busy_until),
         )
-        s["busy_kind"] = jnp.where(retry, CAT_LOCK, s["busy_kind"])
+        busy_kind = jnp.where(reset, CAT_LOCK, busy_kind)
         for f in ("want", "granted", "adm_done", "rel_done"):
-            s[f] = jnp.where(retry[:, None], False, s[f])
-        s["kptr"] = jnp.where(retry, 0, s["kptr"])
-        s["ccptr"] = jnp.where(retry, 0, s["ccptr"])
-        s["attempt"] = jnp.where(retry, s["attempt"] + 1, s["attempt"])
-        s["waited"] = jnp.where(retry, False, s["waited"])
+            s[f] = jnp.where(reset[:, None], False, s[f])
+        kptr = jnp.where(reset, 0, kptr)
+        ccptr = jnp.where(reset, 0, ccptr)
+        waited = jnp.where(reset, False, waited)
 
-        free = s["busy_until"] <= r
+        free = busy_until <= r
 
         # ------------------------------------------------ 3. INIT -> acquire
-        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
+        start = (phase == INIT) & free & (tid >= 0)
         if cfg.is_orthrus:
-            s["phase"] = jnp.where(start, MSG, s["phase"])
-            s["msg_stage"] = jnp.where(start, 0, s["msg_stage"])
-            s["msg_arrive"] = jnp.where(
-                start, r + cm.msg_hop_rounds, s["msg_arrive"]
-            )
+            phase = jnp.where(start, MSG, phase)
+            msg_stage = jnp.where(start, 0, msg_stage)
+            msg_arrive = jnp.where(start, r + cm.msg_hop_rounds, msg_arrive)
         else:
-            s["phase"] = jnp.where(start, ACQ, s["phase"])
+            phase = jnp.where(start, ACQ, phase)
 
         # ------------------------------------------------ 4. ORTHRUS CC work
         if cfg.is_orthrus:
             # -- admission of acquire-messages and release-messages, bounded
             #    by each CC lane's per-round key-op capacity, in ts order.
             in_cur_group = (
-                (kk[None, :] >= s["ccptr"][:, None])
+                (kk[None, :] >= ccptr[:, None])
                 & kvalid
                 & (ccids == jnp.take_along_axis(
-                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+                    ccids, jnp.minimum(ccptr, K - 1)[:, None], axis=1))
             )
             acq_cand = (
-                (s["phase"] == MSG)
-                & (s["msg_stage"] == 0)
-                & (s["msg_arrive"] <= r)
+                (phase == MSG) & (msg_stage == 0) & (msg_arrive <= r)
             )
             acq_keys = acq_cand[:, None] & in_cur_group & ~s["adm_done"]
-            rel_cand = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_cand = (phase == REL) & (release_at <= r)
             rel_keys = rel_cand[:, None] & s["granted"] & ~s["rel_done"]
             # Rank every active entry within its CC lane by (ts, key slot)
             # — the admission order — without sorting all T*K entries: a
@@ -463,7 +586,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 .at[jnp.broadcast_to(slot_ids[:, None], (T, K)), cc_act]
                 .add(1)
             )
-            slot_order = jnp.argsort(s["ts"], stable=True)  # ts unique
+            slot_order = jnp.argsort(ts, stable=True)  # ts unique
             cnt_sorted = cnt_tc[slot_order]
             excl_sorted = jnp.cumsum(cnt_sorted, axis=0) - cnt_sorted
             excl = jnp.zeros_like(excl_sorted).at[slot_order].set(excl_sorted)
@@ -481,7 +604,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             grp_all = jnp.where(in_cur_group, s["adm_done"], True).all(axis=1)
             admit_now = acq_cand & grp_all
             new_want = admit_now[:, None] & in_cur_group
-            s["phase"] = jnp.where(admit_now, ACQ, s["phase"])
+            phase = jnp.where(admit_now, ACQ, phase)
             # release processing
             do_rel = proc2d & rel_keys.reshape(T, K)
             rel_k = jnp.where(do_rel, keys, 0)
@@ -501,7 +624,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         # ------------------------------------------------ 5. shared releases
         rel_entries = jnp.zeros((T, K), jnp.bool_)
         if not cfg.is_orthrus:
-            rel_now = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_now = (phase == REL) & (release_at <= r)
             rel_entries = rel_now[:, None] & s["granted"]
             rel_k = jnp.where(rel_entries, keys, 0)
             is_wr = rel_entries & (modes == MODE_WRITE)
@@ -520,9 +643,9 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             want_new = new_want
         else:
             # 2PL/DF/pstore: single in-flight request at kptr when ACQ & free
-            at_k = kk[None, :] == s["kptr"][:, None]
+            at_k = kk[None, :] == kptr[:, None]
             need = (
-                ((s["phase"] == ACQ) & free)[:, None]
+                ((phase == ACQ) & free)[:, None]
                 & at_k
                 & kvalid
                 & ~s["granted"]
@@ -532,69 +655,118 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             s["want"] = s["want"] | need
 
         # assign enqueue order stamps to new queue entries
-        flat_new = want_new.reshape(-1)
-        new_rank = jnp.cumsum(flat_new.astype(jnp.int32)) - 1
-        enq_val = (s["enq_ctr"] + new_rank).reshape(T, K)
-        s["enq"] = jnp.where(want_new, enq_val, s["enq"])
-        n_new = flat_new.sum(dtype=jnp.int32)
+        if cfg.is_orthrus:
+            flat_new = want_new.reshape(-1)
+            new_rank = jnp.cumsum(flat_new.astype(jnp.int32)) - 1
+            enq_val = (s["enq_ctr"] + new_rank).reshape(T, K)
+            s["enq"] = jnp.where(want_new, enq_val, s["enq"])
+            n_new = flat_new.sum(dtype=jnp.int32)
+        else:
+            # <= 1 new request per slot: rank over [T], same stamps as the
+            # row-major flat cumsum (one entry per row)
+            new_t = want_new.any(axis=1)
+            new_rank = jnp.cumsum(new_t.astype(jnp.int32)) - 1
+            s["enq"] = jnp.where(
+                want_new, (s["enq_ctr"] + new_rank)[:, None], s["enq"]
+            )
+            n_new = new_t.sum(dtype=jnp.int32)
+        # releases consume stamp ids too (bit-compatible with the sorted
+        # grant pass, where they participate as REQ_RELEASE entries)
+        s["enq_ctr"] = s["enq_ctr"] + n_new + rel_entries.sum(dtype=jnp.int32)
 
         # ------------------------------------------------ 7. grant pass
         # Requests are live only while their slot is acquiring.
-        pend = s["want"] & ~s["granted"] & (s["phase"] == ACQ)[:, None]
-        ent_kind = jnp.where(
-            pend,
-            jnp.where(modes == MODE_WRITE, REQ_WRITE, REQ_READ),
-            jnp.where(rel_entries, REQ_RELEASE, REQ_NONE),
-        ).reshape(-1)
-        ent_key = jnp.where(
-            (pend | rel_entries), keys, KEY_SENTINEL
-        ).reshape(-1)
-        rel_enq = (s["enq_ctr"] + n_new) + jnp.arange(T * K, dtype=jnp.int32)
-        ent_enq = jnp.where(
-            rel_entries, rel_enq.reshape(T, K), s["enq"]
-        ).reshape(-1)
-        s["enq_ctr"] = s["enq_ctr"] + n_new + rel_entries.sum(dtype=jnp.int32)
-
-        safe = jnp.minimum(ent_key, R - 1)
-        in_rng = ent_key < R
-        wh_free = (s["wh"][safe] == -1) & in_rng
-        rcv = jnp.where(in_rng, s["rc"][safe], 0)
+        pend2d = s["want"] & ~s["granted"] & (phase == ACQ)[:, None]
         newop2d = want_new | rel_entries  # fresh lock-table ops this round
-        order = lex_order(ent_key, ent_enq)
-        inv = inverse_permutation(order)
-        g_sorted, cont_sorted, new_sorted = segmented_grant(
-            ent_key[order],
-            ent_enq[order],
-            ent_kind[order],
-            wh_free[order],
-            rcv[order],
-            weight=newop2d.reshape(-1).astype(jnp.int32)[order],
-        )
-        grant = g_sorted[inv].reshape(T, K)
-        # re-entrant grants bypass the FIFO: a slot re-requesting a key it
-        # already write-holds is granted immediately (real transactions
-        # touch the same row more than once; without this they would
-        # deadlock on their own lock)
-        ent_slot = jnp.broadcast_to(slot_ids[:, None], (T, K)).reshape(-1)
-        self_grant = (
-            (ent_kind != REQ_NONE)
-            & (ent_kind != REQ_RELEASE)
-            & in_rng
-            & (s["wh"][safe] == ent_slot)
-        )
-        grant = grant | self_grant.reshape(T, K)
-        contend = cont_sorted[inv].reshape(T, K)
-        new_in_seg = new_sorted[inv].reshape(T, K)
+        if cfg.is_orthrus:
+            ent_kind = jnp.where(
+                pend2d,
+                jnp.where(modes == MODE_WRITE, REQ_WRITE, REQ_READ),
+                jnp.where(rel_entries, REQ_RELEASE, REQ_NONE),
+            ).reshape(-1)
+            ent_key = jnp.where(
+                (pend2d | rel_entries), keys, KEY_SENTINEL
+            ).reshape(-1)
+            ent_enq = s["enq"].reshape(-1)
+            safe = jnp.minimum(ent_key, R - 1)
+            in_rng = ent_key < R
+            wh_free = (s["wh"][safe] == -1) & in_rng
+            rcv = jnp.where(in_rng, s["rc"][safe], 0)
+            order = lex_order(ent_key, ent_enq)
+            inv = inverse_permutation(order)
+            g_sorted, _cont, _new = segmented_grant(
+                ent_key[order],
+                ent_enq[order],
+                ent_kind[order],
+                wh_free[order],
+                rcv[order],
+            )
+            grant = g_sorted[inv].reshape(T, K)
+            # re-entrant grants bypass the FIFO: a slot re-requesting a key
+            # it already write-holds is granted immediately (real
+            # transactions touch the same row more than once; without this
+            # they would deadlock on their own lock)
+            ent_slot = jnp.broadcast_to(slot_ids[:, None], (T, K)).reshape(-1)
+            self_grant = (
+                (ent_kind != REQ_NONE)
+                & (ent_kind != REQ_RELEASE)
+                & in_rng
+                & (s["wh"][safe] == ent_slot)
+            )
+            grant = grant | self_grant.reshape(T, K)
 
-        # apply grants to the lock table
-        gk = jnp.where(grant, keys, 0)
-        g_wr = grant & (modes == MODE_WRITE)
-        g_rd = grant & (modes == MODE_READ)
-        holder = jnp.broadcast_to(slot_ids[:, None], (T, K))
-        s["wh"] = s["wh"].at[jnp.where(g_wr, gk, R)].set(
-            holder, mode="drop"
-        )
-        s["rc"] = s["rc"].at[jnp.where(g_rd, gk, R)].add(1, mode="drop")
+            # apply grants to the lock table
+            gk = jnp.where(grant, keys, 0)
+            g_wr = grant & (modes == MODE_WRITE)
+            g_rd = grant & (modes == MODE_READ)
+            holder = jnp.broadcast_to(slot_ids[:, None], (T, K))
+            s["wh"] = s["wh"].at[jnp.where(g_wr, gk, R)].set(
+                holder, mode="drop"
+            )
+            s["rc"] = s["rc"].at[jnp.where(g_rd, gk, R)].add(1, mode="drop")
+        else:
+            # single pending request per slot, at column kptr: FIFO
+            # decisions among the <= T compact requests via an all-pairs
+            # [T, T] key comparison — no sort, no scatter
+            kptr_c = jnp.minimum(kptr, K - 1)[:, None]
+            pend_t = jnp.take_along_axis(pend2d, kptr_c, axis=1).squeeze(1)
+            rkey = jnp.take_along_axis(keys, kptr_c, axis=1).squeeze(1)
+            renq = jnp.take_along_axis(s["enq"], kptr_c, axis=1).squeeze(1)
+            rmode = jnp.take_along_axis(modes, kptr_c, axis=1).squeeze(1)
+            is_wr_req = pend_t & (rmode == MODE_WRITE)
+            same_key = (rkey[None, :] == rkey[:, None]) & pend_t[None, :]
+            enq_b = jnp.broadcast_to(renq[None, :], (T, T))
+            min_wr = jnp.min(
+                jnp.where(same_key & is_wr_req[None, :], enq_b, _IMAX),
+                axis=1,
+            )
+            min_req = jnp.min(jnp.where(same_key, enq_b, _IMAX), axis=1)
+            rkey_c = jnp.minimum(rkey, R - 1)
+            whv = s["wh"][rkey_c]
+            rc_t = s["rc"][rkey_c]
+            wh_free_t = whv == -1
+            # read grant: write-free record, no older write request queued;
+            # write grant: write-free, zero read holders, oldest request.
+            # enq stamps are unique, so strict compares are exact.
+            grant_rd = wh_free_t & (min_wr > renq)
+            grant_wr = wh_free_t & (rc_t == 0) & (min_req == renq)
+            grant_t = pend_t & jnp.where(
+                rmode == MODE_WRITE, grant_wr, grant_rd
+            )
+            # re-entrant grants bypass the FIFO (see the ORTHRUS path)
+            grant_t = grant_t | (pend_t & (whv == slot_ids))
+            grant = pend2d & grant_t[:, None]
+
+            # apply grants to the lock table ([T]-sized scatters: only the
+            # kptr column can be granted)
+            g_wr_t = grant_t & (rmode == MODE_WRITE)
+            g_rd_t = grant_t & (rmode == MODE_READ)
+            s["wh"] = s["wh"].at[jnp.where(g_wr_t, rkey, R)].set(
+                slot_ids, mode="drop"
+            )
+            s["rc"] = s["rc"].at[jnp.where(g_rd_t, rkey, R)].add(
+                1, mode="drop"
+            )
         s["granted"] = s["granted"] | grant
 
         # ------------------------------------------------ 8. deadlock logic
@@ -603,22 +775,17 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         # record's meta-data line the way a queue mutation does)
         abort_dl = jnp.zeros((T,), jnp.bool_)
         if dl != "none":
+            kptr_c = jnp.minimum(kptr, K - 1)[:, None]
             waitkey = jnp.where(
-                (s["phase"] == ACQ)
+                (phase == ACQ)
                 & jnp.take_along_axis(
-                    s["want"] & ~s["granted"],
-                    jnp.minimum(s["kptr"], K - 1)[:, None],
-                    axis=1,
+                    s["want"] & ~s["granted"], kptr_c, axis=1
                 ).squeeze(1),
-                jnp.take_along_axis(
-                    keys, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
-                ).squeeze(1),
+                jnp.take_along_axis(keys, kptr_c, axis=1).squeeze(1),
                 KEY_SENTINEL,
             )
             waiting = waitkey != KEY_SENTINEL
-            mymode = jnp.take_along_axis(
-                modes, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
-            ).squeeze(1)
+            mymode = jnp.take_along_axis(modes, kptr_c, axis=1).squeeze(1)
             # adj[t,u]: t waits on a lock u holds in a conflicting mode
             key_eq = keys[None, :, :] == waitkey[:, None, None]  # [t,u,k]
             conflict = (mymode[:, None, None] == MODE_WRITE) | (
@@ -628,7 +795,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 (key_eq & s["granted"][None, :, :] & conflict).any(-1)
                 & waiting[:, None]
                 & (slot_ids[None, :] != slot_ids[:, None])
-                & (s["tid"][None, :] >= 0)
+                & (tid[None, :] >= 0)
             )
             if dl == "waitdie":
                 # a waiter dies whenever its wait-for edge points at an
@@ -637,12 +804,12 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 # re-checked when the lock changes hands); the "die" probe
                 # is a read of the holder's timestamp and is costed as
                 # latency only (no line occupancy) in stage 9
-                newly_waiting = waiting & ~s["waited"]
+                newly_waiting = waiting & ~waited
                 older_holder = (
-                    adj & (s["ts"][None, :] < s["ts"][:, None])
+                    adj & (ts[None, :] < ts[:, None])
                 ).any(-1)
                 abort_dl = older_holder & waiting
-                s["dl_debt"] = s["dl_debt"] + jnp.where(
+                dl_debt = dl_debt + jnp.where(
                     newly_waiting, cm.waitdie_check_cycles, 0
                 )
             else:
@@ -656,32 +823,30 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 # §4.1) and differ only in their cost constants
                 scc = s["reach"] & s["reach"].T
                 scc_ts_max = jnp.max(
-                    jnp.where(scc & in_cycle[None, :], s["ts"][None, :], -1),
+                    jnp.where(scc & in_cycle[None, :], ts[None, :], -1),
                     axis=1,
                 )
-                abort_dl = in_cycle & (s["ts"] >= scc_ts_max)
-                s["dl_debt"] = s["dl_debt"] + jnp.where(
-                    waiting, dl_wait_cycles, 0
-                )
-            s["waited"] = waiting
+                abort_dl = in_cycle & (ts >= scc_ts_max)
+                dl_debt = dl_debt + jnp.where(waiting, dl_wait_cycles, 0)
+            waited = waiting
             # convert deadlock-handling debt into lane busy time
-            debt_rounds = s["dl_debt"] // cm.cycles_per_round
+            debt_rounds = dl_debt // cm.cycles_per_round
             has_debt = debt_rounds > 0
-            s["busy_until"] = jnp.where(
-                has_debt, jnp.maximum(s["busy_until"], r) + debt_rounds,
-                s["busy_until"],
+            busy_until = jnp.where(
+                has_debt, jnp.maximum(busy_until, r) + debt_rounds,
+                busy_until,
             )
-            s["busy_kind"] = jnp.where(has_debt, CAT_DL, s["busy_kind"])
-            s["dl_debt"] = s["dl_debt"] % cm.cycles_per_round
+            busy_kind = jnp.where(has_debt, CAT_DL, busy_kind)
+            dl_debt = dl_debt % cm.cycles_per_round
 
             abort_dl = abort_dl & waiting
             s["aborts_dl"] = s["aborts_dl"] + abort_dl.sum(dtype=jnp.int32)
-            s["wasted"] = s["wasted"] + jnp.where(abort_dl, s["kptr"], 0).sum(
+            s["wasted"] = s["wasted"] + jnp.where(abort_dl, kptr, 0).sum(
                 dtype=jnp.int32
             )
-            s["phase"] = jnp.where(abort_dl, REL, s["phase"])
-            s["committing"] = jnp.where(abort_dl, False, s["committing"])
-            s["release_at"] = jnp.where(abort_dl, r, s["release_at"])
+            phase = jnp.where(abort_dl, REL, phase)
+            committing = jnp.where(abort_dl, False, committing)
+            release_at = jnp.where(abort_dl, r, release_at)
             s["want"] = s["want"] & ~abort_dl[:, None]
 
         # ------------------------------------------------ 9. line-cost model
@@ -696,8 +861,30 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         if not cfg.is_orthrus:
             newop = newop2d  # fresh lock-table ops this round: reqs+releases
             mutate = newop & ~abort_dl[:, None]  # dies don't enqueue
+            # per-key same-round contention via the carried agg_sum buffer
+            # (columns: active entries, new ops, queue mutations). One
+            # scatter-add per round cancels the previous round's
+            # contributions and applies this round's, so the buffer holds
+            # exactly "this round" when gathered and is never read before
+            # a pending mutation (no [R]-sized copy, see _state0).
+            active2d = pend2d | rel_entries
+            aidx = jnp.where(active2d, keys, R)
+            sum_upd = jnp.stack(
+                [active2d.astype(i32), newop.astype(i32),
+                 mutate.astype(i32)], axis=-1,
+            )  # [T, K, 3]
+            idx_cat = jnp.concatenate([s["agg_prev_idx"], aidx], axis=0)
+            upd_cat = jnp.concatenate([-s["agg_prev_upd"], sum_upd], axis=0)
+            agg_s = s["agg_sum"].at[idx_cat].add(upd_cat, mode="drop")
+            s["agg_sum"] = agg_s
+            s["agg_prev_idx"] = aidx
+            s["agg_prev_upd"] = sum_upd
             e = r >> EPOCH_BITS
             opk_r = jnp.minimum(jnp.where(newop, keys, 0), R - 1)
+            seg = agg_s[opk_r]  # [T, K, 3], this round's per-key totals
+            contend = seg[..., 0]
+            new_in_seg = seg[..., 1]
+            mut_in_seg = seg[..., 2]
             heat_k = s["heat"][opk_r]  # [T, K, 3] = (ep, cnt_cur, cnt_prev)
             ep_k = heat_k[..., 0]
             cur_k = heat_k[..., 1]
@@ -728,13 +915,6 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             backlog = jnp.maximum(jnp.where(mutate, lnf_cur - r, 0), 0)
             charge = jnp.where(newop, backlog + dur, 0).sum(axis=1)
             # occupancy: same-round queue mutations serialize on the line
-            # per-key mutation count, reusing the grant pass's (key, enq)
-            # sort: every mutating entry was an active entry there, and the
-            # result is consumed only at mutating entries
-            mut_in_seg = segment_sum_sorted(
-                ent_key[order],
-                mutate.reshape(-1).astype(jnp.int32)[order],
-            )[inv].reshape(T, K)
             occupy = jnp.where(mutate, mut_in_seg * dur, 0)
             tgt = jnp.maximum(lnf_cur, r) + occupy
             opk_heat = jnp.where(newop, opk_r, R)
@@ -757,85 +937,83 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             )
             s["heat"] = s["heat"].at[opk_heat].set(heat_upd, mode="drop")
             charged = charge > 0
-            s["busy_until"] = jnp.where(
-                charged, jnp.maximum(s["busy_until"], r) + charge,
-                s["busy_until"],
+            busy_until = jnp.where(
+                charged, jnp.maximum(busy_until, r) + charge,
+                busy_until,
             )
-            s["busy_kind"] = jnp.where(charged, CAT_LOCK, s["busy_kind"])
+            busy_kind = jnp.where(charged, CAT_LOCK, busy_kind)
 
         # ------------------------------------------------ 10. transitions
-        free = s["busy_until"] <= r
+        free = busy_until <= r
         exec_rounds_one = rounds_of(exec_cycles_per_op)
 
         if cfg.is_dynamic_2pl:
             cur_granted = jnp.take_along_axis(
-                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                s["granted"], jnp.minimum(kptr, K - 1)[:, None], axis=1
             ).squeeze(1)
-            go = (s["phase"] == ACQ) & free & cur_granted & ~abort_dl
-            last = go & (s["kptr"] + 1 >= nkeys)
+            go = (phase == ACQ) & free & cur_granted & ~abort_dl
+            last = go & (kptr + 1 >= nkeys)
             extra = jnp.maximum(execops - nkeys, 0)
             add = jnp.where(
                 go, exec_rounds_one + jnp.where(last, extra * exec_rounds_one, 0), 0
             )
-            s["busy_until"] = jnp.where(
-                go, jnp.maximum(s["busy_until"], r) + add, s["busy_until"]
+            busy_until = jnp.where(
+                go, jnp.maximum(busy_until, r) + add, busy_until
             )
-            s["busy_kind"] = jnp.where(go, CAT_EXEC, s["busy_kind"])
-            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
-            s["phase"] = jnp.where(last, EXEC, s["phase"])
+            busy_kind = jnp.where(go, CAT_EXEC, busy_kind)
+            kptr = jnp.where(go, kptr + 1, kptr)
+            phase = jnp.where(last, EXEC, phase)
         elif cfg.protocol in ("deadlock_free", "partitioned_store"):
             cur_granted = jnp.take_along_axis(
-                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                s["granted"], jnp.minimum(kptr, K - 1)[:, None], axis=1
             ).squeeze(1)
-            go = (s["phase"] == ACQ) & free & cur_granted
-            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
-            alldone = go & (s["kptr"] >= nkeys)
-            s["phase"] = jnp.where(alldone, EXEC, s["phase"])
-            s["busy_until"] = jnp.where(
+            go = (phase == ACQ) & free & cur_granted
+            kptr = jnp.where(go, kptr + 1, kptr)
+            alldone = go & (kptr >= nkeys)
+            phase = jnp.where(alldone, EXEC, phase)
+            busy_until = jnp.where(
                 alldone,
-                jnp.maximum(s["busy_until"], r) + execops * exec_rounds_one,
-                s["busy_until"],
+                jnp.maximum(busy_until, r) + execops * exec_rounds_one,
+                busy_until,
             )
-            s["busy_kind"] = jnp.where(alldone, CAT_EXEC, s["busy_kind"])
+            busy_kind = jnp.where(alldone, CAT_EXEC, busy_kind)
         else:  # orthrus
             in_cur_group = (
-                (kk[None, :] >= s["ccptr"][:, None])
+                (kk[None, :] >= ccptr[:, None])
                 & kvalid
                 & (ccids == jnp.take_along_axis(
-                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+                    ccids, jnp.minimum(ccptr, K - 1)[:, None], axis=1))
             )
             grp_done = (
-                (s["phase"] == ACQ)
+                (phase == ACQ)
                 & jnp.where(in_cur_group, s["granted"], True).all(axis=1)
             )
-            nxt = jnp.where(
-                (kk[None, :] >= s["ccptr"][:, None]) & kvalid & ~in_cur_group,
+            nxt_cc = jnp.where(
+                (kk[None, :] >= ccptr[:, None]) & kvalid & ~in_cur_group,
                 kk[None, :],
                 K,
             ).min(axis=1)
-            more = grp_done & (nxt < K)
-            s["ccptr"] = jnp.where(more, nxt, s["ccptr"])
+            more = grp_done & (nxt_cc < K)
+            ccptr = jnp.where(more, nxt_cc, ccptr)
             s["adm_done"] = jnp.where(more[:, None], False, s["adm_done"])
-            s["phase"] = jnp.where(grp_done, MSG, s["phase"])
-            s["msg_stage"] = jnp.where(grp_done, jnp.where(more, 0, 1),
-                                       s["msg_stage"])
-            s["msg_arrive"] = jnp.where(
-                grp_done, r + cm.msg_hop_rounds, s["msg_arrive"]
+            phase = jnp.where(grp_done, MSG, phase)
+            msg_stage = jnp.where(grp_done, jnp.where(more, 0, 1), msg_stage)
+            msg_arrive = jnp.where(
+                grp_done, r + cm.msg_hop_rounds, msg_arrive
             )
             # response arrives -> READY
             resp = (
-                (s["phase"] == MSG) & (s["msg_stage"] == 1)
-                & (s["msg_arrive"] <= r)
+                (phase == MSG) & (msg_stage == 1) & (msg_arrive <= r)
             )
-            s["phase"] = jnp.where(resp, READY, s["phase"])
+            phase = jnp.where(resp, READY, phase)
             # exec-lane scheduling: oldest READY per idle lane starts
             lane_busy = jax.ops.segment_sum(
-                ((s["phase"] == EXEC) & ~free).astype(jnp.int32),
+                ((phase == EXEC) & ~free).astype(jnp.int32),
                 lane_of,
                 num_segments=cfg.n_exec,
             )
-            ready = s["phase"] == READY
-            ready_ts = jnp.where(ready, s["ts"], jnp.iinfo(jnp.int32).max)
+            ready = phase == READY
+            ready_ts = jnp.where(ready, ts, jnp.iinfo(jnp.int32).max)
             lane_min = jax.ops.segment_min(
                 ready_ts, lane_of, num_segments=cfg.n_exec
             )
@@ -845,24 +1023,24 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 & (lane_busy[lane_of] == 0)
             )
             # break ties (same ts impossible — tids unique) -> safe
-            s["phase"] = jnp.where(startx, EXEC, s["phase"])
-            s["busy_until"] = jnp.where(
-                startx, r + execops * exec_rounds_one, s["busy_until"]
+            phase = jnp.where(startx, EXEC, phase)
+            busy_until = jnp.where(
+                startx, r + execops * exec_rounds_one, busy_until
             )
-            s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+            busy_kind = jnp.where(startx, CAT_EXEC, busy_kind)
 
         # EXEC finished -> release (commit, or OLLP-miss abort+retry)
-        free = s["busy_until"] <= r
-        fin = (s["phase"] == EXEC) & free
-        is_miss = fin & miss & (s["attempt"] == 0)
+        free = busy_until <= r
+        fin = (phase == EXEC) & free
+        is_miss = fin & miss & (attempt == 0)
         s["aborts_ollp"] = s["aborts_ollp"] + is_miss.sum(dtype=jnp.int32)
         s["wasted"] = s["wasted"] + jnp.where(is_miss, execops, 0).sum(
             dtype=jnp.int32
         )
-        s["phase"] = jnp.where(fin, REL, s["phase"])
-        s["committing"] = jnp.where(fin, ~is_miss, s["committing"])
+        phase = jnp.where(fin, REL, phase)
+        committing = jnp.where(fin, ~is_miss, committing)
         rel_delay = cm.msg_hop_rounds if cfg.is_orthrus else 0
-        s["release_at"] = jnp.where(fin, r + rel_delay, s["release_at"])
+        release_at = jnp.where(fin, r + rel_delay, release_at)
         s["rel_done"] = jnp.where(fin[:, None], False, s["rel_done"])
         s["want"] = s["want"] & ~fin[:, None]
 
@@ -870,34 +1048,33 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         # only after every lock it held has actually been released (the
         # release scatter runs in stages 4/5 of a *subsequent* round).
         rel_done_all = (
-            (s["phase"] == REL)
-            & (s["release_at"] <= r)
+            (phase == REL)
+            & (release_at <= r)
             & ~(s["granted"]).any(axis=1)
         )
-        com = rel_done_all & s["committing"]
+        com = rel_done_all & committing
         s["commits"] = s["commits"] + com.sum(dtype=jnp.int32)
-        s["phase"] = jnp.where(
-            rel_done_all, jnp.where(s["committing"], EMPTY, BACKOFF), s["phase"]
+        phase = jnp.where(
+            rel_done_all, jnp.where(committing, EMPTY, BACKOFF), phase
         )
-        s["tid"] = jnp.where(com, -1, s["tid"])
-        s["busy_until"] = jnp.where(
-            rel_done_all & ~s["committing"],
+        tid = jnp.where(com, -1, tid)
+        busy_until = jnp.where(
+            rel_done_all & ~committing,
             r + cm.abort_backoff_rounds,
-            s["busy_until"],
+            busy_until,
         )
         s["want"] = jnp.where(rel_done_all[:, None], False, s["want"])
 
         # ------------------------------------------------ 11. lane accounting
-        busy = s["busy_until"] > r
+        busy = busy_until > r
         slot_cat = jnp.where(
             busy,
-            s["busy_kind"],
+            busy_kind,
             jnp.where(
-                (s["phase"] == ACQ) & (s["want"] & ~s["granted"]).any(axis=1),
+                (phase == ACQ) & (s["want"] & ~s["granted"]).any(axis=1),
                 CAT_WAIT,
                 jnp.where(
-                    (s["phase"] == MSG) | (s["phase"] == READY)
-                    | (s["phase"] == REL),
+                    (phase == MSG) | (phase == READY) | (phase == REL),
                     CAT_MSG,
                     CAT_IDLE,
                 ),
@@ -942,41 +1119,40 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         # accounting is exact because the post-transition lane state (the
         # `cat_counts` just computed) persists unchanged through the gap.
         if cfg.event_leap:
-            ph = s["phase"]
-            busy2 = s["busy_until"] > r
+            busy2 = busy_until > r
             free2 = ~busy2
             # future per-slot timers; a busy expiry is always an event (it
             # changes lane accounting even when no transition follows)
-            cand = jnp.where(busy2, s["busy_until"], _IMAX)
+            cand = jnp.where(busy2, busy_until, _IMAX)
             # admission, release processing and message arrival ignore the
             # busy timer (stages 1, 4, 5 have no `free` gate), so their
             # timers and ready-to-act states are tracked unconditionally
             cand = jnp.minimum(cand, jnp.where(
-                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], _IMAX))
+                (phase == MSG) & (msg_arrive > r), msg_arrive, _IMAX))
             cand = jnp.minimum(cand, jnp.where(
-                (ph == REL) & (s["release_at"] > r), s["release_at"], _IMAX))
+                (phase == REL) & (release_at > r), release_at, _IMAX))
             if lane_stream is None:
                 can_adm = jnp.ones((T,), jnp.bool_)
             else:
                 can_adm = (
-                    lane_stream[slot_ids, s["lane_ctr"] % meta.lane_cols] >= 0
+                    lane_stream[slot_ids, lane_ctr % meta.lane_cols] >= 0
                 )
             act_next = (
-                ((ph == EMPTY) & can_adm)
-                | ((ph == MSG) & (s["msg_arrive"] <= r))
-                | ((ph == REL) & (s["release_at"] <= r))
-                | (free2 & ((ph == INIT) | (ph == BACKOFF)))
+                ((phase == EMPTY) & can_adm)
+                | ((phase == MSG) & (msg_arrive <= r))
+                | ((phase == REL) & (release_at <= r))
+                | (free2 & ((phase == INIT) | (phase == BACKOFF)))
             )
             if cfg.is_orthrus:
                 # a READY slot starts the round its lane goes idle; while
                 # the lane runs another slot, that slot's busy_until is the
                 # wake-up event (already a candidate above)
                 lane_exec_busy = jax.ops.segment_max(
-                    ((ph == EXEC) & busy2).astype(jnp.int32), lane_of,
+                    ((phase == EXEC) & busy2).astype(jnp.int32), lane_of,
                     num_segments=cfg.n_exec,
                 )
                 act_next = act_next | (
-                    (ph == READY) & (lane_exec_busy[lane_of] == 0)
+                    (phase == READY) & (lane_exec_busy[lane_of] == 0)
                 )
             else:
                 # an acquiring slot with no pending (un-granted) request
@@ -984,14 +1160,14 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 # woken by its holder's release timer
                 blocked = jnp.take_along_axis(
                     s["want"] & ~s["granted"],
-                    jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                    jnp.minimum(kptr, K - 1)[:, None], axis=1
                 ).squeeze(1)
-                act_next = act_next | ((ph == ACQ) & free2 & ~blocked)
+                act_next = act_next | ((phase == ACQ) & free2 & ~blocked)
             if dl in ("waitfor", "dreadlocks"):
                 # graph detectors evolve every waiting round (reach-matrix
                 # propagation + per-round spin debt): stay dense while any
                 # slot waits
-                act_next = act_next | s["waited"].any()
+                act_next = act_next | waited.any()
             cand = jnp.where(act_next, r + 1, cand)
             nxt = jnp.clip(jnp.min(cand), r + 1, r_end)
         else:
@@ -1000,6 +1176,12 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         s["cat"] = s["cat"] + cat_counts * leap
         s["steps"] = s["steps"] + 1
         s["r"] = nxt
+        s["slots"] = jnp.stack(
+            [tid, widx, lane_ctr, ts, phase, committing.astype(i32),
+             busy_until, busy_kind, kptr, attempt, ccptr, msg_arrive,
+             msg_stage, release_at, waited.astype(i32), dl_debt],
+            axis=0,
+        )
         return s
 
     return step
@@ -1034,13 +1216,8 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         batch_left=jnp.asarray(int(sched.batch_size[0]), i32),
         plan_fin=jnp.asarray(int(_batch_plan_rounds(cfg, plan)[0]), i32),
         done=jnp.zeros((N,), jnp.bool_),
-        tid=jnp.full((T,), -1, i32),
-        widx=jnp.zeros((T,), i32),
-        ts=jnp.zeros((T,), i32),
-        phase=jnp.zeros((T,), i32),
-        busy_until=jnp.zeros((T,), i32),
-        busy_kind=jnp.zeros((T,), i32),
-        msg_arrive=jnp.zeros((T,), i32),
+        # all per-slot scalar fields: one [BATCH_SLOT_F, T] matrix (BC_*)
+        slots=jnp.zeros((BATCH_SLOT_F, T), i32).at[BC_TID].set(-1),
         commits=jnp.zeros((), i32),
         aborts_dl=jnp.zeros((), i32),
         aborts_ollp=jnp.zeros((), i32),
@@ -1061,6 +1238,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
     predecessors committed" — the dense-gather formulation of the
     ``dep_wavefront`` kernel contract (equivalence is property-tested).
     There is no lock table, no deadlock logic, and no abort path.
+    Per-slot scalars use the packed [BATCH_SLOT_F, T] matrix layout.
     """
     cm = cfg.cost
     T = cfg.n_slots
@@ -1079,13 +1257,21 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
     def step(p, s, r_end):
         r = s["r"]
-        wexec = p["exec_ops"]
-        wnpred = p["npred"]
+        ne_all = p["txn_ne"]  # [N, 2] = (npred, exec_ops)
         pred_pad = p["pred_pad"]  # [N, P]
         batch_of = p["batch_of"]  # [N]
         bstart = p["batch_start"]  # [NB]
         bsize = p["batch_size"]
         plan_rounds = p["plan_rounds"]  # [NB]
+
+        sl = s["slots"]
+        tid = sl[BC_TID]
+        widx = sl[BC_WIDX]
+        ts = sl[BC_TS]
+        phase = sl[BC_PHASE]
+        busy_until = sl[BC_BUSY_UNTIL]
+        busy_kind = sl[BC_BUSY_KIND]
+        msg_arrive = sl[BC_MSG_ARRIVE]
 
         # -------------------------------------------- 1. batch rollover
         # When every transaction of the current batch has committed, open
@@ -1105,54 +1291,57 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         # -------------------------------------------- 2. admission
         # Empty slots pull the next positions of the current batch, in
         # the planner's serial order, once the batch's plan is ready.
-        empty = s["phase"] == EMPTY
+        empty = phase == EMPTY
         rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
         pos = s["bpos"] + rank
         bend = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
         adm = empty & (pos < bend) & (r >= s["plan_fin"])
-        s["widx"] = jnp.where(adm, pos, s["widx"])
+        widx = jnp.where(adm, pos, widx)
         new_tid = s["next_txn"] + rank
-        s["tid"] = jnp.where(adm, new_tid, s["tid"])
-        s["ts"] = jnp.where(adm, new_tid, s["ts"])
+        tid = jnp.where(adm, new_tid, tid)
+        ts = jnp.where(adm, new_tid, ts)
         n_adm = adm.sum(dtype=jnp.int32)
         s["bpos"] = s["bpos"] + n_adm
         s["next_txn"] = s["next_txn"] + n_adm
-        npred_t = wnpred[s["widx"]]
+        # one fused [T, 2] gather: (npred, exec_ops); widx is fixed for
+        # the rest of the round, so the predecessor rows gathered here
+        # serve both the wavefront check and the event leap
+        ne = ne_all[widx]
+        npred_t = ne[:, 0]
+        exec_t = ne[:, 1]
+        preds = pred_pad[widx]  # [T, P]
         init_busy = rounds_of(
             cm.txn_fixed_cycles + npred_t * cm.dep_check_cycles
         )
-        s["phase"] = jnp.where(adm, INIT, s["phase"])
-        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
-        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
+        phase = jnp.where(adm, INIT, phase)
+        busy_until = jnp.where(adm, r + init_busy, busy_until)
+        busy_kind = jnp.where(adm, CAT_LOCK, busy_kind)
 
         # -------------------------------------------- 3. INIT -> MSG
         # The exec lane fetches its next planned entry from the scheduler
         # queue: one SPSC hop (functional separation, as in ORTHRUS).
-        free = s["busy_until"] <= r
-        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
-        s["phase"] = jnp.where(start, MSG, s["phase"])
-        s["msg_arrive"] = jnp.where(
-            start, r + cm.msg_hop_rounds, s["msg_arrive"]
-        )
-        got = (s["phase"] == MSG) & (s["msg_arrive"] <= r)
-        s["phase"] = jnp.where(got, READY, s["phase"])
+        free = busy_until <= r
+        start = (phase == INIT) & free & (tid >= 0)
+        phase = jnp.where(start, MSG, phase)
+        msg_arrive = jnp.where(start, r + cm.msg_hop_rounds, msg_arrive)
+        got = (phase == MSG) & (msg_arrive <= r)
+        phase = jnp.where(got, READY, phase)
 
         # -------------------------------------------- 4. wavefront check
         # "All planned predecessors committed" — the dep_wavefront
         # primitive in dense per-slot form.
-        preds = pred_pad[s["widx"]]  # [T, P]
         pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
         dep_ok = pred_ok.all(axis=1)
-        ready = (s["phase"] == READY) & dep_ok
+        ready = (phase == READY) & dep_ok
 
         # -------------------------------------------- 5. lane scheduling
-        busy = s["busy_until"] > r
+        busy = busy_until > r
         lane_busy = jax.ops.segment_sum(
-            ((s["phase"] == EXEC) & busy).astype(jnp.int32),
+            ((phase == EXEC) & busy).astype(jnp.int32),
             lane_of,
             num_segments=cfg.n_exec,
         )
-        ready_ts = jnp.where(ready, s["ts"], imax)
+        ready_ts = jnp.where(ready, ts, imax)
         lane_min = jax.ops.segment_min(
             ready_ts, lane_of, num_segments=cfg.n_exec
         )
@@ -1161,36 +1350,35 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             & (ready_ts == lane_min[lane_of])
             & (lane_busy[lane_of] == 0)
         )
-        exec_t = wexec[s["widx"]]
-        s["phase"] = jnp.where(startx, EXEC, s["phase"])
-        s["busy_until"] = jnp.where(
-            startx, r + exec_t * exec_rounds_one, s["busy_until"]
+        phase = jnp.where(startx, EXEC, phase)
+        busy_until = jnp.where(
+            startx, r + exec_t * exec_rounds_one, busy_until
         )
-        s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+        busy_kind = jnp.where(startx, CAT_EXEC, busy_kind)
 
         # -------------------------------------------- 6. commit
         # No locks to release and no abort path: planned execution is
         # conflict-free by construction.
-        free = s["busy_until"] <= r
-        fin = (s["phase"] == EXEC) & free
-        s["done"] = s["done"].at[jnp.where(fin, s["widx"], N)].set(
+        free = busy_until <= r
+        fin = (phase == EXEC) & free
+        s["done"] = s["done"].at[jnp.where(fin, widx, N)].set(
             True, mode="drop"
         )
         ncom = fin.sum(dtype=jnp.int32)
         s["commits"] = s["commits"] + ncom
         s["batch_left"] = s["batch_left"] - ncom
-        s["phase"] = jnp.where(fin, EMPTY, s["phase"])
-        s["tid"] = jnp.where(fin, -1, s["tid"])
+        phase = jnp.where(fin, EMPTY, phase)
+        tid = jnp.where(fin, -1, tid)
 
         # -------------------------------------------- 7. lane accounting
-        busy2 = s["busy_until"] > r
+        busy2 = busy_until > r
         slot_cat = jnp.where(
             busy2,
-            s["busy_kind"],
+            busy_kind,
             jnp.where(
-                s["phase"] == MSG,
+                phase == MSG,
                 CAT_MSG,
-                jnp.where(s["phase"] == READY, CAT_WAIT, CAT_IDLE),
+                jnp.where(phase == READY, CAT_WAIT, CAT_IDLE),
             ),
         )
         lane_exec = jax.ops.segment_max(
@@ -1224,26 +1412,25 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         # commit (the pred's busy_until); a dep-clear READY slot starts the
         # round its lane goes idle.
         if cfg.event_leap:
-            ph = s["phase"]
-            busy3 = s["busy_until"] > r
+            busy3 = busy_until > r
             free3 = ~busy3
-            cand = jnp.where(busy3, s["busy_until"], imax)
+            cand = jnp.where(busy3, busy_until, imax)
             cand = jnp.minimum(cand, jnp.where(
-                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], imax))
+                (phase == MSG) & (msg_arrive > r), msg_arrive, imax))
             act_next = (
-                (free3 & (ph == INIT))
-                | ((ph == MSG) & (s["msg_arrive"] <= r))
+                (free3 & (phase == INIT))
+                | ((phase == MSG) & (msg_arrive <= r))
             )
-            preds2 = pred_pad[s["widx"]]
-            dep_ok2 = (
-                (preds2 < 0) | s["done"][jnp.maximum(preds2, 0)]
-            ).all(axis=1)
+            # same pred rows as stage 4 (widx unchanged); `done` moved, so
+            # the commit flags are re-gathered
+            pred_ok2 = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
+            dep_ok2 = pred_ok2.all(axis=1)
             lane_exec_busy = jax.ops.segment_max(
-                ((ph == EXEC) & busy3).astype(jnp.int32), lane_of,
+                ((phase == EXEC) & busy3).astype(jnp.int32), lane_of,
                 num_segments=cfg.n_exec,
             )
             act_next = act_next | (
-                (ph == READY) & dep_ok2 & (lane_exec_busy[lane_of] == 0)
+                (phase == READY) & dep_ok2 & (lane_exec_busy[lane_of] == 0)
             )
             cand = jnp.where(act_next, r + 1, cand)
             # admission is a scalar event: the next batch opens the round
@@ -1259,7 +1446,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
                     imax,
                 ),
             )
-            adm_evt = jnp.where((ph == EMPTY).any(), adm_evt, imax)
+            adm_evt = jnp.where((phase == EMPTY).any(), adm_evt, imax)
             nxt = jnp.clip(jnp.minimum(jnp.min(cand), adm_evt), r + 1, r_end)
         else:
             nxt = r + 1
@@ -1267,6 +1454,10 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         s["cat"] = s["cat"] + cat_counts * leap
         s["steps"] = s["steps"] + 1
         s["r"] = nxt
+        s["slots"] = jnp.stack(
+            [tid, widx, ts, phase, busy_until, busy_kind, msg_arrive],
+            axis=0,
+        )
         return s
 
     return step

@@ -1,0 +1,1063 @@
+"""Frozen pre-packed engine step builders (PR 2, ENGINE_VERSION
+"2-event-leap") — the differential-conformance oracle.
+
+This module is a **verbatim copy** of the per-slot dict-of-[T]-arrays
+state layout that `repro.core.engine` used before the packed [T, F]
+state-matrix rewrite. It exists only so tests (and ad-hoc debugging)
+can run the exact pre-rewrite semantics side by side with the packed
+engine: `EngineConfig(state_layout="legacy")` routes
+`repro.core.sweep` to these builders, and
+`tests/test_engine_leap.py` asserts bit-identical counters, round
+counts and Fig-10 breakdowns between the two layouts on randomized
+configurations.
+
+Do not optimize or refactor this file; its value is that it does not
+change. Shared pure helpers (phase/category constants, cost model,
+plan handling, `_batch_plan_rounds`) are imported from
+`repro.core.engine` — they are layout-independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    ACQ,
+    BACKOFF,
+    CAT_DL,
+    CAT_EXEC,
+    CAT_IDLE,
+    CAT_LOCK,
+    CAT_MSG,
+    CAT_WAIT,
+    EMPTY,
+    EPOCH_BITS,
+    EXEC,
+    INIT,
+    MSG,
+    NCAT,
+    READY,
+    REL,
+    EngineConfig,
+    PlanMeta,
+    _batch_plan_rounds,
+    _IMAX,
+)
+from repro.core.lockgrant import (
+    KEY_SENTINEL,
+    REQ_NONE,
+    REQ_READ,
+    REQ_RELEASE,
+    REQ_WRITE,
+    inverse_permutation,
+    lex_order,
+    segment_sum_sorted,
+    segmented_grant,
+)
+from repro.core.workloads import MODE_READ, MODE_WRITE
+
+def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
+    R = num_records
+    i32 = jnp.int32
+    return dict(
+        r=jnp.zeros((), i32),
+        next_txn=jnp.zeros((), i32),
+        enq_ctr=jnp.ones((), i32),
+        tid=jnp.full((T,), -1, i32),
+        widx=jnp.zeros((T,), i32),
+        lane_ctr=jnp.zeros((T,), i32),
+        ts=jnp.zeros((T,), i32),
+        phase=jnp.zeros((T,), i32),
+        committing=jnp.zeros((T,), jnp.bool_),
+        busy_until=jnp.zeros((T,), i32),
+        busy_kind=jnp.zeros((T,), i32),
+        kptr=jnp.zeros((T,), i32),
+        attempt=jnp.zeros((T,), i32),
+        want=jnp.zeros((T, K), jnp.bool_),
+        granted=jnp.zeros((T, K), jnp.bool_),
+        enq=jnp.zeros((T, K), i32),
+        adm_done=jnp.zeros((T, K), jnp.bool_),
+        rel_done=jnp.zeros((T, K), jnp.bool_),
+        ccptr=jnp.zeros((T,), i32),
+        msg_arrive=jnp.zeros((T,), i32),
+        msg_stage=jnp.zeros((T,), i32),
+        release_at=jnp.zeros((T,), i32),
+        waited=jnp.zeros((T,), jnp.bool_),
+        dl_debt=jnp.zeros((T,), i32),
+        reach=jnp.zeros((T, T), jnp.bool_),
+        wh=jnp.full((R,), -1, i32),
+        rc=jnp.zeros((R,), i32),
+        # packed per-record cost-model state (one gather + one scatter per
+        # round each instead of five):
+        #   heat[:, 0] = ep, heat[:, 1] = cnt_cur, heat[:, 2] = cnt_prev
+        #   line[:, 0] = lnf (line-free round), line[:, 1] = last_lane
+        heat=jnp.concatenate(
+            [jnp.full((R, 1), -10, i32), jnp.zeros((R, 2), i32)], axis=1
+        ),
+        line=jnp.concatenate(
+            [jnp.zeros((R, 1), i32), jnp.full((R, 1), -1, i32)], axis=1
+        ),
+        commits=jnp.zeros((), i32),
+        aborts_dl=jnp.zeros((), i32),
+        aborts_ollp=jnp.zeros((), i32),
+        wasted=jnp.zeros((), i32),
+        cat=jnp.zeros((NCAT,), jnp.int32),
+        steps=jnp.zeros((), i32),
+    )
+
+
+def make_step(cfg: EngineConfig, meta: PlanMeta):
+    """Build the single-round transition for this config + plan shape.
+
+    Returns ``step(p, s, r_end)`` where ``p`` is the traced plan-array dict
+    (see :func:`plan_device`), ``s`` the round state, and ``r_end`` the
+    exclusive chunk bound that event leaps are clamped to.
+    """
+    cm = cfg.cost
+    T, K = cfg.n_slots, meta.max_keys
+    R = meta.num_records
+    N = meta.n_txns
+    W = cfg.window
+    n_cc = max(cfg.n_cc, 1)
+    cap_keys = cm.cc_keys_per_round  # per CC lane per round, in key-ops
+    has_lane_stream = meta.lane_cols > 0
+
+    lane_of = jnp.arange(T, dtype=jnp.int32) // W
+    slot_ids = jnp.arange(T, dtype=jnp.int32)
+    kk = jnp.arange(K, dtype=jnp.int32)
+
+    lock_op_cycles = (
+        cm.partition_lock_cycles
+        if cfg.protocol == "partitioned_store"
+        else cm.lock_op_cycles
+    )
+    # Shared-index cache penalty (paper §4.3): partitioned-store and SPLIT
+    # variants probe thread-local indexes; everyone else shares one index.
+    shared_index = cfg.protocol != "partitioned_store" and not cfg.split_index
+    exec_cycles_per_op = cm.exec_op_cycles + (
+        cm.shared_index_penalty_cycles if shared_index else 0
+    )
+    dl = cfg.deadlock_scheme
+    dl_wait_cycles = {
+        "waitfor": cm.waitfor_maintain_cycles,
+        "dreadlocks": cm.dreadlocks_spin_cycles,
+    }.get(dl, 0)
+
+    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+
+    def step(p, s, r_end):
+        r = s["r"]
+        wkeys = p["keys"]
+        wmodes = p["modes"]
+        wpart = p["part"]
+        wnkeys = p["nkeys"]
+        wexec = p["exec_ops"]
+        wollp = p["ollp"]
+        wmiss = p["ollp_miss"]
+        lane_stream = p["lane_stream"] if has_lane_stream else None
+
+        def gather_txn():
+            """Per-slot workload arrays for the currently-loaded txns."""
+            widx = jnp.where(s["tid"] >= 0, s["widx"] % N, 0)
+            return (
+                wkeys[widx],
+                wmodes[widx],
+                wpart[widx] % n_cc,
+                wnkeys[widx],
+                wexec[widx],
+                wollp[widx],
+                wmiss[widx],
+            )
+
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
+        kvalid = kk[None, :] < nkeys[:, None]
+        free = s["busy_until"] <= r
+
+        # ------------------------------------------------ 1. new admissions
+        empty = s["phase"] == EMPTY
+        if lane_stream is None:
+            rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
+            new_tid = s["next_txn"] + rank
+            adm = empty
+            s["widx"] = jnp.where(adm, new_tid % N, s["widx"])
+            s["next_txn"] = s["next_txn"] + empty.sum(dtype=jnp.int32)
+        else:
+            # H-Store routing: each worker lane pulls the next txn homed to
+            # its partition (lanes with no homed txns stay idle).
+            M = meta.lane_cols
+            widx = lane_stream[slot_ids, s["lane_ctr"] % M]
+            adm = empty & (widx >= 0)
+            new_tid = s["lane_ctr"] * T + slot_ids
+            s["widx"] = jnp.where(adm, widx, s["widx"])
+            s["lane_ctr"] = jnp.where(adm, s["lane_ctr"] + 1, s["lane_ctr"])
+            s["next_txn"] = s["next_txn"] + adm.sum(dtype=jnp.int32)
+        s["tid"] = jnp.where(adm, new_tid, s["tid"])
+        s["ts"] = jnp.where(adm, new_tid, s["ts"])
+        s["attempt"] = jnp.where(adm, 0, s["attempt"])
+        # re-gather for freshly admitted slots
+        keys, modes, ccids, nkeys, execops, ollp, miss = gather_txn()
+        kvalid = kk[None, :] < nkeys[:, None]
+        init_busy = rounds_of(
+            cm.txn_fixed_cycles
+            + jnp.where(ollp, cm.recon_cycles, 0)
+        )
+        s["phase"] = jnp.where(adm, INIT, s["phase"])
+        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
+        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
+        for f in ("want", "granted", "adm_done", "rel_done"):
+            s[f] = jnp.where(adm[:, None], False, s[f])
+        s["kptr"] = jnp.where(adm, 0, s["kptr"])
+        s["ccptr"] = jnp.where(adm, 0, s["ccptr"])
+        s["waited"] = jnp.where(adm, False, s["waited"])
+
+        # ------------------------------------------------ 2. backoff -> retry
+        retry = (s["phase"] == BACKOFF) & free
+        s["phase"] = jnp.where(retry, INIT, s["phase"])
+        s["busy_until"] = jnp.where(
+            retry, r + rounds_of(cm.txn_fixed_cycles), s["busy_until"]
+        )
+        s["busy_kind"] = jnp.where(retry, CAT_LOCK, s["busy_kind"])
+        for f in ("want", "granted", "adm_done", "rel_done"):
+            s[f] = jnp.where(retry[:, None], False, s[f])
+        s["kptr"] = jnp.where(retry, 0, s["kptr"])
+        s["ccptr"] = jnp.where(retry, 0, s["ccptr"])
+        s["attempt"] = jnp.where(retry, s["attempt"] + 1, s["attempt"])
+        s["waited"] = jnp.where(retry, False, s["waited"])
+
+        free = s["busy_until"] <= r
+
+        # ------------------------------------------------ 3. INIT -> acquire
+        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
+        if cfg.is_orthrus:
+            s["phase"] = jnp.where(start, MSG, s["phase"])
+            s["msg_stage"] = jnp.where(start, 0, s["msg_stage"])
+            s["msg_arrive"] = jnp.where(
+                start, r + cm.msg_hop_rounds, s["msg_arrive"]
+            )
+        else:
+            s["phase"] = jnp.where(start, ACQ, s["phase"])
+
+        # ------------------------------------------------ 4. ORTHRUS CC work
+        if cfg.is_orthrus:
+            # -- admission of acquire-messages and release-messages, bounded
+            #    by each CC lane's per-round key-op capacity, in ts order.
+            in_cur_group = (
+                (kk[None, :] >= s["ccptr"][:, None])
+                & kvalid
+                & (ccids == jnp.take_along_axis(
+                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+            )
+            acq_cand = (
+                (s["phase"] == MSG)
+                & (s["msg_stage"] == 0)
+                & (s["msg_arrive"] <= r)
+            )
+            acq_keys = acq_cand[:, None] & in_cur_group & ~s["adm_done"]
+            rel_cand = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_keys = rel_cand[:, None] & s["granted"] & ~s["rel_done"]
+            # Rank every active entry within its CC lane by (ts, key slot)
+            # — the admission order — without sorting all T*K entries: a
+            # slot's entries share its (unique) ts, so a [T] slot sort plus
+            # per-CC prefix counts reproduces the (cc, ts, entry) rank
+            # exactly at a fraction of the cost.
+            act2d = acq_keys | rel_keys  # [T, K]
+            cc_act = jnp.where(act2d, ccids, n_cc)
+            cnt_tc = (
+                jnp.zeros((T, n_cc + 1), jnp.int32)
+                .at[jnp.broadcast_to(slot_ids[:, None], (T, K)), cc_act]
+                .add(1)
+            )
+            slot_order = jnp.argsort(s["ts"], stable=True)  # ts unique
+            cnt_sorted = cnt_tc[slot_order]
+            excl_sorted = jnp.cumsum(cnt_sorted, axis=0) - cnt_sorted
+            excl = jnp.zeros_like(excl_sorted).at[slot_order].set(excl_sorted)
+            base_rank = jnp.take_along_axis(excl, cc_act, axis=1)
+            same_cc_earlier = (
+                (cc_act[:, :, None] == cc_act[:, None, :])
+                & act2d[:, None, :]
+                & (kk[None, None, :] < kk[None, :, None])
+            )
+            within = same_cc_earlier.sum(-1, dtype=jnp.int32)
+            seg_pos2d = base_rank + within + 1  # 1-based within CC lane
+            proc2d = (seg_pos2d <= cap_keys) & act2d
+            s["adm_done"] = s["adm_done"] | (proc2d & acq_keys.reshape(T, K))
+            # group fully admitted -> requests live in the CC's lock table
+            grp_all = jnp.where(in_cur_group, s["adm_done"], True).all(axis=1)
+            admit_now = acq_cand & grp_all
+            new_want = admit_now[:, None] & in_cur_group
+            s["phase"] = jnp.where(admit_now, ACQ, s["phase"])
+            # release processing
+            do_rel = proc2d & rel_keys.reshape(T, K)
+            rel_k = jnp.where(do_rel, keys, 0)
+            is_wr = do_rel & (modes == MODE_WRITE)
+            s["wh"] = s["wh"].at[jnp.where(is_wr, rel_k, R)].set(
+                -1, mode="drop"
+            )
+            is_rd = do_rel & (modes == MODE_READ)
+            s["rc"] = s["rc"].at[jnp.where(is_rd, rel_k, R)].add(
+                -1, mode="drop"
+            )
+            s["rel_done"] = s["rel_done"] | do_rel
+            s["granted"] = s["granted"] & ~do_rel
+        else:
+            new_want = jnp.zeros((T, K), jnp.bool_)
+
+        # ------------------------------------------------ 5. shared releases
+        rel_entries = jnp.zeros((T, K), jnp.bool_)
+        if not cfg.is_orthrus:
+            rel_now = (s["phase"] == REL) & (s["release_at"] <= r)
+            rel_entries = rel_now[:, None] & s["granted"]
+            rel_k = jnp.where(rel_entries, keys, 0)
+            is_wr = rel_entries & (modes == MODE_WRITE)
+            s["wh"] = s["wh"].at[jnp.where(is_wr, rel_k, R)].set(
+                -1, mode="drop"
+            )
+            is_rd = rel_entries & (modes == MODE_READ)
+            s["rc"] = s["rc"].at[jnp.where(is_rd, rel_k, R)].add(
+                -1, mode="drop"
+            )
+            s["granted"] = s["granted"] & ~rel_entries
+
+        # ------------------------------------------------ 6. requests: want
+        if cfg.is_orthrus:
+            s["want"] = s["want"] | new_want
+            want_new = new_want
+        else:
+            # 2PL/DF/pstore: single in-flight request at kptr when ACQ & free
+            at_k = kk[None, :] == s["kptr"][:, None]
+            need = (
+                ((s["phase"] == ACQ) & free)[:, None]
+                & at_k
+                & kvalid
+                & ~s["granted"]
+                & ~s["want"]
+            )
+            want_new = need
+            s["want"] = s["want"] | need
+
+        # assign enqueue order stamps to new queue entries
+        flat_new = want_new.reshape(-1)
+        new_rank = jnp.cumsum(flat_new.astype(jnp.int32)) - 1
+        enq_val = (s["enq_ctr"] + new_rank).reshape(T, K)
+        s["enq"] = jnp.where(want_new, enq_val, s["enq"])
+        n_new = flat_new.sum(dtype=jnp.int32)
+
+        # ------------------------------------------------ 7. grant pass
+        # Requests are live only while their slot is acquiring.
+        pend = s["want"] & ~s["granted"] & (s["phase"] == ACQ)[:, None]
+        ent_kind = jnp.where(
+            pend,
+            jnp.where(modes == MODE_WRITE, REQ_WRITE, REQ_READ),
+            jnp.where(rel_entries, REQ_RELEASE, REQ_NONE),
+        ).reshape(-1)
+        ent_key = jnp.where(
+            (pend | rel_entries), keys, KEY_SENTINEL
+        ).reshape(-1)
+        rel_enq = (s["enq_ctr"] + n_new) + jnp.arange(T * K, dtype=jnp.int32)
+        ent_enq = jnp.where(
+            rel_entries, rel_enq.reshape(T, K), s["enq"]
+        ).reshape(-1)
+        s["enq_ctr"] = s["enq_ctr"] + n_new + rel_entries.sum(dtype=jnp.int32)
+
+        safe = jnp.minimum(ent_key, R - 1)
+        in_rng = ent_key < R
+        wh_free = (s["wh"][safe] == -1) & in_rng
+        rcv = jnp.where(in_rng, s["rc"][safe], 0)
+        newop2d = want_new | rel_entries  # fresh lock-table ops this round
+        order = lex_order(ent_key, ent_enq)
+        inv = inverse_permutation(order)
+        g_sorted, cont_sorted, new_sorted = segmented_grant(
+            ent_key[order],
+            ent_enq[order],
+            ent_kind[order],
+            wh_free[order],
+            rcv[order],
+            weight=newop2d.reshape(-1).astype(jnp.int32)[order],
+        )
+        grant = g_sorted[inv].reshape(T, K)
+        # re-entrant grants bypass the FIFO: a slot re-requesting a key it
+        # already write-holds is granted immediately (real transactions
+        # touch the same row more than once; without this they would
+        # deadlock on their own lock)
+        ent_slot = jnp.broadcast_to(slot_ids[:, None], (T, K)).reshape(-1)
+        self_grant = (
+            (ent_kind != REQ_NONE)
+            & (ent_kind != REQ_RELEASE)
+            & in_rng
+            & (s["wh"][safe] == ent_slot)
+        )
+        grant = grant | self_grant.reshape(T, K)
+        contend = cont_sorted[inv].reshape(T, K)
+        new_in_seg = new_sorted[inv].reshape(T, K)
+
+        # apply grants to the lock table
+        gk = jnp.where(grant, keys, 0)
+        g_wr = grant & (modes == MODE_WRITE)
+        g_rd = grant & (modes == MODE_READ)
+        holder = jnp.broadcast_to(slot_ids[:, None], (T, K))
+        s["wh"] = s["wh"].at[jnp.where(g_wr, gk, R)].set(
+            holder, mode="drop"
+        )
+        s["rc"] = s["rc"].at[jnp.where(g_rd, gk, R)].add(1, mode="drop")
+        s["granted"] = s["granted"] | grant
+
+        # ------------------------------------------------ 8. deadlock logic
+        # (runs before cost charging so a wait-die "die" probe — a read of
+        # the holder's timestamp — costs latency but does not occupy the
+        # record's meta-data line the way a queue mutation does)
+        abort_dl = jnp.zeros((T,), jnp.bool_)
+        if dl != "none":
+            waitkey = jnp.where(
+                (s["phase"] == ACQ)
+                & jnp.take_along_axis(
+                    s["want"] & ~s["granted"],
+                    jnp.minimum(s["kptr"], K - 1)[:, None],
+                    axis=1,
+                ).squeeze(1),
+                jnp.take_along_axis(
+                    keys, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                ).squeeze(1),
+                KEY_SENTINEL,
+            )
+            waiting = waitkey != KEY_SENTINEL
+            mymode = jnp.take_along_axis(
+                modes, jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            # adj[t,u]: t waits on a lock u holds in a conflicting mode
+            key_eq = keys[None, :, :] == waitkey[:, None, None]  # [t,u,k]
+            conflict = (mymode[:, None, None] == MODE_WRITE) | (
+                modes[None, :, :] == MODE_WRITE
+            )
+            adj = (
+                (key_eq & s["granted"][None, :, :] & conflict).any(-1)
+                & waiting[:, None]
+                & (slot_ids[None, :] != slot_ids[:, None])
+                & (s["tid"][None, :] >= 0)
+            )
+            if dl == "waitdie":
+                # a waiter dies whenever its wait-for edge points at an
+                # older holder — evaluated on every holder change (waiting
+                # on a younger holder is legal, so the edge must be
+                # re-checked when the lock changes hands); the "die" probe
+                # is a read of the holder's timestamp and is costed as
+                # latency only (no line occupancy) in stage 9
+                newly_waiting = waiting & ~s["waited"]
+                older_holder = (
+                    adj & (s["ts"][None, :] < s["ts"][:, None])
+                ).any(-1)
+                abort_dl = older_holder & waiting
+                s["dl_debt"] = s["dl_debt"] + jnp.where(
+                    newly_waiting, cm.waitdie_check_cycles, 0
+                )
+            else:
+                own = jnp.eye(T, dtype=jnp.bool_)
+                # one propagation step per round (dreadlocks-style digests)
+                reach = own | (adj @ s["reach"])
+                s["reach"] = jnp.where(waiting[:, None], reach, own)
+                in_cycle = (adj & s["reach"].T).any(-1)  # holder reaches me
+                # abort the youngest member of the detected cycle; waitfor
+                # and dreadlocks are logically equivalent detectors (paper
+                # §4.1) and differ only in their cost constants
+                scc = s["reach"] & s["reach"].T
+                scc_ts_max = jnp.max(
+                    jnp.where(scc & in_cycle[None, :], s["ts"][None, :], -1),
+                    axis=1,
+                )
+                abort_dl = in_cycle & (s["ts"] >= scc_ts_max)
+                s["dl_debt"] = s["dl_debt"] + jnp.where(
+                    waiting, dl_wait_cycles, 0
+                )
+            s["waited"] = waiting
+            # convert deadlock-handling debt into lane busy time
+            debt_rounds = s["dl_debt"] // cm.cycles_per_round
+            has_debt = debt_rounds > 0
+            s["busy_until"] = jnp.where(
+                has_debt, jnp.maximum(s["busy_until"], r) + debt_rounds,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(has_debt, CAT_DL, s["busy_kind"])
+            s["dl_debt"] = s["dl_debt"] % cm.cycles_per_round
+
+            abort_dl = abort_dl & waiting
+            s["aborts_dl"] = s["aborts_dl"] + abort_dl.sum(dtype=jnp.int32)
+            s["wasted"] = s["wasted"] + jnp.where(abort_dl, s["kptr"], 0).sum(
+                dtype=jnp.int32
+            )
+            s["phase"] = jnp.where(abort_dl, REL, s["phase"])
+            s["committing"] = jnp.where(abort_dl, False, s["committing"])
+            s["release_at"] = jnp.where(abort_dl, r, s["release_at"])
+            s["want"] = s["want"] & ~abort_dl[:, None]
+
+        # ------------------------------------------------ 9. line-cost model
+        # Coherence physics for shared lock tables (paper §2.1): each record's
+        # CC meta-data line is a serially-reusable resource. Op service time
+        # grows with the number of cores recently touching the line ("sharer
+        # heat", estimated over epoch windows) and with line ping-pong (last
+        # toucher on a different core). Queue-mutating ops on a backlogged
+        # line wait behind it; wait-die "die" probes pay their own transfer
+        # latency but occupy nothing. ORTHRUS CC lanes are exempt:
+        # single-owner meta-data.
+        if not cfg.is_orthrus:
+            newop = newop2d  # fresh lock-table ops this round: reqs+releases
+            mutate = newop & ~abort_dl[:, None]  # dies don't enqueue
+            e = r >> EPOCH_BITS
+            opk_r = jnp.minimum(jnp.where(newop, keys, 0), R - 1)
+            heat_k = s["heat"][opk_r]  # [T, K, 3] = (ep, cnt_cur, cnt_prev)
+            ep_k = heat_k[..., 0]
+            cur_k = heat_k[..., 1]
+            prev_k = heat_k[..., 2]
+            line_k = s["line"][opk_r]  # [T, K, 2] = (lnf, last_lane)
+            sharers = jnp.where(
+                ep_k == e,
+                jnp.maximum(prev_k, cur_k),
+                jnp.where(ep_k == e - 1, cur_k, 0),
+            )
+            lane2d = jnp.broadcast_to(lane_of[:, None], (T, K))
+            remote = line_k[..., 1] != lane2d
+            coh = jnp.where(
+                remote,
+                cm.coherence_cycles_per_sharer
+                * jnp.clip(sharers, 1, cfg.n_exec - 1),
+                0,
+            )
+            if dl == "dreadlocks":
+                # waiters spin on the holders' digests: every queued waiter
+                # keeps the lock meta-data lines hot, so each op pays extra
+                # coherence proportional to the current queue (paper §4.4.1)
+                coh = coh + cm.dreadlocks_spin_cycles * jnp.maximum(
+                    contend - 1, 0
+                )
+            dur = rounds_of(lock_op_cycles + coh)
+            lnf_cur = line_k[..., 0]
+            backlog = jnp.maximum(jnp.where(mutate, lnf_cur - r, 0), 0)
+            charge = jnp.where(newop, backlog + dur, 0).sum(axis=1)
+            # occupancy: same-round queue mutations serialize on the line
+            # per-key mutation count, reusing the grant pass's (key, enq)
+            # sort: every mutating entry was an active entry there, and the
+            # result is consumed only at mutating entries
+            mut_in_seg = segment_sum_sorted(
+                ent_key[order],
+                mutate.reshape(-1).astype(jnp.int32)[order],
+            )[inv].reshape(T, K)
+            occupy = jnp.where(mutate, mut_in_seg * dur, 0)
+            tgt = jnp.maximum(lnf_cur, r) + occupy
+            opk_heat = jnp.where(newop, opk_r, R)
+            # packed writes: lnf applies only at mutating entries (a die
+            # probe occupies nothing), masked inside the max via INT32_MIN;
+            # last_lane applies at every fresh op. Heat values are
+            # per-key-identical, so duplicate-index set is idempotent.
+            line_upd = jnp.stack(
+                [jnp.where(mutate, tgt, jnp.iinfo(jnp.int32).min), lane2d],
+                axis=-1,
+            )
+            s["line"] = s["line"].at[opk_heat].max(line_upd, mode="drop")
+            new_prev = jnp.where(
+                ep_k == e, prev_k, jnp.where(ep_k == e - 1, cur_k, 0)
+            )
+            new_cur = jnp.where(ep_k == e, cur_k, 0) + new_in_seg
+            heat_upd = jnp.stack(
+                [jnp.broadcast_to(e, new_cur.shape), new_cur, new_prev],
+                axis=-1,
+            )
+            s["heat"] = s["heat"].at[opk_heat].set(heat_upd, mode="drop")
+            charged = charge > 0
+            s["busy_until"] = jnp.where(
+                charged, jnp.maximum(s["busy_until"], r) + charge,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(charged, CAT_LOCK, s["busy_kind"])
+
+        # ------------------------------------------------ 10. transitions
+        free = s["busy_until"] <= r
+        exec_rounds_one = rounds_of(exec_cycles_per_op)
+
+        if cfg.is_dynamic_2pl:
+            cur_granted = jnp.take_along_axis(
+                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            go = (s["phase"] == ACQ) & free & cur_granted & ~abort_dl
+            last = go & (s["kptr"] + 1 >= nkeys)
+            extra = jnp.maximum(execops - nkeys, 0)
+            add = jnp.where(
+                go, exec_rounds_one + jnp.where(last, extra * exec_rounds_one, 0), 0
+            )
+            s["busy_until"] = jnp.where(
+                go, jnp.maximum(s["busy_until"], r) + add, s["busy_until"]
+            )
+            s["busy_kind"] = jnp.where(go, CAT_EXEC, s["busy_kind"])
+            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
+            s["phase"] = jnp.where(last, EXEC, s["phase"])
+        elif cfg.protocol in ("deadlock_free", "partitioned_store"):
+            cur_granted = jnp.take_along_axis(
+                s["granted"], jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+            ).squeeze(1)
+            go = (s["phase"] == ACQ) & free & cur_granted
+            s["kptr"] = jnp.where(go, s["kptr"] + 1, s["kptr"])
+            alldone = go & (s["kptr"] >= nkeys)
+            s["phase"] = jnp.where(alldone, EXEC, s["phase"])
+            s["busy_until"] = jnp.where(
+                alldone,
+                jnp.maximum(s["busy_until"], r) + execops * exec_rounds_one,
+                s["busy_until"],
+            )
+            s["busy_kind"] = jnp.where(alldone, CAT_EXEC, s["busy_kind"])
+        else:  # orthrus
+            in_cur_group = (
+                (kk[None, :] >= s["ccptr"][:, None])
+                & kvalid
+                & (ccids == jnp.take_along_axis(
+                    ccids, jnp.minimum(s["ccptr"], K - 1)[:, None], axis=1))
+            )
+            grp_done = (
+                (s["phase"] == ACQ)
+                & jnp.where(in_cur_group, s["granted"], True).all(axis=1)
+            )
+            nxt = jnp.where(
+                (kk[None, :] >= s["ccptr"][:, None]) & kvalid & ~in_cur_group,
+                kk[None, :],
+                K,
+            ).min(axis=1)
+            more = grp_done & (nxt < K)
+            s["ccptr"] = jnp.where(more, nxt, s["ccptr"])
+            s["adm_done"] = jnp.where(more[:, None], False, s["adm_done"])
+            s["phase"] = jnp.where(grp_done, MSG, s["phase"])
+            s["msg_stage"] = jnp.where(grp_done, jnp.where(more, 0, 1),
+                                       s["msg_stage"])
+            s["msg_arrive"] = jnp.where(
+                grp_done, r + cm.msg_hop_rounds, s["msg_arrive"]
+            )
+            # response arrives -> READY
+            resp = (
+                (s["phase"] == MSG) & (s["msg_stage"] == 1)
+                & (s["msg_arrive"] <= r)
+            )
+            s["phase"] = jnp.where(resp, READY, s["phase"])
+            # exec-lane scheduling: oldest READY per idle lane starts
+            lane_busy = jax.ops.segment_sum(
+                ((s["phase"] == EXEC) & ~free).astype(jnp.int32),
+                lane_of,
+                num_segments=cfg.n_exec,
+            )
+            ready = s["phase"] == READY
+            ready_ts = jnp.where(ready, s["ts"], jnp.iinfo(jnp.int32).max)
+            lane_min = jax.ops.segment_min(
+                ready_ts, lane_of, num_segments=cfg.n_exec
+            )
+            startx = (
+                ready
+                & (ready_ts == lane_min[lane_of])
+                & (lane_busy[lane_of] == 0)
+            )
+            # break ties (same ts impossible — tids unique) -> safe
+            s["phase"] = jnp.where(startx, EXEC, s["phase"])
+            s["busy_until"] = jnp.where(
+                startx, r + execops * exec_rounds_one, s["busy_until"]
+            )
+            s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+
+        # EXEC finished -> release (commit, or OLLP-miss abort+retry)
+        free = s["busy_until"] <= r
+        fin = (s["phase"] == EXEC) & free
+        is_miss = fin & miss & (s["attempt"] == 0)
+        s["aborts_ollp"] = s["aborts_ollp"] + is_miss.sum(dtype=jnp.int32)
+        s["wasted"] = s["wasted"] + jnp.where(is_miss, execops, 0).sum(
+            dtype=jnp.int32
+        )
+        s["phase"] = jnp.where(fin, REL, s["phase"])
+        s["committing"] = jnp.where(fin, ~is_miss, s["committing"])
+        rel_delay = cm.msg_hop_rounds if cfg.is_orthrus else 0
+        s["release_at"] = jnp.where(fin, r + rel_delay, s["release_at"])
+        s["rel_done"] = jnp.where(fin[:, None], False, s["rel_done"])
+        s["want"] = s["want"] & ~fin[:, None]
+
+        # REL complete -> EMPTY (commit) or BACKOFF (retry). A slot leaves
+        # only after every lock it held has actually been released (the
+        # release scatter runs in stages 4/5 of a *subsequent* round).
+        rel_done_all = (
+            (s["phase"] == REL)
+            & (s["release_at"] <= r)
+            & ~(s["granted"]).any(axis=1)
+        )
+        com = rel_done_all & s["committing"]
+        s["commits"] = s["commits"] + com.sum(dtype=jnp.int32)
+        s["phase"] = jnp.where(
+            rel_done_all, jnp.where(s["committing"], EMPTY, BACKOFF), s["phase"]
+        )
+        s["tid"] = jnp.where(com, -1, s["tid"])
+        s["busy_until"] = jnp.where(
+            rel_done_all & ~s["committing"],
+            r + cm.abort_backoff_rounds,
+            s["busy_until"],
+        )
+        s["want"] = jnp.where(rel_done_all[:, None], False, s["want"])
+
+        # ------------------------------------------------ 11. lane accounting
+        busy = s["busy_until"] > r
+        slot_cat = jnp.where(
+            busy,
+            s["busy_kind"],
+            jnp.where(
+                (s["phase"] == ACQ) & (s["want"] & ~s["granted"]).any(axis=1),
+                CAT_WAIT,
+                jnp.where(
+                    (s["phase"] == MSG) | (s["phase"] == READY)
+                    | (s["phase"] == REL),
+                    CAT_MSG,
+                    CAT_IDLE,
+                ),
+            ),
+        )
+        if cfg.is_orthrus:
+            # a lane is "exec" if its running slot is busy executing; else
+            # classify by the most advanced outstanding slot state
+            lane_exec = jax.ops.segment_max(
+                (busy & (slot_cat == CAT_EXEC)).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_wait = jax.ops.segment_max(
+                (slot_cat == CAT_WAIT).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_msg = jax.ops.segment_max(
+                (slot_cat == CAT_MSG).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            lane_cat = jnp.where(
+                lane_exec == 1,
+                CAT_EXEC,
+                jnp.where(lane_wait == 1, CAT_WAIT,
+                          jnp.where(lane_msg == 1, CAT_MSG, CAT_IDLE)),
+            )
+            cat_counts = jax.ops.segment_sum(
+                jnp.ones((cfg.n_exec,), jnp.int32),
+                lane_cat,
+                num_segments=NCAT,
+            )
+        else:
+            cat_counts = jax.ops.segment_sum(
+                jnp.ones((T,), jnp.int32), slot_cat, num_segments=NCAT
+            )
+
+        # ------------------------------------------------ 12. event leap
+        # Advance straight to the next round at which any slot can act.
+        # Every skipped round is provably a no-op: every per-slot timer
+        # (busy_until / msg_arrive / release_at) lies beyond it and no slot
+        # is in a phase that acts unconditionally each round. Lane
+        # accounting is exact because the post-transition lane state (the
+        # `cat_counts` just computed) persists unchanged through the gap.
+        if cfg.event_leap:
+            ph = s["phase"]
+            busy2 = s["busy_until"] > r
+            free2 = ~busy2
+            # future per-slot timers; a busy expiry is always an event (it
+            # changes lane accounting even when no transition follows)
+            cand = jnp.where(busy2, s["busy_until"], _IMAX)
+            # admission, release processing and message arrival ignore the
+            # busy timer (stages 1, 4, 5 have no `free` gate), so their
+            # timers and ready-to-act states are tracked unconditionally
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], _IMAX))
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == REL) & (s["release_at"] > r), s["release_at"], _IMAX))
+            if lane_stream is None:
+                can_adm = jnp.ones((T,), jnp.bool_)
+            else:
+                can_adm = (
+                    lane_stream[slot_ids, s["lane_ctr"] % meta.lane_cols] >= 0
+                )
+            act_next = (
+                ((ph == EMPTY) & can_adm)
+                | ((ph == MSG) & (s["msg_arrive"] <= r))
+                | ((ph == REL) & (s["release_at"] <= r))
+                | (free2 & ((ph == INIT) | (ph == BACKOFF)))
+            )
+            if cfg.is_orthrus:
+                # a READY slot starts the round its lane goes idle; while
+                # the lane runs another slot, that slot's busy_until is the
+                # wake-up event (already a candidate above)
+                lane_exec_busy = jax.ops.segment_max(
+                    ((ph == EXEC) & busy2).astype(jnp.int32), lane_of,
+                    num_segments=cfg.n_exec,
+                )
+                act_next = act_next | (
+                    (ph == READY) & (lane_exec_busy[lane_of] == 0)
+                )
+            else:
+                # an acquiring slot with no pending (un-granted) request
+                # places its next one immediately; a blocked waiter is
+                # woken by its holder's release timer
+                blocked = jnp.take_along_axis(
+                    s["want"] & ~s["granted"],
+                    jnp.minimum(s["kptr"], K - 1)[:, None], axis=1
+                ).squeeze(1)
+                act_next = act_next | ((ph == ACQ) & free2 & ~blocked)
+            if dl in ("waitfor", "dreadlocks"):
+                # graph detectors evolve every waiting round (reach-matrix
+                # propagation + per-round spin debt): stay dense while any
+                # slot waits
+                act_next = act_next | s["waited"].any()
+            cand = jnp.where(act_next, r + 1, cand)
+            nxt = jnp.clip(jnp.min(cand), r + 1, r_end)
+        else:
+            nxt = r + 1
+        leap = nxt - r
+        s["cat"] = s["cat"] + cat_counts * leap
+        s["steps"] = s["steps"] + 1
+        s["r"] = nxt
+        return s
+
+    return step
+
+
+
+def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
+    i32 = jnp.int32
+    sched = plan.sched
+    N = sched.n_txns
+    return dict(
+        r=jnp.zeros((), i32),
+        next_txn=jnp.zeros((), i32),
+        cur_batch=jnp.zeros((), i32),
+        bpos=jnp.zeros((), i32),
+        batch_left=jnp.asarray(int(sched.batch_size[0]), i32),
+        plan_fin=jnp.asarray(int(_batch_plan_rounds(cfg, plan)[0]), i32),
+        done=jnp.zeros((N,), jnp.bool_),
+        tid=jnp.full((T,), -1, i32),
+        widx=jnp.zeros((T,), i32),
+        ts=jnp.zeros((T,), i32),
+        phase=jnp.zeros((T,), i32),
+        busy_until=jnp.zeros((T,), i32),
+        busy_kind=jnp.zeros((T,), i32),
+        msg_arrive=jnp.zeros((T,), i32),
+        commits=jnp.zeros((), i32),
+        aborts_dl=jnp.zeros((), i32),
+        aborts_ollp=jnp.zeros((), i32),
+        wasted=jnp.zeros((), i32),
+        cat=jnp.zeros((NCAT,), i32),
+        steps=jnp.zeros((), i32),
+    )
+
+
+def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
+    """Single-round transition for the batch-planned protocols (dgcc /
+    quecc): lock-free execution over a precomputed dependency schedule.
+
+    Returns ``step(p, s, r_end)`` with the same contract as
+    :func:`make_step`. The round loop performs only (a) batch-boundary
+    bookkeeping, (b) admission of the current batch's transactions to
+    exec-lane slots, and (c) the wavefront-eligibility check "all planned
+    predecessors committed" — the dense-gather formulation of the
+    ``dep_wavefront`` kernel contract (equivalence is property-tested).
+    There is no lock table, no deadlock logic, and no abort path.
+    """
+    cm = cfg.cost
+    T = cfg.n_slots
+    N = meta.n_txns
+    W = cfg.window
+    NB = meta.num_batches
+
+    lane_of = jnp.arange(T, dtype=jnp.int32) // W
+    shared_index = not cfg.split_index
+    exec_cycles_per_op = cm.exec_op_cycles + (
+        cm.shared_index_penalty_cycles if shared_index else 0
+    )
+    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+    exec_rounds_one = rounds_of(exec_cycles_per_op)
+    imax = jnp.iinfo(jnp.int32).max
+
+    def step(p, s, r_end):
+        r = s["r"]
+        wexec = p["exec_ops"]
+        wnpred = p["npred"]
+        pred_pad = p["pred_pad"]  # [N, P]
+        batch_of = p["batch_of"]  # [N]
+        bstart = p["batch_start"]  # [NB]
+        bsize = p["batch_size"]
+        plan_rounds = p["plan_rounds"]  # [NB]
+
+        # -------------------------------------------- 1. batch rollover
+        # When every transaction of the current batch has committed, open
+        # the next one. Planning is pipelined: planners started on the
+        # next batch the moment they finished this one, so the new
+        # batch's plan-ready round advances by its own planning span.
+        adv = s["batch_left"] == 0
+        new_b = jnp.where(adv, (s["cur_batch"] + 1) % NB, s["cur_batch"])
+        s["done"] = jnp.where(adv & (batch_of == new_b), False, s["done"])
+        s["bpos"] = jnp.where(adv, bstart[new_b], s["bpos"])
+        s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
+        s["plan_fin"] = jnp.where(
+            adv, s["plan_fin"] + plan_rounds[new_b], s["plan_fin"]
+        )
+        s["cur_batch"] = new_b
+
+        # -------------------------------------------- 2. admission
+        # Empty slots pull the next positions of the current batch, in
+        # the planner's serial order, once the batch's plan is ready.
+        empty = s["phase"] == EMPTY
+        rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
+        pos = s["bpos"] + rank
+        bend = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
+        adm = empty & (pos < bend) & (r >= s["plan_fin"])
+        s["widx"] = jnp.where(adm, pos, s["widx"])
+        new_tid = s["next_txn"] + rank
+        s["tid"] = jnp.where(adm, new_tid, s["tid"])
+        s["ts"] = jnp.where(adm, new_tid, s["ts"])
+        n_adm = adm.sum(dtype=jnp.int32)
+        s["bpos"] = s["bpos"] + n_adm
+        s["next_txn"] = s["next_txn"] + n_adm
+        npred_t = wnpred[s["widx"]]
+        init_busy = rounds_of(
+            cm.txn_fixed_cycles + npred_t * cm.dep_check_cycles
+        )
+        s["phase"] = jnp.where(adm, INIT, s["phase"])
+        s["busy_until"] = jnp.where(adm, r + init_busy, s["busy_until"])
+        s["busy_kind"] = jnp.where(adm, CAT_LOCK, s["busy_kind"])
+
+        # -------------------------------------------- 3. INIT -> MSG
+        # The exec lane fetches its next planned entry from the scheduler
+        # queue: one SPSC hop (functional separation, as in ORTHRUS).
+        free = s["busy_until"] <= r
+        start = (s["phase"] == INIT) & free & (s["tid"] >= 0)
+        s["phase"] = jnp.where(start, MSG, s["phase"])
+        s["msg_arrive"] = jnp.where(
+            start, r + cm.msg_hop_rounds, s["msg_arrive"]
+        )
+        got = (s["phase"] == MSG) & (s["msg_arrive"] <= r)
+        s["phase"] = jnp.where(got, READY, s["phase"])
+
+        # -------------------------------------------- 4. wavefront check
+        # "All planned predecessors committed" — the dep_wavefront
+        # primitive in dense per-slot form.
+        preds = pred_pad[s["widx"]]  # [T, P]
+        pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
+        dep_ok = pred_ok.all(axis=1)
+        ready = (s["phase"] == READY) & dep_ok
+
+        # -------------------------------------------- 5. lane scheduling
+        busy = s["busy_until"] > r
+        lane_busy = jax.ops.segment_sum(
+            ((s["phase"] == EXEC) & busy).astype(jnp.int32),
+            lane_of,
+            num_segments=cfg.n_exec,
+        )
+        ready_ts = jnp.where(ready, s["ts"], imax)
+        lane_min = jax.ops.segment_min(
+            ready_ts, lane_of, num_segments=cfg.n_exec
+        )
+        startx = (
+            ready
+            & (ready_ts == lane_min[lane_of])
+            & (lane_busy[lane_of] == 0)
+        )
+        exec_t = wexec[s["widx"]]
+        s["phase"] = jnp.where(startx, EXEC, s["phase"])
+        s["busy_until"] = jnp.where(
+            startx, r + exec_t * exec_rounds_one, s["busy_until"]
+        )
+        s["busy_kind"] = jnp.where(startx, CAT_EXEC, s["busy_kind"])
+
+        # -------------------------------------------- 6. commit
+        # No locks to release and no abort path: planned execution is
+        # conflict-free by construction.
+        free = s["busy_until"] <= r
+        fin = (s["phase"] == EXEC) & free
+        s["done"] = s["done"].at[jnp.where(fin, s["widx"], N)].set(
+            True, mode="drop"
+        )
+        ncom = fin.sum(dtype=jnp.int32)
+        s["commits"] = s["commits"] + ncom
+        s["batch_left"] = s["batch_left"] - ncom
+        s["phase"] = jnp.where(fin, EMPTY, s["phase"])
+        s["tid"] = jnp.where(fin, -1, s["tid"])
+
+        # -------------------------------------------- 7. lane accounting
+        busy2 = s["busy_until"] > r
+        slot_cat = jnp.where(
+            busy2,
+            s["busy_kind"],
+            jnp.where(
+                s["phase"] == MSG,
+                CAT_MSG,
+                jnp.where(s["phase"] == READY, CAT_WAIT, CAT_IDLE),
+            ),
+        )
+        lane_exec = jax.ops.segment_max(
+            (busy2 & (slot_cat == CAT_EXEC)).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_wait = jax.ops.segment_max(
+            (slot_cat == CAT_WAIT).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_msg = jax.ops.segment_max(
+            (slot_cat == CAT_MSG).astype(jnp.int32), lane_of,
+            num_segments=cfg.n_exec,
+        )
+        lane_cat = jnp.where(
+            lane_exec == 1,
+            CAT_EXEC,
+            jnp.where(lane_wait == 1, CAT_WAIT,
+                      jnp.where(lane_msg == 1, CAT_MSG, CAT_IDLE)),
+        )
+        cat_counts = jax.ops.segment_sum(
+            jnp.ones((cfg.n_exec,), jnp.int32),
+            lane_cat,
+            num_segments=NCAT,
+        )
+
+        # -------------------------------------------- 8. event leap
+        # Timers: busy_until (init dep-check spans, exec, pred commits),
+        # msg_arrive, and the scalar admission gate (plan_fin / batch
+        # rollover). A dep-blocked READY slot is woken by its predecessor's
+        # commit (the pred's busy_until); a dep-clear READY slot starts the
+        # round its lane goes idle.
+        if cfg.event_leap:
+            ph = s["phase"]
+            busy3 = s["busy_until"] > r
+            free3 = ~busy3
+            cand = jnp.where(busy3, s["busy_until"], imax)
+            cand = jnp.minimum(cand, jnp.where(
+                (ph == MSG) & (s["msg_arrive"] > r), s["msg_arrive"], imax))
+            act_next = (
+                (free3 & (ph == INIT))
+                | ((ph == MSG) & (s["msg_arrive"] <= r))
+            )
+            preds2 = pred_pad[s["widx"]]
+            dep_ok2 = (
+                (preds2 < 0) | s["done"][jnp.maximum(preds2, 0)]
+            ).all(axis=1)
+            lane_exec_busy = jax.ops.segment_max(
+                ((ph == EXEC) & busy3).astype(jnp.int32), lane_of,
+                num_segments=cfg.n_exec,
+            )
+            act_next = act_next | (
+                (ph == READY) & dep_ok2 & (lane_exec_busy[lane_of] == 0)
+            )
+            cand = jnp.where(act_next, r + 1, cand)
+            # admission is a scalar event: the next batch opens the round
+            # after batch_left hits zero; within a batch, empty slots admit
+            # once plan_fin has passed and positions remain
+            bend2 = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
+            adm_evt = jnp.where(
+                s["batch_left"] == 0,
+                r + 1,
+                jnp.where(
+                    s["bpos"] < bend2,
+                    jnp.maximum(s["plan_fin"], r + 1),
+                    imax,
+                ),
+            )
+            adm_evt = jnp.where((ph == EMPTY).any(), adm_evt, imax)
+            nxt = jnp.clip(jnp.minimum(jnp.min(cand), adm_evt), r + 1, r_end)
+        else:
+            nxt = r + 1
+        leap = nxt - r
+        s["cat"] = s["cat"] + cat_counts * leap
+        s["steps"] = s["steps"] + 1
+        s["r"] = nxt
+        return s
+
+    return step
+
+

@@ -44,7 +44,10 @@ from repro.core.workloads import Workload
 # planner output change in any result-visible way: benchmark caches
 # (benchmarks/common.py) hash this tag into their keys so stale cache
 # entries from an older engine can never silently mix with fresh ones.
-ENGINE_VERSION = "2-event-leap"
+# ("3-packed-slots" is bit-identical to "2-event-leap" by construction —
+# golden traces enforce it — but carries a different performance profile,
+# so perf samples keyed on the old tag must not mix with new ones.)
+ENGINE_VERSION = "3-packed-slots"
 
 _RUNNER_CACHE: dict = {}
 
@@ -54,6 +57,17 @@ _SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps"
 def runner_cache_info() -> dict:
     """Introspection for tests/tools: number of cached compiled runners."""
     return {"entries": len(_RUNNER_CACHE), "keys": list(_RUNNER_CACHE)}
+
+
+def _step_module(cfg: EngineConfig):
+    """The step-builder module for the config's state layout: the packed
+    [T, F] engine, or the frozen pre-rewrite reference
+    (``repro.core.engine_legacy``) used as the conformance oracle."""
+    if cfg.state_layout == "legacy":
+        from repro.core import engine_legacy
+
+        return engine_legacy
+    return engine_lib
 
 
 def get_runner(cfg: EngineConfig, meta: PlanMeta, batched: bool):
@@ -66,10 +80,11 @@ def get_runner(cfg: EngineConfig, meta: PlanMeta, batched: bool):
     key = (cfg.trace_statics(), meta, batched)
     fn = _RUNNER_CACHE.get(key)
     if fn is None:
+        step_mod = _step_module(cfg)
         builder = (
-            engine_lib.make_batch_step
+            step_mod.make_batch_step
             if cfg.is_batch_planned
-            else engine_lib.make_step
+            else step_mod.make_step
         )
         step = builder(cfg, meta)
 
@@ -122,11 +137,12 @@ def simulate_plans(
 
     ps = [engine_lib.plan_device(cfg, pl) for pl in plans]
     T = cfg.n_slots
+    step_mod = _step_module(cfg)
     if cfg.is_batch_planned:
-        states = [engine_lib._batch_state0(cfg, pl, T) for pl in plans]
+        states = [step_mod._batch_state0(cfg, pl, T) for pl in plans]
     else:
         states = [
-            engine_lib._state0(cfg, pl.num_records, T, meta.max_keys)
+            step_mod._state0(cfg, pl.num_records, T, meta.max_keys)
             for pl in plans
         ]
     if n == 1:

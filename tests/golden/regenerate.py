@@ -1,0 +1,105 @@
+"""Regenerate the golden-trace regression fixtures.
+
+Each fixture is a tiny deterministic simulation of one protocol —
+counters, round counts and the Fig-10 lane-time breakdown — captured as
+JSON. ``tests/test_golden_traces.py`` replays the same configuration on
+the current engine and compares **bit-exactly**: any engine change that
+alters a single commit, abort, or breakdown bucket on any protocol
+fails the suite.
+
+The committed fixtures encode the pre-packed-rewrite engine (PR 2,
+``ENGINE_VERSION = "2-event-leap"``); the packed [T, F] engine is
+required to reproduce them exactly. Only regenerate after an
+*intentional* semantic change, together with an ``ENGINE_VERSION``
+bump:
+
+    PYTHONPATH=src:tests python tests/golden/regenerate.py
+
+The runs are small on purpose (256 txns, ~1.2k rounds) so the whole
+golden suite replays in seconds in tier-1 CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+SIM = dict(max_rounds=1200, warmup_rounds=300, chunk_rounds=300,
+           target_commits=10**9)
+
+YCSB_HOT = dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
+                seed=0)
+TPCC_OLLP = dict(kind="tpcc", num_txns=256, num_warehouses=4,
+                 ollp_miss_prob=0.5, seed=4)
+
+# One cell per protocol on the contended-YCSB workload, plus a TPC-C
+# cell exercising the OLLP miss-abort-retry path.
+CELLS = {
+    "twopl_waitdie": (YCSB_HOT, dict(protocol="twopl_waitdie", n_exec=8)),
+    "twopl_waitfor": (YCSB_HOT, dict(protocol="twopl_waitfor", n_exec=8)),
+    "twopl_dreadlocks": (
+        YCSB_HOT, dict(protocol="twopl_dreadlocks", n_exec=8)),
+    "deadlock_free": (YCSB_HOT, dict(protocol="deadlock_free", n_exec=8)),
+    "orthrus": (
+        YCSB_HOT, dict(protocol="orthrus", n_cc=2, n_exec=6, window=2)),
+    "partitioned_store": (
+        YCSB_HOT, dict(protocol="partitioned_store", n_exec=8)),
+    "dgcc": (YCSB_HOT, dict(protocol="dgcc", n_cc=2, n_exec=6, window=2)),
+    "quecc": (YCSB_HOT, dict(protocol="quecc", n_cc=4, n_exec=6, window=2)),
+    "deadlock_free_tpcc_ollp": (
+        TPCC_OLLP, dict(protocol="deadlock_free", n_exec=8)),
+}
+
+
+def fingerprint(res) -> dict:
+    """Everything the engine reports except wall-clock measurements."""
+    return dict(
+        commits=res.commits,
+        aborts_deadlock=res.aborts_deadlock,
+        aborts_ollp=res.aborts_ollp,
+        wasted_ops=res.wasted_ops,
+        rounds=res.rounds,
+        sim_seconds=res.sim_seconds,
+        breakdown=res.breakdown,
+        total_commits=res.raw["total_commits"],
+        next_txn=res.raw["next_txn"],
+        rounds_total=res.raw["rounds_total"],
+        steps_executed=res.raw["steps_executed"],
+    )
+
+
+def run_cell(name: str) -> dict:
+    from repro.core.engine import EngineConfig, run_simulation
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    wl_kw, eng_kw = CELLS[name]
+    wl = make_workload(WorkloadConfig(**wl_kw))
+    cfg = EngineConfig(**eng_kw, **SIM)
+    return dict(
+        workload=wl_kw,
+        engine=eng_kw,
+        sim=SIM,
+        trace=fingerprint(run_simulation(cfg, wl)),
+    )
+
+
+def main() -> None:
+    from repro.core.sweep import ENGINE_VERSION
+
+    for name in CELLS:
+        golden = run_cell(name)
+        golden["generated_by_engine_version"] = ENGINE_VERSION
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(golden, f, indent=1, sort_keys=True)
+            f.write("\n")
+        t = golden["trace"]
+        print(f"{name:28s} commits={t['commits']:5d} "
+              f"aborts_dl={t['aborts_deadlock']:4d} "
+              f"aborts_ollp={t['aborts_ollp']:4d} rounds={t['rounds']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,13 @@ The leaping engine's contract is *bit-identical simulation*: commits,
 aborts (both kinds), wasted ops, round counts, and the Fig-10 lane-time
 breakdown must match the dense reference loop exactly, for every
 protocol — and the vmapped multi-cell driver must match serial
-execution exactly. These tests are the guard rail for any future engine
-change (see ENGINE_VERSION in repro.core.sweep).
+execution exactly. The same contract covers the packed [SLOT_F, T]
+state-matrix engine vs the frozen pre-rewrite step builders
+(``repro.core.engine_legacy``, selected with
+``EngineConfig(state_layout="legacy")``). These tests are the guard
+rail for any future engine change (see ENGINE_VERSION in
+repro.core.sweep); tests/test_golden_traces.py pins the same contract
+against committed fixtures across PRs.
 """
 
 import pytest
@@ -112,6 +117,74 @@ def test_leap_matches_dense_property(protocol, num_hot, read_only, seed):
     leap = _run(protocol, wl, leap=True, sim=sim)
     dense = _run(protocol, wl, leap=False, sim=sim)
     assert _fingerprint(leap) == _fingerprint(dense)
+
+
+@pytest.mark.parametrize("protocol", sorted(PROTO_KW))
+def test_packed_matches_legacy(ycsb_hot, protocol):
+    """The packed [SLOT_F, T] state-matrix engine must reproduce the
+    frozen pre-rewrite engine bit-exactly, per protocol."""
+    packed = _run(protocol, ycsb_hot, leap=True)
+    legacy_cfg = EngineConfig(protocol=protocol, event_leap=True,
+                              state_layout="legacy",
+                              **PROTO_KW[protocol], **FAST)
+    legacy = run_simulation(legacy_cfg, ycsb_hot)
+    assert _fingerprint(packed) == _fingerprint(legacy)
+    assert packed.raw["steps_executed"] == legacy.raw["steps_executed"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    protocol=st.sampled_from(sorted(PROTO_KW)),
+    n_exec=st.sampled_from([2, 6, 16]),
+    window=st.sampled_from([1, 3]),
+    num_hot=st.sampled_from([0, 8, 512]),
+    batch_epoch=st.sampled_from([64, 256]),
+    event_leap=st.booleans(),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_packed_matches_legacy_property(protocol, n_exec, window, num_hot,
+                                        batch_epoch, event_leap, seed):
+    """Differential conformance: packed vs legacy over randomized
+    (protocol, lane count, window, contention, batch epoch, leap mode)
+    configurations — the full cross product the fig13 sweeps explore."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, batch_epoch=batch_epoch, seed=seed)
+    )
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    kw = dict(PROTO_KW[protocol])
+    kw["n_exec"] = n_exec
+    if protocol in ("orthrus", "dgcc", "quecc"):
+        kw["window"] = window
+    results = []
+    for layout in ("packed", "legacy"):
+        cfg = EngineConfig(protocol=protocol, event_leap=event_leap,
+                           state_layout=layout, **kw, **sim)
+        results.append(run_simulation(cfg, wl))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+
+
+def test_slot_col_accessors():
+    """The packed layout's named-column accessors read the same values
+    the engine carries (spot-check: a fresh state has every tid == -1
+    and every phase == EMPTY)."""
+    import jax.numpy as jnp
+
+    from repro.core import engine as engine_lib
+
+    cfg = EngineConfig(protocol="deadlock_free", n_exec=4, **FAST)
+    state = engine_lib._state0(cfg, num_records=16, T=cfg.n_slots, K=3)
+    assert state["slots"].shape == (engine_lib.SLOT_F, cfg.n_slots)
+    assert jnp.all(engine_lib.slot_col(state, engine_lib.C_TID) == -1)
+    assert jnp.all(
+        engine_lib.slot_col(state, engine_lib.C_PHASE) == engine_lib.EMPTY
+    )
+    assert not bool(
+        engine_lib.slot_col_bool(state, engine_lib.C_COMMITTING).any()
+    )
+    assert len(engine_lib.SLOT_COLS) == engine_lib.SLOT_F
+    assert len(engine_lib.BATCH_SLOT_COLS) == engine_lib.BATCH_SLOT_F
 
 
 def test_run_cells_vmapped_matches_serial():

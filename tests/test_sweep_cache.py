@@ -1,0 +1,153 @@
+"""Compile-cache keying and benchmark-cache invalidation.
+
+The engine's speed rests on two caches with sharply different contracts:
+
+  * ``repro.core.sweep._RUNNER_CACHE`` — compiled round-chunk runners
+    keyed on ``(EngineConfig.trace_statics(), PlanMeta, batched)``.
+    Every config field that changes the traced computation MUST be part
+    of the key (a false hit would silently simulate the wrong
+    protocol); host-loop budget fields MUST NOT be (a false miss would
+    recompile per cell and destroy sweep performance).
+  * ``benchmarks/common.py`` result caches — keyed on a hash that
+    includes ``ENGINE_VERSION``, so bumping the version (any
+    result-visible engine change, e.g. the packed-state rewrite) makes
+    every stale cached result unreachable instead of mixing old and new
+    numbers.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import sweep
+from repro.core.engine import EngineConfig, PlanMeta
+
+BASE = dict(protocol="twopl_waitdie", n_exec=4)
+
+# EngineConfig fields that only drive the host loop (chunking and
+# termination): they are traced arguments, not compile-time statics.
+HOST_LOOP_FIELDS = {
+    "max_rounds", "warmup_rounds", "chunk_rounds", "target_commits",
+}
+
+# one representative alternative value per traced field
+TRACED_VARIANTS = {
+    "protocol": "deadlock_free",
+    "n_exec": 5,
+    "n_cc": 2,
+    "window": 3,
+    "split_index": True,
+    "event_leap": False,
+    "state_layout": "legacy",
+    "cost": dataclasses.replace(
+        EngineConfig(**BASE).cost, lock_op_cycles=999
+    ),
+}
+
+
+def test_trace_statics_covers_every_traced_field():
+    """Every EngineConfig field is either a host-loop concern or part of
+    trace_statics() — a new field that is neither fails here, which is
+    the reminder to classify it before it causes silent cache hits."""
+    cfg = EngineConfig(**BASE)
+    base_key = cfg.trace_statics()
+    for f in dataclasses.fields(EngineConfig):
+        if f.name in HOST_LOOP_FIELDS:
+            continue
+        assert f.name in TRACED_VARIANTS, (
+            f"EngineConfig.{f.name}: new field — add it to trace_statics() "
+            "and TRACED_VARIANTS, or to HOST_LOOP_FIELDS if the traced "
+            "computation provably does not depend on it"
+        )
+        varied = dataclasses.replace(cfg, **{f.name: TRACED_VARIANTS[f.name]})
+        assert varied.trace_statics() != base_key, (
+            f"EngineConfig.{f.name} changed but trace_statics() did not: "
+            "two different computations would share one compiled runner"
+        )
+
+
+def test_host_loop_fields_share_a_runner():
+    cfg = EngineConfig(**BASE)
+    for f, v in (("max_rounds", 123), ("warmup_rounds", 7),
+                 ("chunk_rounds", 11), ("target_commits", 1)):
+        assert dataclasses.replace(
+            cfg, **{f: v}
+        ).trace_statics() == cfg.trace_statics()
+
+
+def test_runner_cache_misses_on_statics_and_shapes():
+    """get_runner is lazy (jit compiles on first call), so cache-entry
+    accounting is cheap to test exhaustively."""
+    meta = PlanMeta(n_txns=8, max_keys=2, num_records=16)
+    before = sweep.runner_cache_info()["entries"]
+    cfg = EngineConfig(**BASE)
+    sweep.get_runner(cfg, meta, batched=False)
+    assert sweep.runner_cache_info()["entries"] == before + 1
+    # same key: hit
+    sweep.get_runner(EngineConfig(**BASE), meta, batched=False)
+    assert sweep.runner_cache_info()["entries"] == before + 1
+    # any traced-field change: miss
+    n = before + 1
+    for f, v in TRACED_VARIANTS.items():
+        varied = dataclasses.replace(EngineConfig(**BASE), **{f: v})
+        sweep.get_runner(varied, meta, batched=False)
+        n += 1
+        assert sweep.runner_cache_info()["entries"] == n, f
+    # any PlanMeta shape change: miss
+    for shape_kw in (dict(n_txns=9), dict(max_keys=3), dict(num_records=32),
+                     dict(lane_cols=4), dict(pred_width=2),
+                     dict(num_batches=2)):
+        sweep.get_runner(
+            cfg, dataclasses.replace(meta, **shape_kw), batched=False
+        )
+        n += 1
+        assert sweep.runner_cache_info()["entries"] == n, shape_kw
+    # batched flag: its own entry
+    sweep.get_runner(cfg, meta, batched=True)
+    assert sweep.runner_cache_info()["entries"] == n + 1
+    # host-loop budget: hit
+    sweep.get_runner(
+        dataclasses.replace(cfg, max_rounds=99, target_commits=1),
+        meta, batched=True,
+    )
+    assert sweep.runner_cache_info()["entries"] == n + 1
+
+
+def test_engine_version_invalidates_bench_cache(monkeypatch):
+    """Bumping ENGINE_VERSION must change every benchmark cache key, so
+    BENCH_engine.json-adjacent cached cells from an older engine can
+    never be reread as current results."""
+    from benchmarks import common
+    from repro.core.workloads import WorkloadConfig
+
+    wl = WorkloadConfig(kind="ycsb", num_txns=64, num_records=1000)
+    eng = dict(protocol="deadlock_free", n_exec=4)
+    h1 = common._cell_hash(wl, eng)
+    assert h1 == common._cell_hash(wl, dict(eng))  # deterministic
+    monkeypatch.setattr(sweep, "ENGINE_VERSION", "0-test-bump")
+    h2 = common._cell_hash(wl, eng)
+    assert h1 != h2
+    # the key also separates workload and engine parameters
+    monkeypatch.undo()
+    assert common._cell_hash(
+        dataclasses.replace(wl, num_hot=7), eng
+    ) != h1
+    assert common._cell_hash(wl, dict(eng, n_exec=5)) != h1
+
+
+def test_bench_engine_version_tag_matches_current():
+    """The committed perf baseline must carry the current
+    ENGINE_VERSION: a bump without re-recording the CI baseline would
+    gate new-engine rounds/s against stale numbers."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "BENCH_engine.json")
+    if not os.path.exists(path):
+        pytest.skip("no recorded benchmark artifact")
+    with open(path) as f:
+        data = json.load(f)
+    assert data.get("engine_version") == sweep.ENGINE_VERSION
+    for name, cell in data.get("ci_baseline", {}).items():
+        assert cell.get("engine_version") == sweep.ENGINE_VERSION, name
