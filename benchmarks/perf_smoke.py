@@ -32,10 +32,16 @@ REGRESSION_FACTOR = 3.0
 
 YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0,
             num_hot=64)
+# fragment-granular smoke: the fig14 acceptance regime (every txn
+# multi-partition, hot set shared across lanes)
+YCSB_MP = dict(YCSB, num_hot=16, multipart_frac=1.0, num_partitions=16)
 SMOKE_CELLS = [
     ("smoke_twopl_waitdie", YCSB, dict(protocol="twopl_waitdie", n_exec=40)),
     ("smoke_deadlock_free", YCSB, dict(protocol="deadlock_free", n_exec=40)),
     ("smoke_dgcc", YCSB, dict(protocol="dgcc", n_cc=8, n_exec=32, window=4)),
+    ("smoke_quecc_frag", YCSB_MP,
+     dict(protocol="quecc", n_cc=8, n_exec=32, window=4,
+          fragment_exec=True)),
 ]
 
 
@@ -61,9 +67,10 @@ def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
             aborts_deadlock=res.aborts_deadlock,
             engine_version=ENGINE_VERSION,
         )
-        if compare_legacy:
+        if compare_legacy and not eng_kw.get("fragment_exec"):
             # warm-vs-warm: both layouts have compiled runners cached, so
-            # the ratio is pure per-round step cost
+            # the ratio is pure per-round step cost (fragment-mode cells
+            # are skipped: the frozen legacy engine predates fragments)
             t0 = time.time()
             run_simulation(cfg, wl)
             pwall = max(time.time() - t0, 1e-9)
@@ -83,7 +90,7 @@ def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
             f"rounds/s={out[name]['sim_rounds_per_s']:9.1f} "
             f"steps={out[name]['steps_executed']}/{out[name]['rounds_total']}"
             + (f" packed_vs_legacy={out[name]['packed_vs_legacy']:.2f}x"
-               if compare_legacy else "")
+               if "packed_vs_legacy" in out[name] else "")
         )
     return out
 

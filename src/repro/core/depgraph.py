@@ -39,6 +39,21 @@ QueCC edges (``queue_edges``) are coarser: each transaction depends on its
 immediate predecessor in every per-lane queue it touches (lane of key k =
 ``part(k) % n_lanes``). Per-lane chains are total orders, so the same
 transitive argument applies at lane granularity.
+
+Fragment granularity (``fragments=True``): a *fragment* is one
+transaction's work on one planner lane — the unit QueCC actually chains
+through its per-lane queues and DGCC's record-action graph decomposes
+into. The schedule then additionally carries a fragment table (owning
+txn, lane, key count, wavefront level) and a fragment-level dependency
+graph, with a per-txn fragment count for the engine's
+commit-when-all-fragments-done join. Every key lives on exactly one
+lane, so record-level conflict edges always connect fragments of the
+*same* lane, and QueCC queue chains are fragment chains by construction
+— a multi-partition transaction's fragments have independent
+predecessor sets and can run in different rounds on different exec
+lanes. Fragments are numbered in admission order (batch-major,
+level-major, txn-minor), which guarantees every admitted fragment's
+predecessors were admitted before it.
 """
 
 from __future__ import annotations
@@ -77,6 +92,23 @@ class BatchSchedule:
     queue_txn: np.ndarray | None = None  # int32[Q]
     queue_lane: np.ndarray | None = None  # int32[Q]
     queue_pos: np.ndarray | None = None  # int32[Q] 0-based within the queue
+    # Fragment granularity (``fragments=True``): fragment f is txn
+    # ``frag_txn[f]``'s work on lane ``frag_lane[f]``; ids are admission
+    # order — sorted by (batch, level, txn, lane), so predecessors
+    # always precede their dependents.
+    frag_txn: np.ndarray | None = None  # int32[F]
+    frag_lane: np.ndarray | None = None  # int32[F]
+    frag_nkeys: np.ndarray | None = None  # int32[F] planned key-ops
+    frag_first: np.ndarray | None = None  # bool[F] holds txn's first key
+    frag_level: np.ndarray | None = None  # int32[F] wavefront level
+    frag_npred: np.ndarray | None = None  # int32[F]
+    frag_edge_dst: np.ndarray | None = None  # int32[EF], sorted ascending
+    frag_edge_src: np.ndarray | None = None  # int32[EF]
+    frag_pred_pad: np.ndarray | None = None  # int32[F, PF], -1 padded
+    txn_nfrags: np.ndarray | None = None  # int32[N] commit-barrier width
+    batch_fstart: np.ndarray | None = None  # int32[NB] first fragment
+    batch_fsize: np.ndarray | None = None  # int32[NB]
+    lvl0_fcount: np.ndarray | None = None  # int32[NB] level-0 prefix len
 
     @property
     def num_batches(self) -> int:
@@ -85,6 +117,11 @@ class BatchSchedule:
     @property
     def n_levels(self) -> int:
         return int(self.level.max()) + 1 if self.n_txns else 0
+
+    @property
+    def n_frags(self) -> int:
+        assert self.frag_txn is not None, "schedule built without fragments"
+        return len(self.frag_txn)
 
 
 # ---------------------------------------------------------------------------
@@ -136,38 +173,59 @@ def _dedupe_edges(dst: np.ndarray, src: np.ndarray):
 # ---------------------------------------------------------------------------
 # edge builders
 # ---------------------------------------------------------------------------
-def _flatten_ops(keys, modes, nkeys):
-    """Valid (txn, key, mode) triples from padded [N, K] arrays."""
+def _flatten_ops(keys, nkeys, *cols):
+    """Flatten padded [N, K] access arrays to the valid entries.
+
+    Returns ``(txn, key, *cols_flattened)`` — one row per planned
+    access, every extra ``cols`` array flattened by the same mask.
+    """
     n, k = keys.shape
     valid = (np.arange(k)[None, :] < nkeys[:, None]) & (
         keys != int(KEY_SENTINEL)
     )
     txn = np.broadcast_to(np.arange(n, dtype=_I64)[:, None], (n, k))[valid]
-    return txn, keys[valid].astype(_I64), modes[valid]
+    return (txn, keys[valid].astype(_I64)) + tuple(c[valid] for c in cols)
 
 
-def conflict_edges(keys, modes, nkeys, batch_of):
-    """DGCC record-level conflict edges (dst depends on src; src < dst)."""
-    txn, key, mode = _flatten_ops(keys, modes, nkeys)
-    batch = batch_of[txn].astype(_I64)
-    order = np.lexsort((txn, key, batch))
-    txn_s, key_s, batch_s = txn[order], key[order], batch[order]
+def _lane_of(part_flat, n_lanes: int):
+    """Planner lane of an access: ``part % n_lanes``. The single
+    definition of fragment/queue identity — ``queue_edges`` chains and
+    ``build_fragments`` partitions by exactly this value."""
+    return part_flat.astype(_I64) % max(n_lanes, 1)
+
+
+def _conflict_chain_edges(owner, key, mode, batch):
+    """Last-writer-chain edges between access *owners* inside a batch.
+
+    ``owner`` is the schedulable unit of each flattened access — txn id
+    for whole-transaction granularity, fragment id for fragment
+    granularity. Owner ids must ascend with the planner's serial order
+    on every key (true for txns, and for fragments because a key lives
+    on exactly one lane and fragment ids are txn-major)."""
+    order = np.lexsort((owner, key, batch))
+    own_s, key_s, batch_s = owner[order], key[order], batch[order]
     is_write = mode[order] == MODE_WRITE
     seg_start = np.concatenate(
         [[True], (key_s[1:] != key_s[:-1]) | (batch_s[1:] != batch_s[:-1])]
     )
     # RAW / WAW: access -> last write before it on the key.
     lastw = _seg_last_true_before(seg_start, is_write)
-    e1_dst = np.where(lastw >= 0, txn_s, -1)
-    e1_src = np.where(lastw >= 0, txn_s[np.maximum(lastw, 0)], -1)
+    e1_dst = np.where(lastw >= 0, own_s, -1)
+    e1_src = np.where(lastw >= 0, own_s[np.maximum(lastw, 0)], -1)
     # WAR: read -> next write after it on the key (that write depends on us).
     nextw = _seg_next_true_after(seg_start, is_write)
     war = (nextw >= 0) & ~is_write
-    e2_dst = np.where(war, txn_s[np.maximum(nextw, 0)], -1)
-    e2_src = np.where(war, txn_s, -1)
+    e2_dst = np.where(war, own_s[np.maximum(nextw, 0)], -1)
+    e2_src = np.where(war, own_s, -1)
     return _dedupe_edges(
         np.concatenate([e1_dst, e2_dst]), np.concatenate([e1_src, e2_src])
     )
+
+
+def conflict_edges(keys, modes, nkeys, batch_of):
+    """DGCC record-level conflict edges (dst depends on src; src < dst)."""
+    txn, key, mode = _flatten_ops(keys, nkeys, modes)
+    return _conflict_chain_edges(txn, key, mode, batch_of[txn].astype(_I64))
 
 
 def queue_edges(keys, part, nkeys, batch_of, n_lanes: int):
@@ -177,12 +235,8 @@ def queue_edges(keys, part, nkeys, batch_of, n_lanes: int):
     transaction depends on the transaction immediately before it in every
     per-(batch, lane) execution queue it belongs to.
     """
-    n, k = keys.shape
-    valid = (np.arange(k)[None, :] < nkeys[:, None]) & (
-        keys != int(KEY_SENTINEL)
-    )
-    txn = np.broadcast_to(np.arange(n, dtype=_I64)[:, None], (n, k))[valid]
-    lane = (part[valid].astype(_I64)) % max(n_lanes, 1)
+    txn, _key, lane_part = _flatten_ops(keys, nkeys, part)
+    lane = _lane_of(lane_part, n_lanes)
     # dedupe (txn, lane) memberships
     packed = np.unique(txn << 32 | lane)
     txn_u = (packed >> 32).astype(_I64)
@@ -208,6 +262,117 @@ def queue_edges(keys, part, nkeys, batch_of, n_lanes: int):
         txn_s.astype(np.int32),
         lane_s.astype(np.int32),
         pos.astype(np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fragments: (txn, lane) units + fragment-level dependency graph
+# ---------------------------------------------------------------------------
+def build_fragments(
+    keys, modes, part, nkeys, batch_of, n_batches: int, n_lanes: int,
+    kind: str,
+) -> dict:
+    """Fragment table + fragment-granular dependency graph.
+
+    A fragment is one transaction's planned work on one lane
+    (``lane = part % n_lanes``). Returned fragment ids are *admission
+    order* — sorted by (batch, level, txn, lane) — so a fragment's
+    predecessors always carry smaller ids (levels strictly ascend along
+    edges), which the engine relies on: an admitted fragment's
+    predecessors are already admitted or committed, and the pipelined
+    level-0 prefix of each batch is contiguous.
+
+    kind = 'conflict': record-level last-writer chains between the
+    fragments owning the accesses (every key lives on one lane, so
+    these edges never cross lanes). kind = 'lane': QueCC queue chains —
+    each fragment depends on the previous fragment in its per-(batch,
+    lane) execution queue.
+    """
+    n = keys.shape[0]
+    txn, key, mode, lane_part = _flatten_ops(keys, nkeys, modes, part)
+    lane = _lane_of(lane_part, n_lanes)
+    packed = np.unique(txn << 32 | lane)
+    # every txn owns >= 1 fragment (the commit barrier needs a non-zero
+    # fragment count): txns with an empty access set get one on lane 0
+    nfrags = np.bincount(packed >> 32, minlength=n)
+    empty_txns = np.where(nfrags == 0)[0].astype(_I64)
+    if len(empty_txns):
+        packed = np.unique(np.concatenate([packed, empty_txns << 32]))
+    ftxn = (packed >> 32).astype(np.int64)
+    flane = (packed & 0xFFFFFFFF).astype(np.int64)
+    F = len(packed)
+    facc = np.searchsorted(packed, txn << 32 | lane)  # fragment per access
+    fnkeys = np.bincount(facc, minlength=F)
+    txn_nfrags = np.bincount(ftxn, minlength=n)
+    # the fragment holding each txn's first planned key carries the
+    # txn's non-keyed executable ops (e.g. TPC-C Item reads)
+    ffirst = np.zeros(F, bool)
+    if len(txn):
+        _u, first_idx = np.unique(txn, return_index=True)
+        ffirst[facc[first_idx]] = True
+    if len(empty_txns):
+        ffirst[np.searchsorted(packed, empty_txns << 32)] = True
+    fbatch = batch_of[ftxn].astype(_I64)
+
+    if kind == "conflict":
+        e_dst, e_src = _conflict_chain_edges(
+            facc.astype(_I64), key, mode, batch_of[txn].astype(_I64)
+        )
+    elif kind == "lane":
+        # queue chain: previous fragment in the (batch, lane) queue.
+        # Fragment ids are txn-major, so plain id order is queue order.
+        # Placeholder fragments of empty txns never enter a queue (they
+        # run immediately, commit-only).
+        rid = np.where(fnkeys > 0)[0].astype(_I64)
+        order = np.lexsort((ftxn[rid], flane[rid], fbatch[rid]))
+        f_s = rid[order]
+        if len(f_s):
+            lane_s, batch_s = flane[f_s], fbatch[f_s]
+            seg_start = np.concatenate(
+                [[True],
+                 (lane_s[1:] != lane_s[:-1]) | (batch_s[1:] != batch_s[:-1])]
+            )
+            prev = np.where(seg_start, -1, np.concatenate([[-1], f_s[:-1]]))
+            e_dst, e_src = _dedupe_edges(
+                np.where(prev >= 0, f_s, -1), prev
+            )
+        else:
+            e_dst = e_src = np.zeros(0, np.int32)
+    else:
+        raise ValueError(f"unknown schedule kind: {kind}")
+
+    level = wavefront_levels(F, e_dst, e_src)
+    # admission order: batch-major, level-major, txn-minor
+    perm = np.lexsort((flane, ftxn, level, fbatch))
+    newid = np.empty(F, _I64)
+    newid[perm] = np.arange(F, dtype=_I64)
+    e_dst, e_src = _dedupe_edges(newid[e_dst], newid[e_src])
+    pred_pad, npred = _pred_pad(F, e_dst, e_src)
+    fbatch_s = fbatch[perm]
+    level_s = level[perm].astype(np.int32)
+    batch_fstart = np.searchsorted(fbatch_s, np.arange(n_batches)).astype(
+        np.int32
+    )
+    batch_fsize = np.diff(np.concatenate([batch_fstart, [F]])).astype(
+        np.int32
+    )
+    lvl0_fcount = np.bincount(
+        fbatch_s[level_s == 0], minlength=n_batches
+    ).astype(np.int32)
+    return dict(
+        frag_txn=ftxn[perm].astype(np.int32),
+        frag_lane=flane[perm].astype(np.int32),
+        frag_nkeys=fnkeys[perm].astype(np.int32),
+        frag_first=ffirst[perm],
+        frag_level=level_s,
+        frag_npred=npred,
+        frag_edge_dst=e_dst,
+        frag_edge_src=e_src,
+        frag_pred_pad=pred_pad,
+        txn_nfrags=txn_nfrags.astype(np.int32),
+        batch_fstart=batch_fstart,
+        batch_fsize=batch_fsize,
+        lvl0_fcount=lvl0_fcount,
     )
 
 
@@ -279,11 +444,15 @@ def build_schedule(
     *,
     kind: str = "conflict",
     n_lanes: int = 1,
+    fragments: bool = False,
 ) -> BatchSchedule:
     """Plan a workload into batches and build its dependency schedule.
 
     kind = 'conflict' (DGCC record-level graph) or 'lane' (QueCC per-lane
-    queues over ``n_lanes`` planner lanes).
+    queues over ``n_lanes`` planner lanes). ``fragments=True``
+    additionally builds the fragment table and fragment-granular graph
+    (see :func:`build_fragments`) for the engine's per-lane fragment
+    execution mode.
     """
     n = keys.shape[0]
     b = max(int(batch_epoch), 1)
@@ -307,7 +476,15 @@ def build_schedule(
 
     level = wavefront_levels(n, edge_dst, edge_src)
     pred_pad, npred = _pred_pad(n, edge_dst, edge_src)
+    frag_kw = (
+        build_fragments(
+            keys, modes, part, nkeys, batch_of, nb, n_lanes, kind
+        )
+        if fragments
+        else {}
+    )
     return BatchSchedule(
+        **frag_kw,
         n_txns=n,
         batch_epoch=b,
         batch_of=batch_of,

@@ -135,8 +135,12 @@ SLOT_COLS = (
     "release_at", "waited", "dl_debt",
 )
 
-# Batch-planned engine: a narrower [T, BATCH_SLOT_F] matrix (no lock
-# table, no deadlock/retry state).
+# Batch-planned engine: a narrower [BATCH_SLOT_F, T] matrix (no lock
+# table, no deadlock/retry state). BC_WIDX is the slot's *schedulable
+# unit*: a workload txn index in whole-transaction mode, a fragment
+# index under ``EngineConfig.fragment_exec``. BC_FTXN is the owning
+# transaction either way (== BC_WIDX in txn mode) — the commit barrier
+# joins a transaction's fragments through it.
 (
     BC_TID,
     BC_WIDX,
@@ -145,10 +149,12 @@ SLOT_COLS = (
     BC_BUSY_UNTIL,
     BC_BUSY_KIND,
     BC_MSG_ARRIVE,
-) = range(7)
-BATCH_SLOT_F = 7
+    BC_FTXN,
+) = range(8)
+BATCH_SLOT_F = 8
 BATCH_SLOT_COLS = (
     "tid", "widx", "ts", "phase", "busy_until", "busy_kind", "msg_arrive",
+    "ftxn",
 )
 
 
@@ -202,6 +208,17 @@ class EngineConfig:
     # (repro.core.engine_legacy), kept only as the bit-exactness oracle
     # for the differential conformance tests. Results are identical.
     state_layout: str = "packed"
+    # Fragment-granular batch execution (dgcc / quecc only): schedule
+    # per-(txn, lane) *fragments* instead of whole transactions; a txn
+    # commits when all its fragments are done (QueCC's execution model).
+    # Off by default — txn-granular results are bit-identical to the
+    # pre-fragment engine (golden-trace enforced).
+    fragment_exec: bool = False
+    # Inter-batch pipelined admission (DGCC §5), requires fragment_exec:
+    # level-0 fragments of batch b+1 become admission-eligible while
+    # batch b drains (once b+1's plan is ready), instead of waiting for
+    # the full batch barrier.
+    inter_batch_pipeline: bool = False
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -215,6 +232,19 @@ class EngineConfig:
             assert self.n_cc >= 1
         if self.protocol == "quecc":
             assert self.n_cc >= 1, "quecc needs n_cc planner/queue lanes"
+        if self.fragment_exec or self.inter_batch_pipeline:
+            assert self.is_batch_planned, (
+                "fragment execution / inter-batch pipelining are "
+                "batch-planned (dgcc/quecc) features"
+            )
+            assert self.state_layout == "packed", (
+                "the frozen legacy engine predates fragment execution"
+            )
+        if self.inter_batch_pipeline:
+            assert self.fragment_exec, (
+                "inter-batch pipelining admits level-0 *fragments*: "
+                "enable fragment_exec"
+            )
 
     @property
     def n_slots(self) -> int:
@@ -255,6 +285,8 @@ class EngineConfig:
             self.split_index,
             self.event_leap,
             self.state_layout,
+            self.fragment_exec,
+            self.inter_batch_pipeline,
             self.cost,
         )
 
@@ -272,6 +304,8 @@ class PlanMeta:
     lane_cols: int = 0  # H-Store lane_stream width; 0 = absent
     pred_width: int = 0  # batch schedule: pred_pad columns
     num_batches: int = 0  # batch schedule: NB
+    n_frags: int = 0  # fragment mode: total fragments F
+    frag_pred_width: int = 0  # fragment mode: frag_pred_pad columns
 
 
 @dataclasses.dataclass
@@ -292,12 +326,19 @@ def plan_meta(cfg: EngineConfig, plan: planner_lib.Plan) -> PlanMeta:
     if cfg.is_batch_planned:
         sched = plan.sched
         assert sched is not None, "batch protocols require a planned schedule"
+        frag_kw = {}
+        if cfg.fragment_exec:
+            frag_kw = dict(
+                n_frags=sched.n_frags,
+                frag_pred_width=sched.frag_pred_pad.shape[1],
+            )
         return PlanMeta(
             n_txns=sched.n_txns,
             max_keys=plan.keys.shape[1],
             num_records=plan.num_records,
             pred_width=plan.sched.pred_pad.shape[1],
             num_batches=sched.num_batches,
+            **frag_kw,
         )
     return PlanMeta(
         n_txns=plan.keys.shape[0],
@@ -323,7 +364,7 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
         sched = plan.sched
         npred = np.asarray(sched.npred, np.int32)
         exec_ops = np.asarray(plan.exec_ops, np.int32)
-        return dict(
+        p = dict(
             exec_ops=exec_ops,
             npred=npred,
             txn_ne=np.stack([npred, exec_ops], axis=1),
@@ -333,6 +374,29 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
             batch_size=np.asarray(sched.batch_size, np.int32),
             plan_rounds=_batch_plan_rounds(cfg, plan),
         )
+        if cfg.fragment_exec:
+            # per-fragment executable ops: the fragment's own key-ops,
+            # plus the txn's non-keyed ops (e.g. TPC-C Item reads) on
+            # the fragment holding the txn's first planned key
+            frag_txn = np.asarray(sched.frag_txn, np.int64)
+            extra = (exec_ops - np.asarray(plan.nkeys, np.int32))[frag_txn]
+            frag_exec = np.asarray(sched.frag_nkeys, np.int32) + np.where(
+                sched.frag_first, np.maximum(extra, 0), 0
+            ).astype(np.int32)
+            frag_npred = np.asarray(sched.frag_npred, np.int32)
+            p.update(
+                frag_ne=np.stack([frag_npred, frag_exec], axis=1),
+                frag_pred_pad=np.asarray(sched.frag_pred_pad, np.int32),
+                frag_txn=frag_txn.astype(np.int32),
+                frag_batch=np.asarray(
+                    sched.batch_of[frag_txn], np.int32
+                ),
+                txn_nfrags=np.asarray(sched.txn_nfrags, np.int32),
+                batch_fstart=np.asarray(sched.batch_fstart, np.int32),
+                batch_fsize=np.asarray(sched.batch_fsize, np.int32),
+                lvl0_fcount=np.asarray(sched.lvl0_fcount, np.int32),
+            )
+        return p
     keys = np.asarray(plan.keys, np.int32)
     modes = np.asarray(plan.modes, np.int32)
     part = np.asarray(plan.part, np.int32)
@@ -462,7 +526,8 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         "dreadlocks": cm.dreadlocks_spin_cycles,
     }.get(dl, 0)
 
-    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+    def rounds_of(cyc):
+        return (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
 
     def step(p, s, r_end):
         r = s["r"]
@@ -1208,7 +1273,7 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
     i32 = jnp.int32
     sched = plan.sched
     N = sched.n_txns
-    return dict(
+    s = dict(
         r=jnp.zeros((), i32),
         next_txn=jnp.zeros((), i32),
         cur_batch=jnp.zeros((), i32),
@@ -1225,6 +1290,20 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         cat=jnp.zeros((NCAT,), i32),
         steps=jnp.zeros((), i32),
     )
+    if cfg.fragment_exec:
+        # done flags live at fragment granularity; the commit barrier
+        # counts down each txn's outstanding fragments
+        s["done"] = jnp.zeros((sched.n_frags,), jnp.bool_)
+        s["txn_left"] = jnp.asarray(sched.txn_nfrags, i32)
+    if cfg.inter_batch_pipeline and sched.num_batches > 1:
+        # cursor into the *next* batch's level-0 fragment prefix, plus
+        # per-batch accounting of the overlap (Fig-10 split: how much
+        # admission/commit traffic ran ahead of the batch barrier)
+        s["pbpos"] = jnp.asarray(int(sched.batch_fstart[1]), i32)
+        s["pipe_com"] = jnp.zeros((), i32)  # next-batch commits pending
+        s["pipe_adm"] = jnp.zeros((), i32)  # cumulative early admissions
+        s["pipe_commits"] = jnp.zeros((), i32)  # cumulative early commits
+    return s
 
 
 def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
@@ -1233,34 +1312,64 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
     Returns ``step(p, s, r_end)`` with the same contract as
     :func:`make_step`. The round loop performs only (a) batch-boundary
-    bookkeeping, (b) admission of the current batch's transactions to
-    exec-lane slots, and (c) the wavefront-eligibility check "all planned
-    predecessors committed" — the dense-gather formulation of the
-    ``dep_wavefront`` kernel contract (equivalence is property-tested).
-    There is no lock table, no deadlock logic, and no abort path.
-    Per-slot scalars use the packed [BATCH_SLOT_F, T] matrix layout.
+    bookkeeping, (b) admission of the current batch's schedulable units
+    to exec-lane slots, and (c) the wavefront-eligibility check "all
+    planned predecessors committed" — the dense-gather formulation of
+    the ``dep_wavefront`` kernel contract (equivalence is
+    property-tested). There is no lock table, no deadlock logic, and no
+    abort path. Per-slot scalars use the packed [BATCH_SLOT_F, T]
+    matrix layout.
+
+    The schedulable unit is a whole transaction by default, or a
+    per-(txn, lane) *fragment* under ``cfg.fragment_exec``: slots then
+    track fragments (BC_WIDX = fragment id, BC_FTXN = owning txn), the
+    readiness check runs over the fragment-granular graph, and a txn
+    commits when its last fragment finishes (the ``txn_left`` barrier
+    counts down) — so a multi-partition transaction's per-lane work is
+    no longer serialized behind one hot lane. With
+    ``cfg.inter_batch_pipeline`` on top, level-0 fragments of batch b+1
+    are admitted while batch b drains (DGCC §5), once b+1's plan is
+    ready; ``pipe_adm`` / ``pipe_commits`` count the traffic that ran
+    ahead of the barrier (the per-batch accounting split).
     """
     cm = cfg.cost
     T = cfg.n_slots
     N = meta.n_txns
     W = cfg.window
     NB = meta.num_batches
+    frag = cfg.fragment_exec
+    F = meta.n_frags
+    # one batch cannot pipeline into itself (nothing to overlap)
+    pipe = cfg.inter_batch_pipeline and NB > 1
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
+    slot_ids = jnp.arange(T, dtype=jnp.int32)
     shared_index = not cfg.split_index
     exec_cycles_per_op = cm.exec_op_cycles + (
         cm.shared_index_penalty_cycles if shared_index else 0
     )
-    rounds_of = lambda cyc: (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
+    def rounds_of(cyc):
+        return (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
     exec_rounds_one = rounds_of(exec_cycles_per_op)
     imax = jnp.iinfo(jnp.int32).max
 
     def step(p, s, r_end):
         r = s["r"]
-        ne_all = p["txn_ne"]  # [N, 2] = (npred, exec_ops)
-        pred_pad = p["pred_pad"]  # [N, P]
-        batch_of = p["batch_of"]  # [N]
-        bstart = p["batch_start"]  # [NB]
+        if frag:
+            ne_all = p["frag_ne"]  # [F, 2] = (npred, exec_ops)
+            pred_pad = p["frag_pred_pad"]  # [F, PF]
+            unit_batch = p["frag_batch"]  # [F] batch of each fragment
+            ustart = p["batch_fstart"]  # [NB] admission-unit ranges
+            usize = p["batch_fsize"]
+            NU = F
+        else:
+            ne_all = p["txn_ne"]  # [N, 2] = (npred, exec_ops)
+            pred_pad = p["pred_pad"]  # [N, P]
+            unit_batch = p["batch_of"]
+            ustart = p["batch_start"]
+            usize = p["batch_size"]
+            NU = N
+        batch_of = p["batch_of"]  # [N] txn-level (commit barrier)
         bsize = p["batch_size"]
         plan_rounds = p["plan_rounds"]  # [NB]
 
@@ -1272,6 +1381,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         busy_until = sl[BC_BUSY_UNTIL]
         busy_kind = sl[BC_BUSY_KIND]
         msg_arrive = sl[BC_MSG_ARRIVE]
+        ftxn = sl[BC_FTXN]
 
         # -------------------------------------------- 1. batch rollover
         # When every transaction of the current batch has committed, open
@@ -1280,9 +1390,28 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         # batch's plan-ready round advances by its own planning span.
         adv = s["batch_left"] == 0
         new_b = jnp.where(adv, (s["cur_batch"] + 1) % NB, s["cur_batch"])
-        s["done"] = jnp.where(adv & (batch_of == new_b), False, s["done"])
-        s["bpos"] = jnp.where(adv, bstart[new_b], s["bpos"])
-        s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
+        # stale flags (the workload wraps around modulo NB) are cleared
+        # one batch ahead of admission: the incoming batch here, or the
+        # incoming *pipeline* batch when early admission is on (the new
+        # current batch's flags were cleared at the previous rollover)
+        clr_b = (new_b + 1) % NB if pipe else new_b
+        s["done"] = jnp.where(adv & (unit_batch == clr_b), False, s["done"])
+        if frag:
+            s["txn_left"] = jnp.where(
+                adv & (batch_of == clr_b), p["txn_nfrags"], s["txn_left"]
+            )
+        if pipe:
+            # admission continues where the pipelined cursor stopped;
+            # commits that ran ahead of the barrier are already paid
+            s["bpos"] = jnp.where(adv, s["pbpos"], s["bpos"])
+            s["pbpos"] = jnp.where(adv, ustart[clr_b], s["pbpos"])
+            s["batch_left"] = jnp.where(
+                adv, bsize[new_b] - s["pipe_com"], s["batch_left"]
+            )
+            s["pipe_com"] = jnp.where(adv, 0, s["pipe_com"])
+        else:
+            s["bpos"] = jnp.where(adv, ustart[new_b], s["bpos"])
+            s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
         s["plan_fin"] = jnp.where(
             adv, s["plan_fin"] + plan_rounds[new_b], s["plan_fin"]
         )
@@ -1291,18 +1420,51 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         # -------------------------------------------- 2. admission
         # Empty slots pull the next positions of the current batch, in
         # the planner's serial order, once the batch's plan is ready.
+        # Unit positions index transactions (txn mode) or fragments in
+        # admission order (fragment mode).
         empty = phase == EMPTY
         rank = jnp.cumsum(empty.astype(jnp.int32)) - 1
         pos = s["bpos"] + rank
-        bend = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
-        adm = empty & (pos < bend) & (r >= s["plan_fin"])
-        widx = jnp.where(adm, pos, widx)
+        bend = ustart[s["cur_batch"]] + usize[s["cur_batch"]]
+        if pipe:
+            # ranks beyond the current batch's remaining units spill into
+            # the next batch's level-0 fragment prefix (its plan finishes
+            # one planning span after the current one's)
+            cur_avail = jnp.maximum(bend - s["bpos"], 0)
+            adm_cur = empty & (rank < cur_avail) & (r >= s["plan_fin"])
+            nb = (s["cur_batch"] + 1) % NB
+            nlvl_end = ustart[nb] + p["lvl0_fcount"][nb]
+            plan_fin_next = s["plan_fin"] + plan_rounds[nb]
+            ppos = s["pbpos"] + (rank - cur_avail)
+            adm_pipe = (
+                empty
+                & (rank >= cur_avail)
+                & (ppos < nlvl_end)
+                & (r >= plan_fin_next)
+            )
+            adm = adm_cur | adm_pipe
+            upos = jnp.where(adm_pipe, ppos, pos)
+            s["bpos"] = s["bpos"] + adm_cur.sum(dtype=jnp.int32)
+            n_pipe = adm_pipe.sum(dtype=jnp.int32)
+            s["pbpos"] = s["pbpos"] + n_pipe
+            s["pipe_adm"] = s["pipe_adm"] + n_pipe
+            n_adm = adm.sum(dtype=jnp.int32)
+        else:
+            adm = empty & (pos < bend) & (r >= s["plan_fin"])
+            upos = pos
+            n_adm = adm.sum(dtype=jnp.int32)
+            s["bpos"] = s["bpos"] + n_adm
+        widx = jnp.where(adm, upos, widx)
         new_tid = s["next_txn"] + rank
         tid = jnp.where(adm, new_tid, tid)
         ts = jnp.where(adm, new_tid, ts)
-        n_adm = adm.sum(dtype=jnp.int32)
-        s["bpos"] = s["bpos"] + n_adm
         s["next_txn"] = s["next_txn"] + n_adm
+        if frag:
+            ftxn = jnp.where(
+                adm, p["frag_txn"][jnp.clip(widx, 0, F - 1)], ftxn
+            )
+        else:
+            ftxn = jnp.where(adm, widx, ftxn)
         # one fused [T, 2] gather: (npred, exec_ops); widx is fixed for
         # the rest of the round, so the predecessor rows gathered here
         # serve both the wavefront check and the event leap
@@ -1329,7 +1491,8 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
         # -------------------------------------------- 4. wavefront check
         # "All planned predecessors committed" — the dep_wavefront
-        # primitive in dense per-slot form.
+        # primitive in dense per-slot form (fragment-granular when
+        # cfg.fragment_exec: preds are fragments, done is [F]).
         pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
         dep_ok = pred_ok.all(axis=1)
         ready = (phase == READY) & dep_ok
@@ -1358,15 +1521,44 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
         # -------------------------------------------- 6. commit
         # No locks to release and no abort path: planned execution is
-        # conflict-free by construction.
+        # conflict-free by construction. In fragment mode a finished
+        # fragment marks itself done and decrements its transaction's
+        # outstanding-fragment count; the txn commits (once) when the
+        # count hits zero — the commit-when-all-fragments-done join.
         free = busy_until <= r
         fin = (phase == EXEC) & free
-        s["done"] = s["done"].at[jnp.where(fin, widx, N)].set(
+        s["done"] = s["done"].at[jnp.where(fin, widx, NU)].set(
             True, mode="drop"
         )
-        ncom = fin.sum(dtype=jnp.int32)
+        if frag:
+            tl = s["txn_left"].at[jnp.where(fin, ftxn, N)].add(
+                -1, mode="drop"
+            )
+            s["txn_left"] = tl
+            tl_t = tl[jnp.where(fin, ftxn, 0)]
+            com_slot = fin & (tl_t == 0)
+            # several fragments of one txn can finish in the same round
+            # on different slots: only the lowest such slot commits it
+            same = (ftxn[None, :] == ftxn[:, None]) & com_slot[None, :]
+            com_first = slot_ids == jnp.min(
+                jnp.where(same, slot_ids[None, :], T), axis=1
+            )
+            com = com_slot & com_first
+            ncom = com.sum(dtype=jnp.int32)
+            if pipe:
+                com_b = batch_of[jnp.where(com, ftxn, 0)]
+                ncom_ahead = (com & (com_b != s["cur_batch"])).sum(
+                    dtype=jnp.int32
+                )
+                s["pipe_com"] = s["pipe_com"] + ncom_ahead
+                s["pipe_commits"] = s["pipe_commits"] + ncom_ahead
+                s["batch_left"] = s["batch_left"] - (ncom - ncom_ahead)
+            else:
+                s["batch_left"] = s["batch_left"] - ncom
+        else:
+            ncom = fin.sum(dtype=jnp.int32)
+            s["batch_left"] = s["batch_left"] - ncom
         s["commits"] = s["commits"] + ncom
-        s["batch_left"] = s["batch_left"] - ncom
         phase = jnp.where(fin, EMPTY, phase)
         tid = jnp.where(fin, -1, tid)
 
@@ -1436,7 +1628,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             # admission is a scalar event: the next batch opens the round
             # after batch_left hits zero; within a batch, empty slots admit
             # once plan_fin has passed and positions remain
-            bend2 = bstart[s["cur_batch"]] + bsize[s["cur_batch"]]
+            bend2 = ustart[s["cur_batch"]] + usize[s["cur_batch"]]
             adm_evt = jnp.where(
                 s["batch_left"] == 0,
                 r + 1,
@@ -1446,6 +1638,17 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
                     imax,
                 ),
             )
+            if pipe:
+                # pipelined admission wakes when the next batch's plan
+                # lands, while level-0 fragment positions remain
+                nb2 = (s["cur_batch"] + 1) % NB
+                nlvl_end2 = ustart[nb2] + p["lvl0_fcount"][nb2]
+                pipe_evt = jnp.where(
+                    s["pbpos"] < nlvl_end2,
+                    jnp.maximum(s["plan_fin"] + plan_rounds[nb2], r + 1),
+                    imax,
+                )
+                adm_evt = jnp.minimum(adm_evt, pipe_evt)
             adm_evt = jnp.where((phase == EMPTY).any(), adm_evt, imax)
             nxt = jnp.clip(jnp.minimum(jnp.min(cand), adm_evt), r + 1, r_end)
         else:
@@ -1455,7 +1658,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         s["steps"] = s["steps"] + 1
         s["r"] = nxt
         s["slots"] = jnp.stack(
-            [tid, widx, ts, phase, busy_until, busy_kind, msg_arrive],
+            [tid, widx, ts, phase, busy_until, busy_kind, msg_arrive, ftxn],
             axis=0,
         )
         return s
@@ -1498,10 +1701,14 @@ def make_plan(cfg: EngineConfig, workload: Workload) -> planner_lib.Plan:
     elif cfg.protocol == "partitioned_store":
         plan = planner_lib.plan_partition_store(workload, cfg.n_exec)
     elif cfg.protocol == "dgcc":
-        plan = planner_lib.plan_dgcc(workload, workload.cfg.batch_epoch)
+        plan = planner_lib.plan_dgcc(
+            workload, workload.cfg.batch_epoch,
+            n_lanes=max(cfg.n_cc, 1), fragments=cfg.fragment_exec,
+        )
     elif cfg.protocol == "quecc":
         plan = planner_lib.plan_quecc(
-            workload, max(cfg.n_cc, 1), workload.cfg.batch_epoch
+            workload, max(cfg.n_cc, 1), workload.cfg.batch_epoch,
+            fragments=cfg.fragment_exec,
         )
     else:
         plan = planner_lib.plan_dynamic(workload)

@@ -74,7 +74,9 @@ class Plan:
 
 
 def _reorder(w: Workload, order: np.ndarray) -> Plan:
-    take = lambda a: np.take_along_axis(a, order, axis=1)
+    def take(a):
+        return np.take_along_axis(a, order, axis=1)
+
     return Plan(
         keys=take(w.keys),
         modes=take(w.modes),
@@ -115,7 +117,10 @@ def plan_orthrus(w: Workload, n_cc: int) -> Plan:
     return _reorder(w, order)
 
 
-def plan_dgcc(w: Workload, batch_epoch: int) -> Plan:
+def plan_dgcc(
+    w: Workload, batch_epoch: int, *, n_lanes: int = 1,
+    fragments: bool = False,
+) -> Plan:
     """DGCC: batch dependency-graph planning over the program-order batch.
 
     Execution acquires no locks, so key order inside a transaction is
@@ -124,29 +129,42 @@ def plan_dgcc(w: Workload, batch_epoch: int) -> Plan:
     (the planner must know the full access set to build the graph), but
     estimate misses never reach execution: the planner corrects the graph
     before the batch is released, so ``ollp_miss`` is cleared.
+
+    ``fragments=True`` additionally emits the fragment-granular schedule
+    (one fragment per (txn, planner lane), lane = ``part % n_lanes``):
+    the engine then schedules fragments independently and joins them at
+    commit, so one hot record serializes only the fragments that touch
+    its lane, not whole transactions.
     """
     n, k = w.keys.shape
     p = _reorder(w, np.broadcast_to(np.arange(k), (n, k)).copy())
     p.ollp_miss = np.zeros(n, bool)
     p.sched = depgraph_lib.build_schedule(
-        p.keys, p.modes, p.part, p.nkeys, batch_epoch, kind="conflict"
+        p.keys, p.modes, p.part, p.nkeys, batch_epoch, kind="conflict",
+        n_lanes=n_lanes, fragments=fragments,
     )
     return p
 
 
-def plan_quecc(w: Workload, n_cc: int, batch_epoch: int) -> Plan:
+def plan_quecc(
+    w: Workload, n_cc: int, batch_epoch: int, *, fragments: bool = False,
+) -> Plan:
     """QueCC: per-CC-lane execution queues with dependency stamps.
 
     CC lane of a key is ``part % n_cc`` (as in ORTHRUS); per batch each
-    lane's queue is totally ordered by submission order, and a transaction
-    depends on its immediate predecessor in every queue it appears in.
+    lane's queue is totally ordered by submission order. Txn granularity
+    chains whole transactions (a transaction depends on its predecessor
+    in every queue it appears in); ``fragments=True`` chains per-lane
+    *fragments* instead — the QueCC paper's actual execution model,
+    where a multi-partition transaction's per-lane work items proceed
+    independently and commit via an all-fragments-done join.
     """
     n, k = w.keys.shape
     p = _reorder(w, np.broadcast_to(np.arange(k), (n, k)).copy())
     p.ollp_miss = np.zeros(n, bool)
     p.sched = depgraph_lib.build_schedule(
         p.keys, p.modes, p.part, p.nkeys, batch_epoch,
-        kind="lane", n_lanes=n_cc,
+        kind="lane", n_lanes=n_cc, fragments=fragments,
     )
     return p
 
@@ -173,13 +191,15 @@ def plan_partition_store(w: Workload, n_partitions: int) -> Plan:
     # Route each txn to its home partition's worker lane (H-Store executes
     # a txn at the partition that owns its (first) data).
     home = pkeys[:, 0] % n_partitions
-    per_lane = [np.where(home == l)[0] for l in range(n_partitions)]
+    per_lane = [
+        np.where(home == lane)[0] for lane in range(n_partitions)
+    ]
     m = max(1, max((len(x) for x in per_lane), default=1))
     lane_stream = np.full((n_partitions, m), -1, np.int32)
-    for l, idxs in enumerate(per_lane):
+    for lane, idxs in enumerate(per_lane):
         if len(idxs):
             reps = int(np.ceil(m / len(idxs)))
-            lane_stream[l] = np.tile(idxs, reps)[:m]
+            lane_stream[lane] = np.tile(idxs, reps)[:m]
 
     return Plan(
         keys=keys,

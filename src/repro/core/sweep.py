@@ -52,6 +52,10 @@ ENGINE_VERSION = "3-packed-slots"
 _RUNNER_CACHE: dict = {}
 
 _SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps")
+# Present only in some engine states (inter-batch pipelined admission):
+# cumulative admissions/commits that ran ahead of the batch barrier —
+# the per-batch split of the Fig-10 throughput accounting.
+_OPT_SCALARS = ("pipe_adm", "pipe_commits")
 
 
 def runner_cache_info() -> dict:
@@ -105,6 +109,9 @@ def get_runner(cfg: EngineConfig, meta: PlanMeta, batched: bool):
 def _read_counters(state, n: int) -> dict[str, np.ndarray]:
     """Device -> host transfer of the small per-cell counters."""
     out = {k: np.atleast_1d(np.asarray(state[k])) for k in _SCALARS}
+    for k in _OPT_SCALARS:
+        if k in state:
+            out[k] = np.atleast_1d(np.asarray(state[k]))
     out["cat"] = np.asarray(state["cat"]).reshape(n, NCAT)
     return out
 
@@ -225,6 +232,11 @@ def simulate_plans(
                     wall_s_group=round(wall, 3),
                     group_cells=n,
                     engine_version=ENGINE_VERSION,
+                    **{
+                        k: int(snap[k]) - int(np.asarray(wsnap.get(k, 0)))
+                        for k in _OPT_SCALARS
+                        if k in snap
+                    },
                 ),
             )
         )

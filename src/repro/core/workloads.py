@@ -55,9 +55,14 @@ class WorkloadConfig:
     # 1 = 'single partition', 2 = 'dual partition', k = k partitions.
     partitions_per_txn: int | None = None
     num_partitions: int = 16
-    # Fig 7: fraction of txns forced multi-partition (2 partitions); the
-    # rest are single-partition. None disables the mix.
+    # Fig 7: fraction of txns forced multi-partition; the rest are
+    # single-partition. None disables the mix. ``multipart_span`` sets
+    # how many partitions the multi-partition txns touch (default 2, as
+    # in the paper's dual-partition placement) — the knob the
+    # fragment-granular batch engine is measured against: each spanned
+    # partition becomes an independently schedulable fragment.
     multipart_frac: float | None = None
+    multipart_span: int = 2
 
     # --- TPC-C (paper §4.4): NewOrder + Payment 50/50 ---
     num_warehouses: int = 16
@@ -108,7 +113,8 @@ def ycsb_workload(cfg: WorkloadConfig) -> Workload:
     # Choose the partition set per txn (partition of key x is x % P).
     P = cfg.num_partitions
     if cfg.multipart_frac is not None:
-        ppt = np.where(rng.random(n) < cfg.multipart_frac, 2, 1)
+        span = max(min(cfg.multipart_span, P), 1)
+        ppt = np.where(rng.random(n) < cfg.multipart_frac, span, 1)
     elif cfg.partitions_per_txn is not None:
         ppt = np.full(n, cfg.partitions_per_txn, np.int64)
     else:

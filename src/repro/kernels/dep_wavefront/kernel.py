@@ -11,6 +11,13 @@ This is the DGCC/QueCC scheduler's inner loop: on a real deployment one
 scheduler TensorCore evaluates per-round wavefront eligibility for the
 whole batch with this kernel while execution cores run transaction logic —
 the planned, queue-oriented analogue of the ORTHRUS CC-lane kernel.
+
+The scan is granularity-agnostic: edge endpoints are whatever the
+planner schedules. Since the fragment-granular engine refactor
+(``EngineConfig.fragment_exec``) the readiness scan runs over
+per-(txn, lane) *fragment* edges — ``ops.dep_wavefront_frag_ready``
+pairs it with the commit-when-all-fragments-done join that turns
+fragment completion into transaction commits.
 """
 
 from __future__ import annotations

@@ -1,10 +1,18 @@
-"""jit'd wrapper for the dep_wavefront kernel.
+"""jit'd wrappers for the dep_wavefront kernel.
 
 Handles sorting by dst, padding to the block size, the XLA-side
-segment-total broadcast, and the scatter back to per-transaction
-readiness — so callers get the engine-facing contract: given a batch's
-dependency edges and the committed bitmap, which transactions have every
+segment-total broadcast, and the scatter back to per-unit readiness —
+so callers get the engine-facing contract: given a batch's dependency
+edges and the committed bitmap, which schedulable units have every
 predecessor committed?
+
+The readiness scan is granularity-agnostic — edge endpoints are
+whatever the planner schedules. Since the fragment-granular engine
+(``EngineConfig.fragment_exec``) that unit is a per-(txn, lane)
+*fragment*: :func:`dep_wavefront_frag_ready` runs the same segmented
+scan over the fragment edge list and additionally evaluates the
+commit-when-all-fragments-done join (:func:`frag_commit_barrier`) that
+turns per-fragment completion into transaction commits.
 """
 
 from __future__ import annotations
@@ -23,14 +31,14 @@ from repro.kernels.dep_wavefront.kernel import dep_wavefront_kernel
 )
 def dep_wavefront_ready(edge_dst, edge_src, done, *, num_txns,
                         block_n=1024, interpret=True):
-    """ready[t] = every dependency edge into t has a committed source.
+    """ready[u] = every dependency edge into u has a committed source.
 
     Args:
-      edge_dst: int32[E] dependent txn per edge; KEY_SENTINEL = padding.
-      edge_src: int32[E] dependency txn per edge (ignored for padding).
-      done:     bool[N] committed bitmap over transactions.
+      edge_dst: int32[E] dependent unit per edge; KEY_SENTINEL = padding.
+      edge_src: int32[E] dependency unit per edge (ignored for padding).
+      done:     bool[N] committed bitmap over units (txns or fragments).
 
-    Returns bool[num_txns]; transactions with no edges are ready.
+    Returns bool[num_txns]; units with no edges are ready.
     """
     n = edge_dst.shape[0]
     pad = (-n) % block_n
@@ -61,3 +69,42 @@ def dep_wavefront_ready(edge_dst, edge_src, done, *, num_txns,
     return ready.at[jnp.where(active, ds, num_txns)].min(
         total_miss == 0, mode="drop"
     )
+
+
+@functools.partial(jax.jit, static_argnames=("num_txns",))
+def frag_commit_barrier(frag_done, frag_txn, *, num_txns):
+    """txn_done[t] = every fragment of transaction t is done.
+
+    The commit join of fragment-granular execution: a transaction
+    commits exactly when its per-lane fragments have all completed.
+    Transactions with no fragments are vacuously done.
+    """
+    return (
+        jax.ops.segment_min(
+            frag_done.astype(jnp.int32), frag_txn, num_segments=num_txns
+        )
+        > 0
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_frags", "num_txns", "block_n", "interpret")
+)
+def dep_wavefront_frag_ready(edge_dst, edge_src, frag_done, frag_txn, *,
+                             num_frags, num_txns, block_n=1024,
+                             interpret=True):
+    """Fragment-granular scheduler round: readiness scan + commit join.
+
+    One device-side pass evaluates, for the whole batch, which
+    fragments have every predecessor fragment committed (the same
+    segmented kernel scan as :func:`dep_wavefront_ready`, over the
+    fragment edge list) and which transactions have completed all their
+    fragments. Returns ``(frag_ready bool[num_frags],
+    txn_done bool[num_txns])``.
+    """
+    frag_ready = dep_wavefront_ready(
+        edge_dst, edge_src, frag_done, num_txns=num_frags,
+        block_n=block_n, interpret=interpret,
+    )
+    txn_done = frag_commit_barrier(frag_done, frag_txn, num_txns=num_txns)
+    return frag_ready, txn_done

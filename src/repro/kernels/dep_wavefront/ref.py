@@ -2,18 +2,20 @@
 batch's dependency edges.
 
 Contract (mirrors ``lock_grant``): entries are the batch's dependency
-edges sorted by dependent transaction (``dst``); padding entries carry
-``dst == KEY_SENTINEL``. For each edge the kernel emits prefix statistics
-of its dst segment:
+edges sorted by dependent schedulable unit (``dst``) — a transaction,
+or a per-(txn, lane) *fragment* under the fragment-granular engine;
+padding entries carry ``dst == KEY_SENTINEL``. For each edge the kernel
+emits prefix statistics of its dst segment:
 
   miss[i]  inclusive count of edges so far in the segment whose source
-           transaction has NOT committed,
+           unit has NOT committed,
   pos[i]   inclusive count of edges so far in the segment.
 
-A transaction is wavefront-eligible ("all predecessors committed ->
-ready") exactly when its segment's total miss count is zero — the
-segment-total broadcast and the scatter back to transaction ids are
-embarrassingly parallel and live in ops.py on the XLA side.
+A unit is wavefront-eligible ("all predecessors committed -> ready")
+exactly when its segment's total miss count is zero — the segment-total
+broadcast, the scatter back to unit ids, and (fragment mode) the
+per-transaction commit-barrier join are embarrassingly parallel and
+live in ops.py on the XLA side.
 """
 
 from __future__ import annotations

@@ -33,9 +33,17 @@ YCSB_HOT = dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
                 seed=0)
 TPCC_OLLP = dict(kind="tpcc", num_txns=256, num_warehouses=4,
                  ollp_miss_prob=0.5, seed=4)
+# Fragment-mode cells: every txn multi-partition so the per-lane
+# fragment split actually schedules, batch_epoch < num_txns so the
+# inter-batch pipeline has a next batch to admit from.
+YCSB_MP = dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
+               multipart_frac=1.0, num_partitions=8, batch_epoch=64,
+               seed=0)
 
 # One cell per protocol on the contended-YCSB workload, plus a TPC-C
-# cell exercising the OLLP miss-abort-retry path.
+# cell exercising the OLLP miss-abort-retry path, plus the
+# fragment-granular dgcc/quecc cells (with and without inter-batch
+# pipelined admission).
 CELLS = {
     "twopl_waitdie": (YCSB_HOT, dict(protocol="twopl_waitdie", n_exec=8)),
     "twopl_waitfor": (YCSB_HOT, dict(protocol="twopl_waitfor", n_exec=8)),
@@ -50,6 +58,15 @@ CELLS = {
     "quecc": (YCSB_HOT, dict(protocol="quecc", n_cc=4, n_exec=6, window=2)),
     "deadlock_free_tpcc_ollp": (
         TPCC_OLLP, dict(protocol="deadlock_free", n_exec=8)),
+    "dgcc_frag": (
+        YCSB_MP, dict(protocol="dgcc", n_cc=2, n_exec=6, window=2,
+                      fragment_exec=True)),
+    "quecc_frag": (
+        YCSB_MP, dict(protocol="quecc", n_cc=4, n_exec=6, window=2,
+                      fragment_exec=True)),
+    "quecc_frag_pipe": (
+        YCSB_MP, dict(protocol="quecc", n_cc=4, n_exec=6, window=2,
+                      fragment_exec=True, inter_batch_pipeline=True)),
 }
 
 

@@ -1,0 +1,129 @@
+"""The benchmark sweep driver's vmapped path (``REPRO_BENCH_VMAP=1``).
+
+``benchmarks.common.run_cells`` picks one of two group runners: the
+serial shared-jit path (CPU default) or the vmapped
+``_simulate_cells_vmapped`` path meant for accelerator backends. The
+vmapped branch used to be an untested env-var switch; these tests pin
+
+  * result identity: the vmapped runner simulates the same counters,
+    breakdowns and round counts as the serial runner,
+  * the perf-sample contract: vmapped rows carry the group-level
+    ``sim_rounds_per_s`` and are tagged ``perf_scope="vmap_group"`` so
+    the perf trajectory never mixes them with per-cell serial numbers,
+  * the ``run_cells`` switch + cache behavior under the vmapped runner.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.workloads import WorkloadConfig
+
+SIM = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+           target_commits=10**9)
+WL = dict(kind="ycsb", num_txns=256, num_records=10_000, seed=0)
+ENG = dict(protocol="deadlock_free", n_exec=8)
+
+CELLS = [
+    ("bench_vmap_h8", dict(WL, num_hot=8), dict(ENG)),
+    ("bench_vmap_h64", dict(WL, num_hot=64), dict(ENG)),
+]
+
+# every result field that must be identical between the two runners
+# (wall-clock and perf-scope fields legitimately differ)
+IDENTICAL_FIELDS = (
+    "commits", "aborts_deadlock", "aborts_ollp", "wasted_ops",
+    "throughput_txn_s", "breakdown", "rounds_total", "steps_executed",
+    "engine_version",
+)
+
+
+def test_vmapped_group_runner_matches_serial():
+    from benchmarks import common
+
+    payload = (SIM, CELLS)
+    serial = dict(common._simulate_cells(payload))
+    vmapped = dict(common._simulate_cells_vmapped(payload))
+    assert serial.keys() == vmapped.keys()
+    for name in serial:
+        for field in IDENTICAL_FIELDS:
+            assert serial[name][field] == vmapped[name][field], (
+                name, field
+            )
+        # the vmapped row carries the group-scope perf sample
+        assert vmapped[name]["perf_scope"] == "vmap_group"
+        assert vmapped[name]["sim_rounds_per_s"] > 0
+        assert "perf_scope" not in serial[name]
+
+
+def test_run_cells_honors_vmap_switch(monkeypatch, tmp_path):
+    """run_cells routed through the vmapped runner must return the same
+    rows as the serial runner, cache them, and record vmap-scoped perf
+    samples."""
+    from benchmarks import common
+
+    wl_cfgs = {
+        name: WorkloadConfig(**wl_kw) for name, wl_kw, _eng in CELLS
+    }
+    cells = [(name, wl_cfgs[name], dict(eng)) for name, _wl, eng in CELLS]
+
+    def run_with(use_vmap: bool, subdir: str):
+        monkeypatch.setattr(common, "CACHE_DIR", str(tmp_path / subdir))
+        monkeypatch.setattr(
+            common, "BENCH_ENGINE_PATH",
+            str(tmp_path / subdir / "BENCH_engine.json"),
+        )
+        monkeypatch.setattr(common, "PROCS", 1)  # in-process, no pool
+        monkeypatch.setattr(common, "USE_VMAP", use_vmap)
+        monkeypatch.setattr(common, "SIM", SIM)
+        return common.run_cells(cells)
+
+    vmapped = run_with(True, "vmap")
+    serial = run_with(False, "serial")
+    for name in (c[0] for c in CELLS):
+        assert vmapped[name]["perf_scope"] == "vmap_group"
+        for field in IDENTICAL_FIELDS:
+            assert serial[name][field] == vmapped[name][field], (
+                name, field
+            )
+
+    # rows were cached and the perf trajectory got vmap-scoped samples
+    monkeypatch.setattr(common, "CACHE_DIR", str(tmp_path / "vmap"))
+    monkeypatch.setattr(
+        common, "BENCH_ENGINE_PATH",
+        str(tmp_path / "vmap" / "BENCH_engine.json"),
+    )
+    monkeypatch.setattr(common, "USE_VMAP", True)
+    cached = common.run_cells(cells)
+    assert cached.keys() == vmapped.keys()
+    for name in cached:
+        assert cached[name]["commits"] == vmapped[name]["commits"]
+    with open(tmp_path / "vmap" / "BENCH_engine.json") as f:
+        bench = json.load(f)
+    for name in (c[0] for c in CELLS):
+        assert bench["samples"][name]["perf_scope"] == "vmap_group"
+
+
+@pytest.mark.skipif(
+    "REPRO_BENCH_VMAP" in os.environ,
+    reason="module-level switch already forced by the environment",
+)
+def test_vmap_env_switch_flips_module_state(monkeypatch):
+    """The env switch is read once at import: re-importing under
+    REPRO_BENCH_VMAP=1 must actually flip USE_VMAP, so a rename or
+    default flip cannot silently disable the vmapped path on
+    accelerator deployments."""
+    import importlib
+
+    from benchmarks import common
+
+    assert common.USE_VMAP is False  # CPU default: serial shared-jit
+    monkeypatch.setenv("REPRO_BENCH_VMAP", "1")
+    try:
+        importlib.reload(common)
+        assert common.USE_VMAP is True
+    finally:
+        monkeypatch.delenv("REPRO_BENCH_VMAP")
+        importlib.reload(common)
+    assert common.USE_VMAP is False

@@ -165,6 +165,95 @@ def test_packed_matches_legacy_property(protocol, n_exec, window, num_hot,
     assert _fingerprint(results[0]) == _fingerprint(results[1])
 
 
+FRAG_SIM = dict(max_rounds=2500, warmup_rounds=500, chunk_rounds=500,
+                target_commits=10**9)
+
+
+@pytest.fixture(scope="module")
+def ycsb_multipart():
+    # every txn spans 2 partitions: the regime where per-lane fragments
+    # differ from whole-txn scheduling
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=8, multipart_frac=1.0, num_partitions=8,
+                       batch_epoch=64, seed=0)
+    )
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("protocol", ["dgcc", "quecc"])
+def test_fragment_leap_matches_dense(ycsb_multipart, protocol, pipeline):
+    """Fragment-granular execution (and inter-batch pipelined admission)
+    must leap bit-identically to its own dense round loop."""
+    results = []
+    for leap in (True, False):
+        cfg = EngineConfig(protocol=protocol, event_leap=leap,
+                           fragment_exec=True,
+                           inter_batch_pipeline=pipeline,
+                           **PROTO_KW[protocol], **FRAG_SIM)
+        results.append(run_simulation(cfg, ycsb_multipart))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+    assert (results[0].raw.get("pipe_adm")
+            == results[1].raw.get("pipe_adm"))
+    assert (results[0].raw["steps_executed"]
+            <= results[1].raw["steps_executed"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    protocol=st.sampled_from(["dgcc", "quecc"]),
+    n_exec=st.sampled_from([2, 6, 16]),
+    window=st.sampled_from([1, 3]),
+    num_hot=st.sampled_from([0, 8, 512]),
+    batch_epoch=st.sampled_from([64, 256]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_fragment_off_matches_legacy_property(protocol, n_exec, window,
+                                              num_hot, batch_epoch, seed):
+    """The fragment-capable batch engine with ``fragment_exec=False``
+    must remain bit-identical to the frozen pre-fragment engine across
+    (protocol, lane count, window, contention, batch epoch) — the
+    refactor is opt-in, not a behavior change."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, batch_epoch=batch_epoch, seed=seed)
+    )
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    kw = dict(PROTO_KW[protocol], n_exec=n_exec, window=window)
+    results = []
+    for layout in ("packed", "legacy"):
+        cfg = EngineConfig(protocol=protocol, fragment_exec=False,
+                           state_layout=layout, **kw, **sim)
+        results.append(run_simulation(cfg, wl))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+
+
+def test_fragment_mode_vmapped_matches_serial():
+    """The vmapped sweep driver must reproduce fragment-mode serial
+    execution exactly (fragment plan arrays stack like txn plans).
+
+    The two cells share a seed and differ only in hot-set size: QueCC's
+    lane-granular fragment schedule depends only on the partition
+    structure, so their plan shapes coincide and they genuinely share
+    one vmapped program (asserted via group_cells)."""
+    cfg = EngineConfig(protocol="quecc", fragment_exec=True,
+                       **PROTO_KW["quecc"], **FRAG_SIM)
+    wls = [
+        make_workload(
+            WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                           num_hot=h, multipart_frac=1.0, num_partitions=8,
+                           batch_epoch=64, seed=0)
+        )
+        for h in (8, 64)
+    ]
+    batched = sweep.run_cells([(cfg, w) for w in wls])
+    assert [r.raw["group_cells"] for r in batched] == [2, 2]
+    serial = [run_simulation(cfg, w) for w in wls]
+    for b, s_res in zip(batched, serial):
+        assert _fingerprint(b) == _fingerprint(s_res)
+
+
 def test_slot_col_accessors():
     """The packed layout's named-column accessors read the same values
     the engine carries (spot-check: a fresh state has every tid == -1

@@ -30,17 +30,27 @@ HOST_LOOP_FIELDS = {
     "max_rounds", "warmup_rounds", "chunk_rounds", "target_commits",
 }
 
-# one representative alternative value per traced field
+# One representative alternative per traced field. Each variant is a
+# full replacement-kwargs dict because some fields are only legal in
+# combination (fragment execution and inter-batch pipelining require a
+# batch-planned protocol; pipelining requires fragment mode).
 TRACED_VARIANTS = {
-    "protocol": "deadlock_free",
-    "n_exec": 5,
-    "n_cc": 2,
-    "window": 3,
-    "split_index": True,
-    "event_leap": False,
-    "state_layout": "legacy",
-    "cost": dataclasses.replace(
-        EngineConfig(**BASE).cost, lock_op_cycles=999
+    "protocol": dict(protocol="deadlock_free"),
+    "n_exec": dict(n_exec=5),
+    "n_cc": dict(n_cc=2),
+    "window": dict(window=3),
+    "split_index": dict(split_index=True),
+    "event_leap": dict(event_leap=False),
+    "state_layout": dict(state_layout="legacy"),
+    "fragment_exec": dict(protocol="dgcc", n_cc=2, fragment_exec=True),
+    "inter_batch_pipeline": dict(
+        protocol="dgcc", n_cc=2, fragment_exec=True,
+        inter_batch_pipeline=True,
+    ),
+    "cost": dict(
+        cost=dataclasses.replace(
+            EngineConfig(**BASE).cost, lock_op_cycles=999
+        )
     ),
 }
 
@@ -59,7 +69,7 @@ def test_trace_statics_covers_every_traced_field():
             "and TRACED_VARIANTS, or to HOST_LOOP_FIELDS if the traced "
             "computation provably does not depend on it"
         )
-        varied = dataclasses.replace(cfg, **{f.name: TRACED_VARIANTS[f.name]})
+        varied = dataclasses.replace(cfg, **TRACED_VARIANTS[f.name])
         assert varied.trace_statics() != base_key, (
             f"EngineConfig.{f.name} changed but trace_statics() did not: "
             "two different computations would share one compiled runner"
@@ -88,15 +98,16 @@ def test_runner_cache_misses_on_statics_and_shapes():
     assert sweep.runner_cache_info()["entries"] == before + 1
     # any traced-field change: miss
     n = before + 1
-    for f, v in TRACED_VARIANTS.items():
-        varied = dataclasses.replace(EngineConfig(**BASE), **{f: v})
+    for f, kw in TRACED_VARIANTS.items():
+        varied = dataclasses.replace(EngineConfig(**BASE), **kw)
         sweep.get_runner(varied, meta, batched=False)
         n += 1
         assert sweep.runner_cache_info()["entries"] == n, f
     # any PlanMeta shape change: miss
     for shape_kw in (dict(n_txns=9), dict(max_keys=3), dict(num_records=32),
                      dict(lane_cols=4), dict(pred_width=2),
-                     dict(num_batches=2)):
+                     dict(num_batches=2), dict(n_frags=4),
+                     dict(frag_pred_width=2)):
         sweep.get_runner(
             cfg, dataclasses.replace(meta, **shape_kw), batched=False
         )
