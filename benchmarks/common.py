@@ -80,7 +80,7 @@ def _cell_hash(wl_cfg, eng_kw: dict) -> str:
 
 
 def _result_row(name: str, res, wall_s: float) -> dict:
-    return dict(
+    row = dict(
         name=name,
         throughput_txn_s=res.throughput_txn_s,
         commits=res.commits,
@@ -93,6 +93,16 @@ def _result_row(name: str, res, wall_s: float) -> dict:
         steps_executed=res.raw.get("steps_executed", 0),
         engine_version=res.raw.get("engine_version", "?"),
     )
+    # optional engine telemetry (pipelined admission, planner-lane
+    # model), plus the measured-round count the utilization figures
+    # normalize the planner counters by
+    from repro.core.sweep import _OPT_SCALARS
+
+    present = [k for k in _OPT_SCALARS if k in res.raw]
+    if present:
+        row.update({k: res.raw[k] for k in present},
+                   rounds_measured=res.rounds)
+    return row
 
 
 def _simulate_cells(payload):

@@ -27,6 +27,46 @@ transfer ~70-300 cyc (we use a blended on/off-socket figure), SPSC queue hop
 ~100-250 ns [RCL, ATC'12], ~1 us of real work per 1 KB stored-procedure op.
 Only ratios matter for the paper's claims; absolute txn/s lands within the
 paper's order of magnitude.
+
+Module contract
+---------------
+Everything in this module is **static**: a :class:`CostModel` instance is
+part of ``EngineConfig.trace_statics()``, so every constant below is baked
+into the compiled step computation — changing any of them recompiles (and
+must invalidate benchmark caches via a ``repro.core.sweep.ENGINE_VERSION``
+bump if committed). Nothing here is traced per cell. The only host-side
+*functions* are :func:`CostModel.planner_batch_cycles` (per-batch planner
+work, consumed by ``engine._planner_work_rounds`` at plan-build time) and
+:func:`planner_lane_schedule` (the pure-python reference for the engine's
+in-round planner-lane recurrence, pinned by ``tests/test_planner_model``).
+
+Planner-lane throughput model (fig15)
+-------------------------------------
+The batch-planned protocols (dgcc / quecc) historically charged planning
+as a fixed **pipelined latency**: batch b+1's plan lands one planning span
+after batch b's, and planning capacity is infinite. DGCC (Yao et al.) and
+QueCC (Qadah & Sadoghi) both report the regime that model cannot show:
+planner *throughput* saturates, plans queue behind busy planner lanes, and
+execution starves — the planning-cost crossover that lets lock-based
+protocols win back the low-contention end.
+
+With ``EngineConfig.n_planner_lanes = L > 0`` the engine switches to a
+throughput model. Assumptions:
+
+  * one batch is planned end-to-end by **one** planner lane (batches are
+    round-robined across lanes, lane = global epoch index mod L), so
+    planning parallelism is *across* batches, never within one;
+  * per-batch planner work scales with the batch's conflict-graph size —
+    ``plan_txn_cycles`` per transaction, ``batch_plan_cycles_per_op`` per
+    key-op, ``plan_edge_cycles`` per dependency edge, ``plan_frag_cycles``
+    per fragment (fragment mode only), plus OLLP reconnaissance;
+  * batches *arrive* at the epoch rate (``EngineConfig.
+    epoch_interval_rounds`` between batches; 0 = all input is pre-arrived,
+    the fully planner-bound regime), and a lane can only start a plan once
+    the batch has arrived and the lane is free;
+  * a batch's transactions admit only after its modeled plan-completion
+    round (``plan_fin``), and the inter-batch pipeline's level-0 prefix
+    waits for the *next plan*, not the batch barrier.
 """
 
 from __future__ import annotations
@@ -78,6 +118,17 @@ class CostModel:
     # single cache line owned by the scheduler — no coherence storm).
     dep_check_cycles: int = 40
 
+    # --- planner-lane throughput model (fig15; see module docstring) ---
+    # Per-transaction planner overhead: allocate the batch entry, stamp
+    # the serial order, route to the home structure.
+    plan_txn_cycles: int = 300
+    # Per dependency edge of the batch's conflict graph / queue chains:
+    # last-writer lookup + chain append (cache-local hash).
+    plan_edge_cycles: int = 80
+    # Per fragment (fragment mode only): per-lane queue segment setup
+    # and the commit-join bookkeeping entry.
+    plan_frag_cycles: int = 150
+
     # --- transaction logic ---
     # One stored-procedure op on a 1 KB record (probe + RMW + logic,
     # ~0.6 us — paper-scale one-shot stored procedures).
@@ -124,6 +175,65 @@ class CostModel:
     @property
     def msg_hop_rounds(self) -> int:
         return int(self.rounds(self.msg_hop_cycles))
+
+    def planner_batch_cycles(self, n_txns, n_ops, n_edges, n_frags, n_ollp):
+        """Planner-lane cycles to plan one batch end to end.
+
+        All arguments may be ints or numpy arrays (one entry per batch).
+        This is the *throughput*-model cost: the work one planner lane
+        performs for one batch, scaling with the batch's conflict-graph
+        size. It is **not** divided by any lane count — parallelism in
+        the throughput model is across batches (round-robin over
+        ``EngineConfig.n_planner_lanes``), never within one batch.
+
+        >>> cm = CostModel()
+        >>> cm.planner_batch_cycles(n_txns=2, n_ops=6, n_edges=3,
+        ...                         n_frags=0, n_ollp=0)
+        1440
+        >>> int(cm.rounds(1440))  # rounds at 500 cycles per round
+        3
+        """
+        return (
+            n_txns * self.plan_txn_cycles
+            + n_ops * self.batch_plan_cycles_per_op
+            + n_edges * self.plan_edge_cycles
+            + n_frags * self.plan_frag_cycles
+            + n_ollp * self.recon_cycles
+        )
+
+
+def planner_lane_schedule(work_rounds, interval_rounds: int, n_lanes: int):
+    """Reference planner-lane schedule (pure python, execution-independent).
+
+    Batch (epoch) g arrives at round ``g * interval_rounds`` and is
+    planned by lane ``g % n_lanes``; a lane plans its batches serially,
+    so plan g starts at ``max(arrive[g], lane_free[g % n_lanes])`` and
+    completes ``work_rounds[g]`` rounds later. Returns
+    ``(ready, queue_delay)`` — per-batch plan-completion rounds and the
+    rounds each plan spent queued behind its busy lane.
+
+    This recurrence depends only on the arrival and work sequences — not
+    on execution — so it doubles as the oracle for the engine's carried
+    ``lane_free`` state: ``tests/test_planner_model`` pins the engine's
+    ``plan_qdelay`` / ``plan_busy`` counters against it.
+
+    Two lanes hide every other plan; one lane queues them:
+
+    >>> planner_lane_schedule([10, 10, 10], interval_rounds=5, n_lanes=2)
+    ([10, 15, 20], [0, 0, 0])
+    >>> planner_lane_schedule([10, 10, 10], interval_rounds=5, n_lanes=1)
+    ([10, 20, 30], [0, 5, 10])
+    """
+    lane_free = [0] * max(n_lanes, 1)
+    ready, delay = [], []
+    for g, w in enumerate(work_rounds):
+        arrive = g * interval_rounds
+        lane = g % max(n_lanes, 1)
+        delay.append(max(lane_free[lane] - arrive, 0))
+        fin = max(arrive, lane_free[lane]) + w
+        lane_free[lane] = fin
+        ready.append(fin)
+    return ready, delay
 
 
 DEFAULT_COST_MODEL = CostModel()

@@ -114,6 +114,31 @@ class BatchSchedule:
     def num_batches(self) -> int:
         return len(self.batch_start)
 
+    def edges_per_batch(self) -> np.ndarray:
+        """int64[NB]: dependency edges planned into each batch.
+
+        Edges never cross batches (both edge builders segment on the
+        batch id), so an edge's batch is its dependent's batch. This is
+        the conflict-graph size term of the planner-lane throughput
+        model (``CostModel.planner_batch_cycles``): a high-contention
+        batch has long last-writer chains and therefore more planner
+        work per transaction than a uniform one.
+        """
+        return np.bincount(
+            self.batch_of[self.edge_dst], minlength=self.num_batches
+        ).astype(np.int64)
+
+    def frag_edges_per_batch(self) -> np.ndarray:
+        """int64[NB]: fragment-granular dependency edges per batch
+        (requires ``fragments=True`` at build time)."""
+        assert self.frag_edge_dst is not None, (
+            "schedule built without fragments"
+        )
+        return np.bincount(
+            self.batch_of[self.frag_txn[self.frag_edge_dst]],
+            minlength=self.num_batches,
+        ).astype(np.int64)
+
     @property
     def n_levels(self) -> int:
         return int(self.level.max()) + 1 if self.n_txns else 0

@@ -41,7 +41,16 @@ Protocols (``EngineConfig.protocol``):
       committed (the ``dep_wavefront`` primitive), so there is no
       deadlock handling, no abort path, and no coherence storm on record
       meta-data; the costs are batch planning (pipelined behind the
-      previous batch) and per-dependency scheduler checks.
+      previous batch) and per-dependency scheduler checks. Planning is
+      charged either as a fixed pipelined *latency* (default), or —
+      with ``EngineConfig.n_planner_lanes > 0`` — through the
+      planner-lane *throughput* model: per-batch work scales with the
+      batch's conflict-graph size, batches round-robin across planner
+      lanes, and a batch's admission waits for its modeled
+      plan-completion round (see ``repro.core.cost_model``). An epoch
+      arrival rate (``EngineConfig.epoch_interval_rounds``) opens the
+      system: input arrives over time instead of being fully queued at
+      round 0, for every protocol family.
 
 Execution model (this file + ``repro.core.sweep``):
 
@@ -219,6 +228,20 @@ class EngineConfig:
     # batch b drains (once b+1's plan is ready), instead of waiting for
     # the full batch barrier.
     inter_batch_pipeline: bool = False
+    # Planner-lane throughput model (dgcc / quecc): 0 (default) keeps the
+    # fixed pipelined-latency planning charge; L > 0 models L planner
+    # lanes with per-batch work that scales with the batch's
+    # conflict-graph size (txns, key-ops, edges, fragments — see
+    # CostModel.planner_batch_cycles). Batch g is planned end-to-end by
+    # lane g % L; plans queue behind busy lanes, and a batch's admission
+    # gates on its modeled plan-completion round.
+    n_planner_lanes: int = 0
+    # Epoch arrival interval (rounds): batch/epoch g's transactions
+    # arrive at round g * epoch_interval_rounds (an open system). 0
+    # (default) = the whole input is queued at round 0 (closed loop).
+    # For non-batch protocols, epochs are batch_epoch-sized slices of
+    # the workload's submission order.
+    epoch_interval_rounds: int = 0
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -244,6 +267,23 @@ class EngineConfig:
             assert self.fragment_exec, (
                 "inter-batch pipelining admits level-0 *fragments*: "
                 "enable fragment_exec"
+            )
+        assert self.n_planner_lanes >= 0
+        assert self.epoch_interval_rounds >= 0
+        if self.n_planner_lanes:
+            assert self.is_batch_planned, (
+                "the planner-lane throughput model charges *batch* "
+                "planning: it applies to dgcc/quecc only"
+            )
+        if self.n_planner_lanes or self.epoch_interval_rounds:
+            assert self.state_layout == "packed", (
+                "the frozen legacy engine predates the planner-lane "
+                "model and open epoch arrival"
+            )
+        if self.epoch_interval_rounds:
+            assert self.protocol != "partitioned_store", (
+                "open epoch arrival is not modeled for the H-Store "
+                "per-lane admission streams"
             )
 
     @property
@@ -287,6 +327,12 @@ class EngineConfig:
             self.state_layout,
             self.fragment_exec,
             self.inter_batch_pipeline,
+            # the planner-lane count shapes the carried lane_free state;
+            # the epoch *interval* is a traced scalar (one compilation
+            # serves a whole epoch-rate sweep) — only open vs closed
+            # arrival changes the traced computation
+            self.n_planner_lanes,
+            self.epoch_interval_rounds > 0,
             self.cost,
         )
 
@@ -396,6 +442,14 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
                 batch_fsize=np.asarray(sched.batch_fsize, np.int32),
                 lvl0_fcount=np.asarray(sched.lvl0_fcount, np.int32),
             )
+        if cfg.n_planner_lanes > 0:
+            p["plan_work"] = _planner_work_rounds(cfg, plan)
+        if cfg.n_planner_lanes > 0 or cfg.epoch_interval_rounds > 0:
+            # traced scalar: every epoch-rate point of a sweep shares
+            # one compiled runner (see EngineConfig.trace_statics)
+            p["epoch_interval"] = np.asarray(
+                cfg.epoch_interval_rounds, np.int32
+            )
         return p
     keys = np.asarray(plan.keys, np.int32)
     modes = np.asarray(plan.modes, np.int32)
@@ -419,6 +473,18 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
     )
     if plan.lane_stream is not None:
         p["lane_stream"] = np.asarray(plan.lane_stream, np.int32)
+    if cfg.epoch_interval_rounds > 0:
+        # open arrival: txn i of the workload arrives with its epoch
+        # (epoch-sized slices of submission order); the workload wraps
+        # modulo N, so the engine adds (g // N) * arrive_cycle for
+        # global txn id g.
+        n = keys.shape[0]
+        b = max(int(plan.epoch_txns), 1)
+        iv = int(cfg.epoch_interval_rounds)
+        p["arrive_round"] = (
+            (np.arange(n, dtype=np.int64) // b) * iv
+        ).astype(np.int32)
+        p["arrive_cycle"] = np.asarray(-(-n // b) * iv, np.int32)
     return p
 
 
@@ -503,6 +569,10 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
     n_cc = max(cfg.n_cc, 1)
     cap_keys = cm.cc_keys_per_round  # per CC lane per round, in key-ops
     has_lane_stream = meta.lane_cols > 0
+    # open epoch arrival (fig15): admission additionally waits for the
+    # txn's epoch to arrive. Off by default; the off path compiles to
+    # the pre-model graph (golden traces stay bit-identical).
+    open_arrival = cfg.epoch_interval_rounds > 0
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
@@ -565,9 +635,19 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         if lane_stream is None:
             rank = jnp.cumsum(empty.astype(i32)) - 1
             new_tid = s["next_txn"] + rank
-            adm = empty
+            if open_arrival:
+                # global txn id g arrives with its epoch; arrival is
+                # monotone in g, so the admitted set is a prefix of the
+                # ranked empty slots and tids stay contiguous
+                arr_t = (
+                    p["arrive_round"][new_tid % N]
+                    + (new_tid // N) * p["arrive_cycle"]
+                )
+                adm = empty & (arr_t <= r)
+            else:
+                adm = empty
             new_widx = new_tid % N
-            s["next_txn"] = s["next_txn"] + empty.sum(dtype=i32)
+            s["next_txn"] = s["next_txn"] + adm.sum(dtype=i32)
         else:
             # H-Store routing: each worker lane pulls the next txn homed to
             # its partition (lanes with no homed txns stay idle).
@@ -1197,7 +1277,22 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             cand = jnp.minimum(cand, jnp.where(
                 (phase == REL) & (release_at > r), release_at, _IMAX))
             if lane_stream is None:
-                can_adm = jnp.ones((T,), jnp.bool_)
+                if open_arrival:
+                    # the earliest admissible txn is global id next_txn
+                    # (post-admission); an empty slot acts once it has
+                    # arrived, and its arrival round is the wake-up
+                    # event until then (arrival is monotone in g, so no
+                    # admission can happen sooner)
+                    g0 = s["next_txn"]
+                    arr0 = (
+                        p["arrive_round"][g0 % N]
+                        + (g0 // N) * p["arrive_cycle"]
+                    )
+                    can_adm = jnp.broadcast_to(arr0 <= r + 1, (T,))
+                    cand = jnp.minimum(cand, jnp.where(
+                        (phase == EMPTY).any(), arr0, _IMAX))
+                else:
+                    can_adm = jnp.ones((T,), jnp.bool_)
             else:
                 can_adm = (
                     lane_stream[slot_ids, lane_ctr % meta.lane_cols] >= 0
@@ -1269,6 +1364,37 @@ def _batch_plan_rounds(cfg: EngineConfig, plan: planner_lib.Plan):
     return np.asarray(cm.rounds(plan_cycles), np.int32)  # [NB]
 
 
+def _planner_work_rounds(cfg: EngineConfig, plan: planner_lib.Plan):
+    """Per-batch planner-lane work (rounds) under the throughput model
+    (``cfg.n_planner_lanes > 0``): one lane plans the whole batch, and
+    the work scales with the batch's conflict-graph size — transactions,
+    key-ops, dependency edges (fragment-granular in fragment mode),
+    fragments, and OLLP reconnaissance. Unlike :func:`_batch_plan_rounds`
+    this is *not* divided by a lane count: planner parallelism is across
+    batches (round-robin over the lanes), never within one.
+    """
+    cm = cfg.cost
+    sched = plan.sched
+    n_ollp = np.bincount(
+        sched.batch_of, weights=plan.ollp.astype(np.int64),
+        minlength=sched.num_batches,
+    ).astype(np.int64)
+    if cfg.fragment_exec:
+        n_edges = sched.frag_edges_per_batch()
+        n_frags = sched.batch_fsize.astype(np.int64)
+    else:
+        n_edges = sched.edges_per_batch()
+        n_frags = np.zeros(sched.num_batches, np.int64)
+    cycles = cm.planner_batch_cycles(
+        n_txns=sched.batch_size.astype(np.int64),
+        n_ops=sched.plan_ops.astype(np.int64),
+        n_edges=n_edges,
+        n_frags=n_frags,
+        n_ollp=n_ollp,
+    )
+    return np.asarray(cm.rounds(cycles), np.int32)  # [NB]
+
+
 def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
     i32 = jnp.int32
     sched = plan.sched
@@ -1303,6 +1429,19 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         s["pipe_com"] = jnp.zeros((), i32)  # next-batch commits pending
         s["pipe_adm"] = jnp.zeros((), i32)  # cumulative early admissions
         s["pipe_commits"] = jnp.zeros((), i32)  # cumulative early commits
+    if cfg.n_planner_lanes > 0 or cfg.epoch_interval_rounds > 0:
+        s["epoch_ctr"] = jnp.zeros((), i32)  # global batch (epoch) index
+    if cfg.n_planner_lanes > 0:
+        # planner-lane throughput model: batch 0 arrives at round 0 on a
+        # free lane 0, so its plan completes after its own work span
+        work = _planner_work_rounds(cfg, plan)
+        ready0 = int(work[0])
+        s["plan_fin"] = jnp.asarray(ready0, i32)
+        s["lane_free"] = (
+            jnp.zeros((cfg.n_planner_lanes,), i32).at[0].set(ready0)
+        )
+        s["plan_busy"] = jnp.asarray(ready0, i32)  # lane-busy rounds
+        s["plan_qdelay"] = jnp.zeros((), i32)  # plan-queue wait rounds
     return s
 
 
@@ -1341,6 +1480,12 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
     F = meta.n_frags
     # one batch cannot pipeline into itself (nothing to overlap)
     pipe = cfg.inter_batch_pipeline and NB > 1
+    # planner-lane throughput model / open epoch arrival (fig15): both
+    # default off, and the off path compiles to the pre-model graph —
+    # golden traces stay bit-identical by construction
+    L = cfg.n_planner_lanes
+    planner_model = L > 0
+    open_arrival = cfg.epoch_interval_rounds > 0
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
@@ -1385,9 +1530,21 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
         # -------------------------------------------- 1. batch rollover
         # When every transaction of the current batch has committed, open
-        # the next one. Planning is pipelined: planners started on the
-        # next batch the moment they finished this one, so the new
-        # batch's plan-ready round advances by its own planning span.
+        # the next one. Planning models, in order of fidelity:
+        #   * default: pipelined latency — planners started on the next
+        #     batch the moment they finished this one, so the new
+        #     batch's plan-ready round advances by its own planning span;
+        #   * open arrival (epoch_interval_rounds > 0): same, but a plan
+        #     cannot start before its batch arrives (epoch g arrives at
+        #     round g * interval);
+        #   * planner-lane throughput model (n_planner_lanes = L > 0):
+        #     batch g is planned end-to-end by lane g % L; the plan
+        #     starts at max(arrival, lane free) and occupies the lane
+        #     for its conflict-graph-scaled work span, so high epoch
+        #     rates queue plans behind saturated lanes (the fig15
+        #     plateau). The schedule depends only on the arrival and
+        #     work sequences (cost_model.planner_lane_schedule is the
+        #     host-side oracle).
         adv = s["batch_left"] == 0
         new_b = jnp.where(adv, (s["cur_batch"] + 1) % NB, s["cur_batch"])
         # stale flags (the workload wraps around modulo NB) are cleared
@@ -1412,10 +1569,52 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         else:
             s["bpos"] = jnp.where(adv, ustart[new_b], s["bpos"])
             s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
-        s["plan_fin"] = jnp.where(
-            adv, s["plan_fin"] + plan_rounds[new_b], s["plan_fin"]
-        )
+        if planner_model or open_arrival:
+            interval = p["epoch_interval"]
+            g_new = s["epoch_ctr"] + 1  # the new batch's global index
+            arrive_new = g_new * interval
+        if planner_model:
+            lane = g_new % L
+            lane_free_prev = s["lane_free"][lane]
+            ready = jnp.maximum(arrive_new, lane_free_prev) + p[
+                "plan_work"][new_b]
+            s["plan_qdelay"] = s["plan_qdelay"] + jnp.where(
+                adv, jnp.maximum(lane_free_prev - arrive_new, 0), 0
+            )
+            s["plan_busy"] = s["plan_busy"] + jnp.where(
+                adv, p["plan_work"][new_b], 0
+            )
+            s["lane_free"] = s["lane_free"].at[lane].set(
+                jnp.where(adv, ready, lane_free_prev)
+            )
+            new_plan_fin = ready
+        elif open_arrival:
+            new_plan_fin = (
+                jnp.maximum(arrive_new, s["plan_fin"]) + plan_rounds[new_b]
+            )
+        else:
+            new_plan_fin = s["plan_fin"] + plan_rounds[new_b]
+        s["plan_fin"] = jnp.where(adv, new_plan_fin, s["plan_fin"])
+        if planner_model or open_arrival:
+            s["epoch_ctr"] = s["epoch_ctr"] + adv.astype(jnp.int32)
         s["cur_batch"] = new_b
+
+        def next_plan_fin(nb):
+            # modeled plan-ready round of the *next* batch (global epoch
+            # epoch_ctr + 1): what the pipelined level-0 prefix waits
+            # for — the plan, not the batch barrier. Identical to the
+            # value the rollover above will commit for that batch
+            # (lane_free is only written at rollovers).
+            if planner_model:
+                g_nxt = s["epoch_ctr"] + 1
+                return jnp.maximum(
+                    g_nxt * interval, s["lane_free"][g_nxt % L]
+                ) + p["plan_work"][nb]
+            if open_arrival:
+                return jnp.maximum(
+                    (s["epoch_ctr"] + 1) * interval, s["plan_fin"]
+                ) + plan_rounds[nb]
+            return s["plan_fin"] + plan_rounds[nb]
 
         # -------------------------------------------- 2. admission
         # Empty slots pull the next positions of the current batch, in
@@ -1434,7 +1633,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             adm_cur = empty & (rank < cur_avail) & (r >= s["plan_fin"])
             nb = (s["cur_batch"] + 1) % NB
             nlvl_end = ustart[nb] + p["lvl0_fcount"][nb]
-            plan_fin_next = s["plan_fin"] + plan_rounds[nb]
+            plan_fin_next = next_plan_fin(nb)
             ppos = s["pbpos"] + (rank - cur_avail)
             adm_pipe = (
                 empty
@@ -1645,7 +1844,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
                 nlvl_end2 = ustart[nb2] + p["lvl0_fcount"][nb2]
                 pipe_evt = jnp.where(
                     s["pbpos"] < nlvl_end2,
-                    jnp.maximum(s["plan_fin"] + plan_rounds[nb2], r + 1),
+                    jnp.maximum(next_plan_fin(nb2), r + 1),
                     imax,
                 )
                 adm_evt = jnp.minimum(adm_evt, pipe_evt)
@@ -1712,6 +1911,7 @@ def make_plan(cfg: EngineConfig, workload: Workload) -> planner_lib.Plan:
         )
     else:
         plan = planner_lib.plan_dynamic(workload)
+    plan.epoch_txns = workload.cfg.batch_epoch  # open-arrival epoch size
     if not cfg.is_batch_planned:
         plan = _compact_keys(plan)
     return plan

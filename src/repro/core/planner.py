@@ -39,6 +39,22 @@ the paper's mechanism. The *planner* sees only the estimated set; the keys in
 the retry are the corrected ones (same array — the estimate error is modeled
 by the ``ollp_miss`` flag, not by divergent keys, which keeps the lock
 footprint faithful while exercising the abort path).
+
+Module contract
+---------------
+Planning is **host-side numpy** and runs once per (config, workload) cell,
+before anything is traced: a :class:`Plan` is a set of engine-ready arrays
+(plus, for dgcc/quecc, a ``depgraph.BatchSchedule``). The engine turns a
+Plan into *traced* device arrays via ``engine.plan_device`` — so two cells
+whose Plans share shapes (``engine.plan_meta``) reuse one compiled runner,
+and nothing in this module can invalidate a compile cache entry. What this
+module computes is protocol *semantics* (acquisition order, batch
+schedules); what it never computes is *cost* — planning-cost charging
+(the pipelined latency, and the planner-lane throughput model's
+conflict-graph-scaled work) lives in ``engine._batch_plan_rounds`` /
+``engine._planner_work_rounds`` over the schedule built here. The
+``epoch_txns`` stamp (set by ``engine.make_plan``) only feeds the
+open-arrival schedule; it does not alter any planned order.
 """
 
 from __future__ import annotations
@@ -71,6 +87,11 @@ class Plan:
     # Batch-planned protocols (dgcc / quecc): the per-batch dependency
     # schedule (conflict graph + wavefront levels, or per-lane queues).
     sched: depgraph_lib.BatchSchedule | None = None
+    # Transactions per epoch (= WorkloadConfig.batch_epoch, stamped by
+    # ``engine.make_plan``): the open-arrival model
+    # (``EngineConfig.epoch_interval_rounds``) releases the workload in
+    # epoch-sized slices for the non-batch protocols too.
+    epoch_txns: int = 0
 
 
 def _reorder(w: Workload, order: np.ndarray) -> Plan:

@@ -25,7 +25,27 @@ from *what forces recompilation* (protocol statics + array shapes):
 Warmup accounting: the warmup snapshot subtracts *all four* counters
 (commits, deadlock aborts, OLLP aborts, wasted ops) plus the lane-time
 breakdown, consistently — previously ``aborts_ollp``/``wasted_ops`` were
-reported raw while the others subtracted the snapshot.
+reported raw while the others subtracted the snapshot. Optional engine
+counters (``_OPT_SCALARS`` — pipelined-admission and planner-lane
+telemetry) ride the same snapshot discipline into ``SimResult.raw``.
+
+Cache-invalidation contract
+---------------------------
+Two caches with sharply different rules hang off this module:
+
+  * ``_RUNNER_CACHE`` (process-local, compiled runners): keyed on
+    ``(EngineConfig.trace_statics(), PlanMeta, batched)``. Every config
+    field that changes the *traced computation* must appear in
+    ``trace_statics()`` (a false hit silently simulates the wrong
+    protocol); host-loop budget fields must not (a false miss recompiles
+    per cell). Traced *values* — plan arrays, the epoch-rate scalar —
+    never invalidate it. ``tests/test_sweep_cache.py`` audits every
+    ``EngineConfig`` field into one of the two classes.
+  * benchmark result caches (``benchmarks/common.py``, on disk): keyed
+    on a hash that includes :data:`ENGINE_VERSION`. Any result-visible
+    engine change must bump the version so stale numbers become
+    unreachable; bit-identical refactors must *not* bump it (the golden
+    traces prove bit-identity, and cached figure cells stay valid).
 """
 
 from __future__ import annotations
@@ -52,10 +72,17 @@ ENGINE_VERSION = "3-packed-slots"
 _RUNNER_CACHE: dict = {}
 
 _SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps")
-# Present only in some engine states (inter-batch pipelined admission):
-# cumulative admissions/commits that ran ahead of the batch barrier —
-# the per-batch split of the Fig-10 throughput accounting.
-_OPT_SCALARS = ("pipe_adm", "pipe_commits")
+# Present only in some engine states; each is cumulative and reported
+# warmup-subtracted in ``SimResult.raw``:
+#   pipe_adm / pipe_commits — inter-batch pipelined admission: traffic
+#     that ran ahead of the batch barrier (per-batch accounting split);
+#   plan_busy / plan_qdelay / epoch_ctr — planner-lane throughput model:
+#     lane-busy planning rounds (utilization = plan_busy / (L * rounds)),
+#     rounds batch plans spent queued behind busy lanes, and batches
+#     planned. ``epoch_ctr`` also appears under open epoch arrival alone.
+_OPT_SCALARS = (
+    "pipe_adm", "pipe_commits", "plan_busy", "plan_qdelay", "epoch_ctr",
+)
 
 
 def runner_cache_info() -> dict:

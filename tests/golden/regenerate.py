@@ -67,12 +67,25 @@ CELLS = {
     "quecc_frag_pipe": (
         YCSB_MP, dict(protocol="quecc", n_cc=4, n_exec=6, window=2,
                       fragment_exec=True, inter_batch_pipeline=True)),
+    # Planner-lane throughput model, deliberately *saturated*: one
+    # planner lane, batches (128 txns) much larger than the 32 exec
+    # slots, uniform keys so execution is fast — admission is
+    # planner-bound and the plan_busy / plan_qdelay counters are
+    # non-trivial (the fingerprint pins them bit-exactly).
+    "dgcc_planner_sat": (
+        dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=0,
+             batch_epoch=128, seed=0),
+        dict(protocol="dgcc", n_cc=2, n_exec=16, window=2,
+             n_planner_lanes=1, epoch_interval_rounds=20)),
 }
 
 
 def fingerprint(res) -> dict:
-    """Everything the engine reports except wall-clock measurements."""
-    return dict(
+    """Everything the engine reports except wall-clock measurements.
+
+    Planner-lane counters are included only when the model is on, so
+    fixtures generated before the model exist byte-identically."""
+    fp = dict(
         commits=res.commits,
         aborts_deadlock=res.aborts_deadlock,
         aborts_ollp=res.aborts_ollp,
@@ -85,6 +98,10 @@ def fingerprint(res) -> dict:
         rounds_total=res.raw["rounds_total"],
         steps_executed=res.raw["steps_executed"],
     )
+    for k in ("plan_busy", "plan_qdelay", "epoch_ctr"):
+        if k in res.raw:
+            fp[k] = res.raw[k]
+    return fp
 
 
 def run_cell(name: str) -> dict:

@@ -1,0 +1,301 @@
+"""Planner-lane throughput model: schedule arithmetic, engine counters,
+and default-off bit-identity.
+
+The model (``EngineConfig.n_planner_lanes = L > 0``) replaces the
+batch-planned protocols' fixed pipelined planning latency with a
+throughput model: batch (epoch) g arrives at round
+``g * epoch_interval_rounds``, is planned end-to-end by lane ``g % L``,
+and admits only after its modeled plan-completion round. The modeled
+schedule depends only on the arrival and work sequences — never on
+execution — so ``repro.core.cost_model.planner_lane_schedule`` is an
+exact host-side oracle for the engine's carried ``lane_free`` state.
+
+Three layers are covered here:
+  * the plan-queue delay arithmetic, pinned against a hand-computed
+    schedule;
+  * the engine's ``plan_busy`` / ``plan_qdelay`` / ``epoch_ctr``
+    counters, cross-checked against the host oracle on real runs;
+  * bit-identity: model-off (the default) must equal the frozen legacy
+    engine, and model-on must leap bit-identically to its dense loop.
+"""
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import engine as engine_lib
+from repro.core.cost_model import planner_lane_schedule
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+SIM = dict(max_rounds=3000, warmup_rounds=0, chunk_rounds=500,
+           target_commits=10**9)
+
+BATCH_KW = {
+    "dgcc": dict(n_cc=2, n_exec=6, window=2),
+    "quecc": dict(n_cc=4, n_exec=6, window=2),
+}
+
+
+def _fingerprint(res):
+    return (
+        res.commits,
+        res.aborts_deadlock,
+        res.aborts_ollp,
+        res.wasted_ops,
+        res.rounds,
+        tuple(sorted(res.breakdown.items())),
+        res.raw["total_commits"],
+        res.raw["next_txn"],
+        res.raw["rounds_total"],
+    )
+
+
+@pytest.fixture(scope="module")
+def ycsb_batched():
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=8, batch_epoch=64, seed=0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. plan-queue delay arithmetic vs a hand-computed schedule
+# ---------------------------------------------------------------------------
+def test_schedule_hand_computed_single_lane():
+    """One lane, work 20 per batch, a batch every 8 rounds: each plan
+    queues behind the previous one and the backlog grows by 12 rounds
+    per batch (service - interarrival)."""
+    ready, delay = planner_lane_schedule(
+        [20, 20, 20, 20], interval_rounds=8, n_lanes=1
+    )
+    # g0: starts at 0, done 20.      g1: arrives 8, waits 20-8=12, done 40.
+    # g2: arrives 16, waits 24, done 60.  g3: arrives 24, waits 36, done 80.
+    assert ready == [20, 40, 60, 80]
+    assert delay == [0, 12, 24, 36]
+
+
+def test_schedule_hand_computed_two_lanes():
+    """Two lanes absorb the same load: odd batches go to lane 1, and
+    each lane sees an effective interarrival of 16 > 20... still short
+    by 4 per two batches — the backlog grows at half the rate."""
+    ready, delay = planner_lane_schedule(
+        [20, 20, 20, 20], interval_rounds=8, n_lanes=2
+    )
+    # lane0: g0 [0, 20), g2 arrives 16 -> waits 4, done 40
+    # lane1: g1 arrives 8 [8, 28), g3 arrives 24 -> waits 4, done 48
+    assert ready == [20, 28, 40, 48]
+    assert delay == [0, 0, 4, 4]
+
+
+def test_schedule_hand_computed_overprovisioned():
+    """Enough lanes (or a slow enough epoch rate) -> no queueing: every
+    plan starts the round its batch arrives."""
+    ready, delay = planner_lane_schedule(
+        [10, 14, 10], interval_rounds=20, n_lanes=1
+    )
+    assert ready == [10, 34, 50]
+    assert delay == [0, 0, 0]
+    ready, delay = planner_lane_schedule(
+        [50, 50, 50], interval_rounds=1, n_lanes=3
+    )
+    assert ready == [50, 51, 52]
+    assert delay == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# 2. engine counters vs the host-side oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("protocol", sorted(BATCH_KW))
+@pytest.mark.parametrize("n_lanes,interval", [(1, 0), (1, 40), (3, 25)])
+def test_engine_counters_match_oracle(ycsb_batched, protocol, n_lanes,
+                                      interval):
+    """``plan_busy`` / ``plan_qdelay`` must equal the oracle's totals
+    over exactly the batches the engine planned (``epoch_ctr`` + the
+    initial batch), for saturated (interval 0) and paced arrivals."""
+    cfg = EngineConfig(protocol=protocol, n_planner_lanes=n_lanes,
+                       epoch_interval_rounds=interval,
+                       **BATCH_KW[protocol], **SIM)
+    res = run_simulation(cfg, ycsb_batched)
+    plan = engine_lib.make_plan(cfg, ycsb_batched)
+    work = engine_lib._planner_work_rounds(cfg, plan)
+    n_planned = res.raw["epoch_ctr"] + 1  # batch 0 is planned at init
+    work_seq = [int(work[g % len(work)]) for g in range(n_planned)]
+    ready, delay = planner_lane_schedule(work_seq, interval, n_lanes)
+    assert res.raw["plan_busy"] == sum(work_seq)
+    assert res.raw["plan_qdelay"] == sum(delay)
+    assert res.commits > 0
+
+
+def test_planner_work_scales_with_conflict_graph(ycsb_batched):
+    """The throughput model's per-batch work must grow with the batch's
+    conflict-graph size: a hot (high-contention) batch has longer
+    last-writer chains than a uniform one of the same size."""
+    hot_cfg = EngineConfig(protocol="dgcc", n_planner_lanes=1,
+                           **BATCH_KW["dgcc"], **SIM)
+    hot_work = engine_lib._planner_work_rounds(
+        hot_cfg, engine_lib.make_plan(hot_cfg, ycsb_batched)
+    )
+    uniform = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=0, batch_epoch=64, seed=0)
+    )
+    uni_work = engine_lib._planner_work_rounds(
+        hot_cfg, engine_lib.make_plan(hot_cfg, uniform)
+    )
+    assert hot_work.sum() > uni_work.sum()
+
+
+# ---------------------------------------------------------------------------
+# 3. bit-identity: model off == legacy engine; model on leaps exactly
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    protocol=st.sampled_from(sorted(BATCH_KW)),
+    n_exec=st.sampled_from([2, 6, 16]),
+    num_hot=st.sampled_from([0, 8, 512]),
+    batch_epoch=st.sampled_from([64, 256]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_model_off_matches_legacy_property(protocol, n_exec, num_hot,
+                                           batch_epoch, seed):
+    """``n_planner_lanes=0`` / ``epoch_interval_rounds=0`` (the
+    defaults) must remain bit-identical to the frozen pre-model engine:
+    the planner-lane model is opt-in, not a behavior change."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, batch_epoch=batch_epoch, seed=seed)
+    )
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    kw = dict(BATCH_KW[protocol], n_exec=n_exec)
+    results = []
+    for layout in ("packed", "legacy"):
+        cfg = EngineConfig(protocol=protocol, n_planner_lanes=0,
+                           epoch_interval_rounds=0, state_layout=layout,
+                           **kw, **sim)
+        results.append(run_simulation(cfg, wl))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+
+
+@pytest.mark.parametrize("eng_kw", [
+    dict(protocol="dgcc", n_planner_lanes=1),
+    dict(protocol="dgcc", n_planner_lanes=2, epoch_interval_rounds=40),
+    dict(protocol="quecc", n_planner_lanes=1, epoch_interval_rounds=25),
+    dict(protocol="quecc", n_planner_lanes=2, fragment_exec=True),
+    dict(protocol="dgcc", n_planner_lanes=1, fragment_exec=True,
+         inter_batch_pipeline=True, epoch_interval_rounds=40),
+    dict(protocol="dgcc", epoch_interval_rounds=60),  # latency + arrival
+])
+def test_model_leap_matches_dense(eng_kw):
+    """Every planner-model / open-arrival mode must leap bit-identically
+    to its own dense round loop (the leap candidates cover the modeled
+    plan_fin and arrival events)."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=8, multipart_frac=1.0, num_partitions=8,
+                       batch_epoch=64, seed=0)
+    )
+    kw = dict(BATCH_KW[eng_kw["protocol"]])
+    results = []
+    for leap in (True, False):
+        cfg = EngineConfig(event_leap=leap, **eng_kw, **kw, **SIM)
+        results.append(run_simulation(cfg, wl))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+    for k in ("plan_busy", "plan_qdelay", "epoch_ctr", "pipe_adm"):
+        assert results[0].raw.get(k) == results[1].raw.get(k), k
+    assert (results[0].raw["steps_executed"]
+            <= results[1].raw["steps_executed"])
+
+
+@pytest.mark.parametrize("protocol", ["twopl_waitdie", "deadlock_free",
+                                      "orthrus"])
+def test_open_arrival_leap_matches_dense(protocol):
+    """Open epoch arrival for the lock-based / per-txn-planned family:
+    the admission gate and its leap wake-up must be dense-equivalent."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=8, batch_epoch=64, seed=0)
+    )
+    kw = (dict(n_cc=2, n_exec=6, window=2) if protocol == "orthrus"
+          else dict(n_exec=8))
+    results = []
+    for leap in (True, False):
+        cfg = EngineConfig(protocol=protocol, epoch_interval_rounds=45,
+                           event_leap=leap, **kw, **SIM)
+        results.append(run_simulation(cfg, wl))
+    assert _fingerprint(results[0]) == _fingerprint(results[1])
+    assert (results[0].raw["steps_executed"]
+            < results[0].raw["rounds_total"])
+
+
+def test_open_arrival_throttles_offered_load():
+    """Sanity of the open system: slowing the epoch rate must reduce a
+    fast protocol's throughput (admissions are arrival-bound), and the
+    admitted-txn counter must track the arrival schedule."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=0, batch_epoch=64, seed=0)
+    )
+    commits = {}
+    for interval in (0, 800, 2400):
+        cfg = EngineConfig(protocol="deadlock_free", n_exec=8,
+                           epoch_interval_rounds=interval, **SIM)
+        commits[interval] = run_simulation(cfg, wl).commits
+    # closed loop runs at capacity (~0.1 txn/round here); 64-txn epochs
+    # every 800 rounds offer less than that, every 2400 far less
+    assert commits[0] > commits[800] > commits[2400]
+    # 800-round epochs over 3000 rounds: epochs 0..3 arrived -> at most
+    # 4 * 64 txns can ever have been admitted
+    cfg = EngineConfig(protocol="deadlock_free", n_exec=8,
+                       epoch_interval_rounds=800, **SIM)
+    res = run_simulation(cfg, wl)
+    assert res.raw["next_txn"] <= 4 * 64
+
+
+def test_planner_model_vmapped_matches_serial():
+    """The vmapped sweep driver must reproduce planner-model serial
+    execution exactly (the carried lane_free state and the epoch-rate
+    scalar stack like any other plan array)."""
+    from repro.core import sweep
+
+    cfg = EngineConfig(protocol="dgcc", n_cc=2, n_exec=8, window=2,
+                       n_planner_lanes=2, epoch_interval_rounds=40,
+                       max_rounds=2000, warmup_rounds=500,
+                       chunk_rounds=500, target_commits=10**9)
+    wls = [
+        make_workload(
+            WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                           num_hot=8, batch_epoch=64, seed=s)
+        )
+        for s in (0, 1, 2)
+    ]
+    batched = sweep.run_cells([(cfg, wl) for wl in wls])
+    assert batched[0].raw["group_cells"] == 3  # genuinely one program
+    for b, wl in zip(batched, wls):
+        s = run_simulation(cfg, wl)
+        assert _fingerprint(b) == _fingerprint(s)
+        for k in ("plan_busy", "plan_qdelay", "epoch_ctr"):
+            assert b.raw[k] == s.raw[k], k
+
+
+def test_planner_saturation_plateau():
+    """The fig15 mechanism in miniature: at low contention (fast,
+    wide-wavefront execution) a single planner lane becomes the
+    bottleneck — adding planner lanes must strictly help, and the
+    starved lanes must show up as plan-queue delay."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=0, batch_epoch=256, seed=0)
+    )
+    thr, qd = {}, {}
+    for lanes in (1, 4):
+        # planning is serial per lane while execution is parallel across
+        # slots, so a batch much larger than the slot count makes one
+        # planner lane the bottleneck
+        cfg = EngineConfig(protocol="dgcc", n_cc=2, n_exec=32, window=2,
+                           n_planner_lanes=lanes, epoch_interval_rounds=1,
+                           **SIM)
+        res = run_simulation(cfg, wl)
+        thr[lanes], qd[lanes] = res.commits, res.raw["plan_qdelay"]
+    assert thr[4] > thr[1]
+    assert qd[1] > qd[4]

@@ -47,6 +47,11 @@ TRACED_VARIANTS = {
         protocol="dgcc", n_cc=2, fragment_exec=True,
         inter_batch_pipeline=True,
     ),
+    "n_planner_lanes": dict(protocol="dgcc", n_cc=2, n_planner_lanes=2),
+    # only open-vs-closed arrival is a compile-time static; the interval
+    # *value* is traced (one compilation per epoch-rate sweep), which
+    # test_epoch_interval_value_shares_a_runner pins below
+    "epoch_interval_rounds": dict(epoch_interval_rounds=100),
     "cost": dict(
         cost=dataclasses.replace(
             EngineConfig(**BASE).cost, lock_op_cycles=999
@@ -83,6 +88,22 @@ def test_host_loop_fields_share_a_runner():
         assert dataclasses.replace(
             cfg, **{f: v}
         ).trace_statics() == cfg.trace_statics()
+
+
+def test_epoch_interval_value_shares_a_runner():
+    """The epoch arrival interval is a traced scalar: every positive
+    interval of an epoch-rate sweep must share one compiled runner
+    (only the open/closed-arrival *flag* is a compile-time static)."""
+    a = EngineConfig(**BASE, epoch_interval_rounds=50)
+    b = EngineConfig(**BASE, epoch_interval_rounds=400)
+    closed = EngineConfig(**BASE)
+    assert a.trace_statics() == b.trace_statics()
+    assert a.trace_statics() != closed.trace_statics()
+    # same for the batch engine with the planner-lane model on
+    dg = dict(protocol="dgcc", n_cc=2, n_exec=4, n_planner_lanes=2)
+    da = EngineConfig(**dg, epoch_interval_rounds=50)
+    db = EngineConfig(**dg, epoch_interval_rounds=400)
+    assert da.trace_statics() == db.trace_statics()
 
 
 def test_runner_cache_misses_on_statics_and_shapes():

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Check that markdown source links resolve to real paths.
+
+Usage: python tools/check_doc_links.py DOC.md [DOC.md ...]
+
+Scans each document for inline markdown links ``[text](target)`` and
+verifies every relative target exists on disk (resolved against the
+document's directory; ``#anchor`` fragments and external ``http(s)`` /
+``mailto`` targets are skipped). Exits non-zero listing every dangling
+link — the CI docs job runs this over ``docs/ARCHITECTURE.md`` and
+``benchmarks/README.md`` so refactors cannot silently orphan the
+architecture map.
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def dangling_links(md_path: str) -> list[tuple[str, int]]:
+    """(target, line_number) for every link in md_path that does not
+    resolve to an existing file or directory."""
+    base = os.path.dirname(os.path.abspath(md_path))
+    missing = []
+    with open(md_path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                if not os.path.exists(os.path.join(base, path)):
+                    missing.append((target, lineno))
+    return missing
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    bad = 0
+    for md in argv:
+        if not os.path.exists(md):
+            print(f"MISSING DOC: {md}")
+            bad += 1
+            continue
+        missing = dangling_links(md)
+        for target, lineno in missing:
+            print(f"DANGLING: {md}:{lineno}: {target}")
+        bad += len(missing)
+        if not missing:
+            print(f"ok: {md}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
