@@ -102,6 +102,10 @@ def _result_row(name: str, res, wall_s: float) -> dict:
     if present:
         row.update({k: res.raw[k] for k in present},
                    rounds_measured=res.rounds)
+    # structured metrics digest (packed engine only): bucketed latency
+    # percentiles, peak admission backlog, planner-extended breakdown
+    if getattr(res, "metrics", None) is not None:
+        row.update(res.metrics.summary_row())
     return row
 
 
@@ -284,6 +288,10 @@ def record_perf_samples(rows) -> None:
         )
         if "perf_scope" in row:
             sample["perf_scope"] = row["perf_scope"]
+        # bucketed p99 commit latency (rounds) — the tail-latency
+        # trajectory perf_smoke gates regressions on
+        if "p99_rounds" in row:
+            sample["p99_rounds"] = row["p99_rounds"]
         samples[row["name"]] = sample
     save_bench_engine(data)
 

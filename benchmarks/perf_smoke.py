@@ -1,8 +1,11 @@
 """Engine perf smoke: run a small fig13 subset end-to-end on the packed
 [SLOT_F, T] state-matrix engine, record wall seconds +
-simulated-rounds-per-second into ``artifacts/BENCH_engine.json``, and
-fail if throughput regresses more than 3x below the recorded CI
-baseline.
+simulated-rounds-per-second + bucketed p99 commit latency into
+``artifacts/BENCH_engine.json``, and fail if wall-clock throughput
+regresses more than 3x below the recorded CI baseline — or if any
+cell's p99 latency (simulated rounds, from the in-engine histogram)
+grows more than 3x: the latter catches *semantic* tail-latency
+regressions that leave rounds/s unchanged.
 
   PYTHONPATH=src REPRO_BENCH_FAST=1 python -m benchmarks.perf_smoke
   PYTHONPATH=src python -m benchmarks.perf_smoke --reset-baseline
@@ -67,6 +70,8 @@ def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
             aborts_deadlock=res.aborts_deadlock,
             engine_version=ENGINE_VERSION,
         )
+        if res.metrics is not None:
+            out[name]["p99_rounds"] = res.metrics.p99
         if compare_legacy and not eng_kw.get("fragment_exec"):
             # warm-vs-warm: both layouts have compiled runners cached, so
             # the ratio is pure per-round step cost (fragment-mode cells
@@ -132,6 +137,15 @@ def main() -> None:
                 failures.append(
                     f"{name}: {cur['sim_rounds_per_s']:.0f} rounds/s is >"
                     f"{REGRESSION_FACTOR:.0f}x below baseline {base_rps:.0f}"
+                )
+            # tail-latency gate (simulated rounds — deterministic, so any
+            # growth is a semantic change, not timer noise); skipped when
+            # the baseline predates the metrics layer
+            base_p99 = baseline.get(name, {}).get("p99_rounds")
+            if base_p99 and cur.get("p99_rounds", 0) > REGRESSION_FACTOR * base_p99:
+                failures.append(
+                    f"{name}: p99 {cur['p99_rounds']} rounds is >"
+                    f"{REGRESSION_FACTOR:.0f}x above baseline {base_p99}"
                 )
     else:
         data["ci_baseline"] = smoke

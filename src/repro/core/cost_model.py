@@ -236,4 +236,32 @@ def planner_lane_schedule(work_rounds, interval_rounds: int, n_lanes: int):
     return ready, delay
 
 
+def planner_busy_integral(
+    work_rounds, interval_rounds: int, n_lanes: int, horizon: int
+) -> int:
+    """Lane-busy rounds that have *elapsed* by ``horizon`` under the
+    reference schedule: each plan occupies its lane over the span
+    ``[ready - work, ready)``, and only the part of the span before the
+    horizon counts. This is the round-granular oracle for the engine's
+    ``plan_busy_int`` counter (``plan_busy`` charges each whole span at
+    rollover, so its running value can exceed ``n_lanes * r`` — the
+    fig15 >1.0-utilization artifact this integral fixes).
+
+    Spans on one lane never overlap, so the integral is bounded by
+    ``n_lanes * horizon`` — utilization from it is always <= 1:
+
+    >>> planner_busy_integral([10, 10, 10], 5, 1, horizon=25)
+    25
+    >>> planner_busy_integral([10, 10, 10], 5, 1, horizon=1000)
+    30
+    >>> planner_busy_integral([10, 10, 10], 5, 2, horizon=12)
+    19
+    """
+    ready, _ = planner_lane_schedule(work_rounds, interval_rounds, n_lanes)
+    return int(sum(
+        max(min(f, horizon) - min(f - w, horizon), 0)
+        for f, w in zip(ready, work_rounds)
+    ))
+
+
 DEFAULT_COST_MODEL = CostModel()

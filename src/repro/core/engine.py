@@ -100,6 +100,7 @@ from repro.core.lockgrant import (
     lex_order,
     segmented_grant,
 )
+from repro.core.metrics import LAT_BUCKETS, QDEPTH_SAMPLES
 from repro.core.workloads import MODE_READ, MODE_WRITE, Workload
 
 # Phases
@@ -136,12 +137,13 @@ EMPTY, INIT, ACQ, MSG, READY, EXEC, REL, BACKOFF = range(8)
     C_RELEASE_AT,  # round the release (message) lands
     C_WAITED,      # bool: slot was lock-waiting last round
     C_DL_DEBT,     # accumulated deadlock-handling cycles (mod round)
-) = range(16)
-SLOT_F = 16
+    C_ARRIVE,      # arrival round of the loaded txn (metrics: latency)
+) = range(17)
+SLOT_F = 17
 SLOT_COLS = (
     "tid", "widx", "lane_ctr", "ts", "phase", "committing", "busy_until",
     "busy_kind", "kptr", "attempt", "ccptr", "msg_arrive", "msg_stage",
-    "release_at", "waited", "dl_debt",
+    "release_at", "waited", "dl_debt", "arrive",
 )
 
 # Batch-planned engine: a narrower [BATCH_SLOT_F, T] matrix (no lock
@@ -159,11 +161,12 @@ SLOT_COLS = (
     BC_BUSY_KIND,
     BC_MSG_ARRIVE,
     BC_FTXN,
-) = range(8)
-BATCH_SLOT_F = 8
+    BC_ARRIVE,  # arrival round of the loaded unit's epoch (metrics)
+) = range(9)
+BATCH_SLOT_F = 9
 BATCH_SLOT_COLS = (
     "tid", "widx", "ts", "phase", "busy_until", "busy_kind", "msg_arrive",
-    "ftxn",
+    "ftxn", "arrive",
 )
 
 
@@ -365,6 +368,11 @@ class SimResult:
     throughput_txn_s: float
     breakdown: dict[str, float]  # exec-lane time fractions
     raw: dict[str, Any]
+    # structured metrics record (repro.core.metrics.Metrics): latency
+    # histogram + percentiles, queue trajectories, extended breakdown.
+    # None for the legacy-layout oracle engine, which predates the
+    # metrics state.
+    metrics: Any = None
 
 
 def plan_meta(cfg: EngineConfig, plan: planner_lib.Plan) -> PlanMeta:
@@ -392,6 +400,14 @@ def plan_meta(cfg: EngineConfig, plan: planner_lib.Plan) -> PlanMeta:
         num_records=plan.num_records,
         lane_cols=0 if plan.lane_stream is None else plan.lane_stream.shape[1],
     )
+
+
+def qgrid_interval(cfg: EngineConfig) -> int:
+    """Round spacing of the queue-depth sample grid: QDEPTH_SAMPLES
+    points cover (0, max_rounds] for any budget. The spacing is a
+    traced plan scalar, so cells differing only in round budget share
+    one compiled runner and one [QDEPTH_SAMPLES] state shape."""
+    return max(1, -(-cfg.max_rounds // QDEPTH_SAMPLES))
 
 
 def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
@@ -450,6 +466,19 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
             p["epoch_interval"] = np.asarray(
                 cfg.epoch_interval_rounds, np.int32
             )
+        if cfg.epoch_interval_rounds > 0:
+            # cumulative batch sizes in admission units (fragments under
+            # fragment_exec): closed-form arrived-unit counts at any
+            # round for the backlog samples (epoch g arrives whole at
+            # round g * interval; the workload wraps modulo NB)
+            usz = (
+                sched.batch_fsize if cfg.fragment_exec
+                else sched.batch_size
+            )
+            p["cum_usize"] = np.concatenate(
+                [[0], np.cumsum(usz)]
+            ).astype(np.int32)
+        p["qgrid_iv"] = np.asarray(qgrid_interval(cfg), np.int32)
         return p
     keys = np.asarray(plan.keys, np.int32)
     modes = np.asarray(plan.modes, np.int32)
@@ -485,6 +514,11 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
             (np.arange(n, dtype=np.int64) // b) * iv
         ).astype(np.int32)
         p["arrive_cycle"] = np.asarray(-(-n // b) * iv, np.int32)
+        # epoch size / interval as traced scalars: closed-form
+        # arrived-txn counts at any round for the backlog samples
+        p["epoch_txns"] = np.asarray(b, np.int32)
+        p["epoch_interval"] = np.asarray(iv, np.int32)
+    p["qgrid_iv"] = np.asarray(qgrid_interval(cfg), np.int32)
     return p
 
 
@@ -521,6 +555,11 @@ def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
         wasted=jnp.zeros((), i32),
         cat=jnp.zeros((NCAT,), jnp.int32),
         steps=jnp.zeros((), i32),
+        # metrics: log-bucketed commit-latency histogram + queue-depth
+        # samples on the fixed round grid (see repro.core.metrics)
+        lat_hist=jnp.zeros((LAT_BUCKETS,), i32),
+        q_depth=jnp.zeros((QDEPTH_SAMPLES,), i32),
+        q_inflight=jnp.zeros((QDEPTH_SAMPLES,), i32),
     )
     if cfg.protocol != "orthrus":
         # carried per-record same-round contention sums (see stage 9 of
@@ -578,6 +617,11 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
     slot_ids = jnp.arange(T, dtype=jnp.int32)
     kk = jnp.arange(K, dtype=jnp.int32)
     i32 = jnp.int32
+    # metrics: powers of two for the log-bucket index (integer compare
+    # count — exact, so dense/leap and vmap/serial agree bit-for-bit),
+    # and the queue-depth sample grid positions
+    lat_pow2 = jnp.asarray([1 << k for k in range(LAT_BUCKETS - 1)], i32)
+    qgrid_pos = jnp.arange(QDEPTH_SAMPLES, dtype=i32) + 1
 
     lock_op_cycles = (
         cm.partition_lock_cycles
@@ -624,6 +668,7 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         release_at = sl[C_RELEASE_AT]
         waited = sl[C_WAITED] != 0
         dl_debt = sl[C_DL_DEBT]
+        arrive = sl[C_ARRIVE]
 
         free = busy_until <= r
 
@@ -662,6 +707,11 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         widx = jnp.where(adm, new_widx, widx)
         tid = jnp.where(adm, new_tid, tid)
         ts = jnp.where(adm, new_tid, ts)
+        # metrics: stamp the txn's arrival round — its epoch arrival
+        # under open arrival (latency then includes queueing delay), the
+        # admission round under closed loop. Retries keep the stamp, so
+        # latency spans aborts end-to-end.
+        arrive = jnp.where(adm, arr_t if open_arrival else r, arrive)
         attempt = jnp.where(adm, 0, jnp.where(retry, attempt + 1, attempt))
         # per-slot workload columns for the loaded txns (the scalar
         # per-txn fields ride one fused [N, 4] gather)
@@ -1199,6 +1249,16 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         )
         com = rel_done_all & committing
         s["commits"] = s["commits"] + com.sum(dtype=jnp.int32)
+        # metrics: commit-latency histogram (log-bucketed; bucket = count
+        # of powers of two <= latency). Commits only happen at executed
+        # rounds, so the scatter is bit-identical under event leaping.
+        lat = r - arrive
+        lat_b = jnp.sum(
+            lat[:, None] >= lat_pow2[None, :], axis=1, dtype=jnp.int32
+        )
+        s["lat_hist"] = s["lat_hist"].at[
+            jnp.where(com, lat_b, LAT_BUCKETS)
+        ].add(1, mode="drop")
         phase = jnp.where(
             rel_done_all, jnp.where(committing, EMPTY, BACKOFF), phase
         )
@@ -1336,10 +1396,31 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         s["cat"] = s["cat"] + cat_counts * leap
         s["steps"] = s["steps"] + 1
         s["r"] = nxt
+        # metrics: queue samples at every grid point in (r, nxt]. The
+        # post-transition slot state persists unchanged through a leap
+        # gap and arrivals are closed-form in the round, so each grid
+        # point observes exactly what the dense loop would record.
+        qgrid = qgrid_pos * p["qgrid_iv"]
+        qm = (qgrid > r) & (qgrid <= nxt)
+        s["q_inflight"] = jnp.where(
+            qm, (tid >= 0).sum(dtype=i32), s["q_inflight"]
+        )
+        if open_arrival:
+            # arrived(x) = full workload cycles + whole epochs within
+            # the cycle (epoch e of a cycle = epoch_txns txns arriving
+            # at e * epoch_interval), capped at N per cycle
+            cyc = p["arrive_cycle"]
+            arrived = (qgrid // cyc) * N + jnp.minimum(
+                (qgrid % cyc // p["epoch_interval"] + 1) * p["epoch_txns"],
+                N,
+            )
+            s["q_depth"] = jnp.where(
+                qm, jnp.maximum(arrived - s["next_txn"], 0), s["q_depth"]
+            )
         s["slots"] = jnp.stack(
             [tid, widx, lane_ctr, ts, phase, committing.astype(i32),
              busy_until, busy_kind, kptr, attempt, ccptr, msg_arrive,
-             msg_stage, release_at, waited.astype(i32), dl_debt],
+             msg_stage, release_at, waited.astype(i32), dl_debt, arrive],
             axis=0,
         )
         return s
@@ -1415,6 +1496,11 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         wasted=jnp.zeros((), i32),
         cat=jnp.zeros((NCAT,), i32),
         steps=jnp.zeros((), i32),
+        # metrics: log-bucketed commit-latency histogram + queue-depth
+        # samples on the fixed round grid (see repro.core.metrics)
+        lat_hist=jnp.zeros((LAT_BUCKETS,), i32),
+        q_depth=jnp.zeros((QDEPTH_SAMPLES,), i32),
+        q_inflight=jnp.zeros((QDEPTH_SAMPLES,), i32),
     )
     if cfg.fragment_exec:
         # done flags live at fragment granularity; the commit barrier
@@ -1442,6 +1528,12 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         )
         s["plan_busy"] = jnp.asarray(ready0, i32)  # lane-busy rounds
         s["plan_qdelay"] = jnp.zeros((), i32)  # plan-queue wait rounds
+        # round-granular lane-busy integral (fig15 utilization): each
+        # lane's live planning span is [lane_start, lane_free); batch
+        # 0's span [0, ready0) on lane 0 accrues per elapsed round
+        s["lane_start"] = jnp.zeros((cfg.n_planner_lanes,), i32)
+        s["pb_span"] = jnp.zeros((2,), i32)  # replaced-span remainder
+        s["plan_busy_int"] = jnp.zeros((), i32)
     return s
 
 
@@ -1497,6 +1589,10 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         return (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
     exec_rounds_one = rounds_of(exec_cycles_per_op)
     imax = jnp.iinfo(jnp.int32).max
+    i32 = jnp.int32
+    # metrics closure constants (see make_step)
+    lat_pow2 = jnp.asarray([1 << k for k in range(LAT_BUCKETS - 1)], i32)
+    qgrid_pos = jnp.arange(QDEPTH_SAMPLES, dtype=i32) + 1
 
     def step(p, s, r_end):
         r = s["r"]
@@ -1527,6 +1623,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         busy_kind = sl[BC_BUSY_KIND]
         msg_arrive = sl[BC_MSG_ARRIVE]
         ftxn = sl[BC_FTXN]
+        arrive = sl[BC_ARRIVE]
 
         # -------------------------------------------- 1. batch rollover
         # When every transaction of the current batch has committed, open
@@ -1583,6 +1680,34 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             )
             s["plan_busy"] = s["plan_busy"] + jnp.where(
                 adv, p["plan_work"][new_b], 0
+            )
+            # Round-granular lane-busy integral. The schedule is
+            # evaluated lazily at rollover, so the new span
+            # [start_new, ready) may already be partly (or wholly) in
+            # the past: credit its elapsed part now — never its future
+            # part, which the per-step overlap accumulation (stage 8)
+            # picks up as rounds elapse, keeping the integral <= L * r
+            # at every instant (the fig15 >1.0-utilization fix). The
+            # replaced span's unelapsed remainder is parked in the
+            # pb_span carry; a carry overwritten while it still has a
+            # remainder undercounts, which needs a plan to outlive L
+            # subsequent batch executions (not observed in practice).
+            start_new = jnp.maximum(arrive_new, lane_free_prev)
+            elapsed_part = jnp.maximum(
+                jnp.minimum(ready, r) - start_new, 0
+            )
+            s["plan_busy_int"] = s["plan_busy_int"] + jnp.where(
+                adv, elapsed_part, 0
+            )
+            old_start = s["lane_start"][lane]
+            keep_old = adv & (lane_free_prev > r)
+            s["pb_span"] = jnp.where(
+                keep_old,
+                jnp.stack([jnp.maximum(old_start, r), lane_free_prev]),
+                s["pb_span"],
+            )
+            s["lane_start"] = s["lane_start"].at[lane].set(
+                jnp.where(adv, start_new, old_start)
             )
             s["lane_free"] = s["lane_free"].at[lane].set(
                 jnp.where(adv, ready, lane_free_prev)
@@ -1657,6 +1782,20 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         new_tid = s["next_txn"] + rank
         tid = jnp.where(adm, new_tid, tid)
         ts = jnp.where(adm, new_tid, ts)
+        # metrics: stamp the unit's arrival round — its epoch's arrival
+        # under open arrival (pipelined early admissions belong to the
+        # *next* epoch), the admission round under closed loop
+        if open_arrival:
+            arr_cur = s["epoch_ctr"] * interval
+            if pipe:
+                arr_new = jnp.where(
+                    adm_pipe, arr_cur + interval, arr_cur
+                )
+            else:
+                arr_new = arr_cur
+            arrive = jnp.where(adm, arr_new, arrive)
+        else:
+            arrive = jnp.where(adm, r, arrive)
         s["next_txn"] = s["next_txn"] + n_adm
         if frag:
             ftxn = jnp.where(
@@ -1758,6 +1897,17 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             ncom = fin.sum(dtype=jnp.int32)
             s["batch_left"] = s["batch_left"] - ncom
         s["commits"] = s["commits"] + ncom
+        # metrics: commit-latency histogram (see make_step). In fragment
+        # mode the committing slot is the one whose fragment completed
+        # the txn, so its latency spans arrival -> last-fragment-done.
+        com_mask = com if frag else fin
+        lat = r - arrive
+        lat_b = jnp.sum(
+            lat[:, None] >= lat_pow2[None, :], axis=1, dtype=jnp.int32
+        )
+        s["lat_hist"] = s["lat_hist"].at[
+            jnp.where(com_mask, lat_b, LAT_BUCKETS)
+        ].add(1, mode="drop")
         phase = jnp.where(fin, EMPTY, phase)
         tid = jnp.where(fin, -1, tid)
 
@@ -1856,8 +2006,42 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         s["cat"] = s["cat"] + cat_counts * leap
         s["steps"] = s["steps"] + 1
         s["r"] = nxt
+        if planner_model:
+            # round-granular planner-busy: overlap of each lane's live
+            # span (and the carry span) with the elapsed window [r, nxt)
+            # — spans only move at rollovers, which are always executed
+            # rounds, so the sum is bit-identical under event leaping
+            acc = jnp.maximum(
+                jnp.minimum(s["lane_free"], nxt)
+                - jnp.maximum(s["lane_start"], r),
+                0,
+            ).sum(dtype=i32)
+            acc = acc + jnp.maximum(
+                jnp.minimum(s["pb_span"][1], nxt)
+                - jnp.maximum(s["pb_span"][0], r),
+                0,
+            )
+            s["plan_busy_int"] = s["plan_busy_int"] + acc
+        # metrics: queue samples at every grid point in (r, nxt] (see
+        # make_step — post-transition state persists through the gap,
+        # and epoch arrivals are closed-form in the round)
+        qgrid = qgrid_pos * p["qgrid_iv"]
+        qm = (qgrid > r) & (qgrid <= nxt)
+        s["q_inflight"] = jnp.where(
+            qm, (tid >= 0).sum(dtype=i32), s["q_inflight"]
+        )
+        if open_arrival:
+            # backlog in admission units (fragments under frag mode, to
+            # match next_txn's granularity): epochs 0..x//interval have
+            # arrived at grid point x
+            n_arr = qgrid // interval + 1
+            arrived = (n_arr // NB) * NU + p["cum_usize"][n_arr % NB]
+            s["q_depth"] = jnp.where(
+                qm, jnp.maximum(arrived - s["next_txn"], 0), s["q_depth"]
+            )
         s["slots"] = jnp.stack(
-            [tid, widx, ts, phase, busy_until, busy_kind, msg_arrive, ftxn],
+            [tid, widx, ts, phase, busy_until, busy_kind, msg_arrive, ftxn,
+             arrive],
             axis=0,
         )
         return s

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as engine_lib
+from repro.core import metrics as metrics_lib
 from repro.core.engine import EngineConfig, NCAT, PlanMeta, SimResult
 from repro.core.workloads import Workload
 
@@ -77,11 +78,27 @@ _SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps"
 #   pipe_adm / pipe_commits — inter-batch pipelined admission: traffic
 #     that ran ahead of the batch barrier (per-batch accounting split);
 #   plan_busy / plan_qdelay / epoch_ctr — planner-lane throughput model:
-#     lane-busy planning rounds (utilization = plan_busy / (L * rounds)),
-#     rounds batch plans spent queued behind busy lanes, and batches
-#     planned. ``epoch_ctr`` also appears under open epoch arrival alone.
+#     lane-busy planning rounds (amortized: a batch's whole work span is
+#     charged at rollover), rounds batch plans spent queued behind busy
+#     lanes, and batches planned. ``epoch_ctr`` also appears under open
+#     epoch arrival alone.
+#   plan_busy_int — round-granular lane-busy integral: only rounds that
+#     have actually elapsed count, so utilization
+#     plan_busy_int / (L * rounds) never transiently exceeds 1 (the
+#     fig15 fix; plan_busy keeps the amortized semantics the planner
+#     oracle tests pin).
 _OPT_SCALARS = (
     "pipe_adm", "pipe_commits", "plan_busy", "plan_qdelay", "epoch_ctr",
+    "plan_busy_int",
+)
+
+# Metrics counter arrays carried by the packed engine (the legacy-layout
+# oracle predates them): cumulative latency histogram, point-sampled
+# queue trajectories (see repro.core.metrics).
+_METRIC_ARRAYS = (
+    ("lat_hist", metrics_lib.LAT_BUCKETS),
+    ("q_depth", metrics_lib.QDEPTH_SAMPLES),
+    ("q_inflight", metrics_lib.QDEPTH_SAMPLES),
 )
 
 
@@ -140,6 +157,9 @@ def _read_counters(state, n: int) -> dict[str, np.ndarray]:
         if k in state:
             out[k] = np.atleast_1d(np.asarray(state[k]))
     out["cat"] = np.asarray(state["cat"]).reshape(n, NCAT)
+    for k, width in _METRIC_ARRAYS:
+        if k in state:
+            out[k] = np.asarray(state[k]).reshape(n, width)
     return out
 
 
@@ -239,6 +259,29 @@ def simulate_plans(
         breakdown = {
             nm: float(cat[k]) / total_lane_rounds for k, nm in enumerate(names)
         }
+        met = None
+        if "lat_hist" in snap:
+            # histogram counters are cumulative (warmup-subtracted);
+            # queue samples are point-in-time (grid points past the
+            # capture round stay zero)
+            hist = snap["lat_hist"].astype(np.int64) - np.asarray(
+                wsnap.get("lat_hist", 0)
+            ).astype(np.int64)
+            qiv = engine_lib.qgrid_interval(cfg)
+            qgrid = (
+                np.arange(metrics_lib.QDEPTH_SAMPLES, dtype=np.int64) + 1
+            ) * qiv
+            met = metrics_lib.build_metrics(
+                lat_hist=hist,
+                q_depth=snap["q_depth"],
+                q_inflight=snap["q_inflight"],
+                q_grid=qgrid,
+                breakdown=breakdown,
+                exec_lane_rounds=total_lane_rounds,
+                plan_busy_rounds=int(snap.get("plan_busy_int", 0))
+                - int(np.asarray(wsnap.get("plan_busy_int", 0))),
+                plan_lane_rounds=cfg.n_planner_lanes * meas_rounds,
+            )
         results.append(
             SimResult(
                 commits=commits,
@@ -265,6 +308,7 @@ def simulate_plans(
                         if k in snap
                     },
                 ),
+                metrics=met,
             )
         )
     return results

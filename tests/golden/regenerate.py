@@ -77,14 +77,32 @@ CELLS = {
              batch_epoch=128, seed=0),
         dict(protocol="dgcc", n_cc=2, n_exec=16, window=2,
              n_planner_lanes=1, epoch_interval_rounds=20)),
+    # Open-loop *overload* cell (METRICS_CELLS): 64-txn epochs every
+    # 150 rounds offer ~4x this cell's capacity, so the commit-latency
+    # histogram spans the queueing regime and the admission-backlog
+    # trajectory grows through the whole run — the metrics layer's
+    # counters are pinned bit-exactly here.
+    "deadlock_free_overload": (
+        dict(kind="ycsb", num_txns=512, num_records=10_000, num_hot=8,
+             batch_epoch=64, seed=0),
+        dict(protocol="deadlock_free", n_exec=8,
+             epoch_interval_rounds=150)),
 }
 
+# Cells whose fingerprint additionally pins the metrics layer (latency
+# histogram, queue trajectories, bucketed percentiles). Opt-in by name:
+# the metrics arrays exist on every packed-engine run, but adding them
+# to fingerprints generated before the metrics layer would break those
+# fixtures byte-wise for no coverage gain.
+METRICS_CELLS = {"deadlock_free_overload"}
 
-def fingerprint(res) -> dict:
+
+def fingerprint(res, include_metrics: bool = False) -> dict:
     """Everything the engine reports except wall-clock measurements.
 
-    Planner-lane counters are included only when the model is on, so
-    fixtures generated before the model exist byte-identically."""
+    Planner-lane counters are included only when the model is on, and
+    metrics-layer counters only for :data:`METRICS_CELLS`, so fixtures
+    generated before either feature existed replay byte-identically."""
     fp = dict(
         commits=res.commits,
         aborts_deadlock=res.aborts_deadlock,
@@ -101,6 +119,14 @@ def fingerprint(res) -> dict:
     for k in ("plan_busy", "plan_qdelay", "epoch_ctr"):
         if k in res.raw:
             fp[k] = res.raw[k]
+    if include_metrics and res.metrics is not None:
+        m = res.metrics
+        fp["lat_hist"] = [int(x) for x in m.lat_hist]
+        fp["q_depth"] = [int(x) for x in m.q_depth]
+        fp["q_inflight"] = [int(x) for x in m.q_inflight]
+        fp["p50_rounds"] = m.p50
+        fp["p99_rounds"] = m.p99
+        fp["p999_rounds"] = m.p999
     return fp
 
 
@@ -115,7 +141,8 @@ def run_cell(name: str) -> dict:
         workload=wl_kw,
         engine=eng_kw,
         sim=SIM,
-        trace=fingerprint(run_simulation(cfg, wl)),
+        trace=fingerprint(run_simulation(cfg, wl),
+                          include_metrics=name in METRICS_CELLS),
     )
 
 

@@ -23,7 +23,8 @@ import pytest
 
 from hypothesis_compat import given, settings, st
 from repro.core import engine as engine_lib
-from repro.core.cost_model import planner_lane_schedule
+from repro.core.cost_model import (planner_busy_integral,
+                                   planner_lane_schedule)
 from repro.core.engine import EngineConfig, run_simulation
 from repro.core.workloads import WorkloadConfig, make_workload
 
@@ -124,6 +125,33 @@ def test_engine_counters_match_oracle(ycsb_batched, protocol, n_lanes,
     assert res.raw["plan_busy"] == sum(work_seq)
     assert res.raw["plan_qdelay"] == sum(delay)
     assert res.commits > 0
+
+
+@pytest.mark.parametrize("protocol", sorted(BATCH_KW))
+@pytest.mark.parametrize("n_lanes,interval", [(1, 0), (1, 40), (2, 25)])
+def test_busy_integral_matches_oracle(ycsb_batched, protocol, n_lanes,
+                                      interval):
+    """``plan_busy_int`` — the round-granular lane-busy *integral* that
+    fig15 divides by ``lanes * rounds`` for utilization — must equal the
+    host oracle's integral clamped to the simulated horizon. Unlike
+    ``plan_busy`` (work amortized to the batch that caused it, so a plan
+    spanning the end of the run counts in full), the integral only
+    counts busy-rounds that actually elapsed, which is what bounds
+    utilization by 1.0."""
+    cfg = EngineConfig(protocol=protocol, n_planner_lanes=n_lanes,
+                       epoch_interval_rounds=interval,
+                       **BATCH_KW[protocol], **SIM)
+    res = run_simulation(cfg, ycsb_batched)
+    plan = engine_lib.make_plan(cfg, ycsb_batched)
+    work = engine_lib._planner_work_rounds(cfg, plan)
+    n_planned = res.raw["epoch_ctr"] + 1
+    work_seq = [int(work[g % len(work)]) for g in range(n_planned)]
+    horizon = res.raw["rounds_total"]
+    assert res.raw["plan_busy_int"] == planner_busy_integral(
+        work_seq, interval, n_lanes, horizon
+    )
+    # the utilization fig15 plots from this counter is a true fraction
+    assert 0 <= res.raw["plan_busy_int"] <= n_lanes * horizon
 
 
 def test_planner_work_scales_with_conflict_graph(ycsb_batched):

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Dense per-round replay of one engine cell + Chrome trace export.
+
+Two consumers:
+
+  * ``tests/test_metrics.py`` — :func:`replay_dense` re-runs a cell one
+    round at a time (the compiled chunk runner invoked with
+    ``r_end = r + 1``, so event leaps clamp to single rounds) and
+    :func:`txn_events` recovers every transaction's exact
+    ``(tid, arrive_round, commit_round)`` from consecutive slot-matrix
+    snapshots. That is the host-side latency oracle: per-txn latencies
+    computed from observed state transitions, independent of the
+    engine's carried histogram, pin the in-round log-bucket scatter and
+    the host-side percentile extraction.
+  * ``chrome://tracing`` / Perfetto — :func:`chrome_trace` turns the
+    same snapshots into trace-event JSON: one duration event per
+    (slot, transaction, phase) span plus an in-flight counter track, so
+    individual grant/wait/abort/commit timelines are inspectable.
+
+Commit detection (non-batch slot layout): a committing slot releases to
+EMPTY with ``tid = -1`` at the end of its commit round, and admission
+(stage 1 of the round) can never refill a slot in the same round it
+commits, so a commit is exactly a snapshot-to-snapshot transition from
+``tid >= 0`` to a different tid. The commit round is the round the step
+executed (the earlier snapshot's ``r``), matching the engine's
+``lat = r - arrive`` convention. Batch-planned cells interleave
+fragment rows and are not supported by the event extractor.
+
+Usage:
+    PYTHONPATH=src python tools/trace_export.py --protocol deadlock_free \
+        --num-txns 512 --num-hot 16 --rounds 1500 --out /tmp/trace.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+PHASE_NAMES = (
+    "empty", "init", "acq", "msg", "ready", "exec", "rel", "backoff",
+)
+
+
+def replay_dense(cfg, workload):
+    """Run ``cfg`` on ``workload`` one round at a time.
+
+    Returns ``(snaps, state)`` where ``snaps[i]`` is the [SLOT_F, T]
+    slot matrix after ``i`` rounds (``snaps[0]`` is the initial state)
+    and ``state`` is the final engine state dict (numpy views of the
+    carried counters included). Uses the same compiled chunk runner as
+    the sweep driver — only the chunk bound differs — so the replayed
+    trajectory is bit-identical to a normal run's.
+    """
+    from repro.core import engine as engine_lib
+    from repro.core import sweep as sweep_lib
+
+    plan = engine_lib.make_plan(cfg, workload)
+    meta = engine_lib.plan_meta(cfg, plan)
+    p = engine_lib.plan_device(cfg, plan)
+    mod = sweep_lib._step_module(cfg)
+    if cfg.is_batch_planned:
+        state = mod._batch_state0(cfg, plan, cfg.n_slots)
+    else:
+        state = mod._state0(cfg, plan.num_records, cfg.n_slots, meta.max_keys)
+    runner = sweep_lib.get_runner(cfg, meta, batched=False)
+
+    snaps = [np.asarray(state["slots"])]
+    import jax.numpy as jnp
+
+    for r in range(cfg.max_rounds):
+        state = runner(p, state, jnp.asarray(r + 1, jnp.int32))
+        snaps.append(np.asarray(state["slots"]))
+    return snaps, {k: np.asarray(v) for k, v in state.items()}
+
+
+def txn_events(snaps) -> list[tuple[int, int, int]]:
+    """Exact per-txn ``(tid, arrive_round, commit_round)`` events from
+    dense snapshots of a *non-batch* cell (see module docstring)."""
+    from repro.core.engine import C_ARRIVE, C_TID
+
+    events = []
+    for r in range(len(snaps) - 1):
+        prev, cur = snaps[r], snaps[r + 1]
+        com = (prev[C_TID] >= 0) & (cur[C_TID] != prev[C_TID])
+        for t in np.nonzero(com)[0]:
+            events.append(
+                (int(prev[C_TID, t]), int(prev[C_ARRIVE, t]), r)
+            )
+    return events
+
+
+def chrome_trace(snaps, cfg) -> list[dict]:
+    """Trace-event JSON records (Chrome ``chrome://tracing`` / Perfetto
+    format) for the replayed cell: per-slot phase spans + an in-flight
+    counter. Timestamps are microseconds of simulated time."""
+    from repro.core.engine import C_PHASE, C_TID
+
+    us = cfg.cost.round_seconds * 1e6
+    T = snaps[0].shape[1]
+    events = []
+    # coalesce consecutive rounds with unchanged (tid, phase) per slot
+    for slot in range(T):
+        start, cur_tid, cur_ph = 0, int(snaps[0][C_TID, slot]), int(
+            snaps[0][C_PHASE, slot]
+        )
+        for r in range(1, len(snaps) + 1):
+            nxt = (
+                (int(snaps[r][C_TID, slot]), int(snaps[r][C_PHASE, slot]))
+                if r < len(snaps)
+                else None
+            )
+            if nxt == (cur_tid, cur_ph):
+                continue
+            if cur_tid >= 0:
+                events.append(dict(
+                    name=f"txn{cur_tid}:{PHASE_NAMES[cur_ph]}",
+                    cat="slot", ph="X", pid=0, tid=slot,
+                    ts=round(start * us, 3),
+                    dur=round((r - start) * us, 3),
+                    args=dict(txn=cur_tid, phase=PHASE_NAMES[cur_ph],
+                              rounds=r - start),
+                ))
+            if nxt is None:
+                break
+            start, (cur_tid, cur_ph) = r, nxt
+    for r, snap in enumerate(snaps):
+        events.append(dict(
+            name="inflight", ph="C", pid=0, ts=round(r * us, 3),
+            args=dict(inflight=int((snap[C_TID] >= 0).sum())),
+        ))
+    return events
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--protocol", default="deadlock_free")
+    ap.add_argument("--num-txns", type=int, default=512)
+    ap.add_argument("--num-hot", type=int, default=16)
+    ap.add_argument("--num-records", type=int, default=10_000)
+    ap.add_argument("--n-exec", type=int, default=8)
+    ap.add_argument("--window", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=1500)
+    ap.add_argument("--epoch-interval-rounds", type=int, default=0)
+    ap.add_argument("--out", default="trace.json")
+    args = ap.parse_args(argv)
+
+    from repro.core.engine import EngineConfig
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    wl = make_workload(WorkloadConfig(
+        kind="ycsb", num_txns=args.num_txns, num_records=args.num_records,
+        num_hot=args.num_hot, seed=0,
+    ))
+    cfg = EngineConfig(
+        protocol=args.protocol, n_exec=args.n_exec, window=args.window,
+        epoch_interval_rounds=args.epoch_interval_rounds,
+        max_rounds=args.rounds, warmup_rounds=0, chunk_rounds=args.rounds,
+        target_commits=10**9,
+    )
+    snaps, _state = replay_dense(cfg, wl)
+    events = chrome_trace(snaps, cfg)
+    with open(args.out, "w") as f:
+        json.dump(dict(traceEvents=events, displayTimeUnit="ms"), f)
+    n_commits = len(txn_events(snaps)) if not cfg.is_batch_planned else -1
+    print(f"{args.out}: {len(events)} events, {n_commits} commits, "
+          f"{args.rounds} rounds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
