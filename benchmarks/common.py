@@ -214,9 +214,10 @@ def run_cells(cells: list[tuple]) -> dict[str, dict]:
             (name, dict(wl_cfg.__dict__), dict(eng_kw))
         )
     # heaviest groups first so the pool drains evenly
-    weight = lambda g: -sum(
-        int(c[2].get("n_exec", 1)) * int(c[2].get("window", 1)) for c in g
-    )
+    def weight(g):
+        return -sum(
+            int(c[2].get("n_exec", 1)) * int(c[2].get("window", 1)) for c in g
+        )
     payloads = [
         (SIM, grp) for grp in sorted(groups.values(), key=weight)
     ]

@@ -880,6 +880,165 @@ def fig16_latency_vs_load():
     return rows, claims
 
 
+def fig17_graceful_degradation():
+    """Graceful degradation under overload: admission control turns the
+    open-system hockey-stick into a bounded-tail plateau.
+
+    The load axis re-runs fig16's high-contention lane (deadlock_free,
+    40 lanes, hot=16) from below the capacity knee (~190 k txn/s) to
+    ~6x past it, once per admission policy. Without a policy the
+    backlog and p99 are queue-bound and diverge with the horizon; a
+    bounded backlog drops the excess on arrival (backlog <= cap, tail
+    set by cap x service rate), deadline shedding drops stale waiters
+    (tail set by the deadline), and a token bucket pins the admission
+    rate itself. All policies are invisible below the knee. Two burst
+    lanes replay the mid load with the same *average* rate compressed
+    4x into periodic bursts. A closed-loop wait-die pair shows bounded
+    exponential backoff beating fixed backoff under high contention
+    (fewer abort storms, more committed work).
+
+    Percentiles are log-2 bucketed (lower-edge reporting); tail claims
+    compare across buckets. Drop counters (`rejected`/`shed`) and the
+    goodput split are the engine's carried counters, pinned against
+    host oracles in tests/test_overload.py.
+    """
+    intervals = (3200, 800, 200)  # below knee / past knee / 6x past
+    slow, mid, fast = intervals
+    cap, deadline = 64, 1000
+    base = dict(**YCSB, batch_epoch=64, num_hot=16)
+    policies = {
+        "none": {},
+        "bounded_backlog": dict(admission_policy="bounded_backlog",
+                                backlog_cap=cap),
+        "token_bucket": dict(admission_policy="token_bucket",
+                             token_interval_rounds=30, token_burst=64),
+        "deadline_shed": dict(admission_policy="deadline_shed",
+                              deadline_rounds=deadline),
+    }
+    burst_kw = dict(arrival_pattern="burst", burst_period_epochs=4,
+                    burst_on_epochs=1)
+    eng = dict(protocol="deadlock_free", n_exec=40)
+    cells = [
+        (
+            f"fig17_i{iv}_{nm}",
+            WorkloadConfig(**base),
+            dict(eng, epoch_interval_rounds=iv, **kw),
+        )
+        for iv in intervals for nm, kw in policies.items()
+    ]
+    cells += [
+        (f"fig17_burst_i{mid}_{nm}", WorkloadConfig(**base),
+         dict(eng, epoch_interval_rounds=mid, **policies[nm], **burst_kw))
+        for nm in ("none", "deadline_shed")
+    ]
+    # closed-loop backoff pair (wait-die aborts; the open lane above is
+    # deadlock-free and never aborts)
+    cells += [
+        (f"fig17_backoff_h{hot}_{bo}",
+         WorkloadConfig(**YCSB, num_hot=hot),
+         dict(protocol="twopl_waitdie", n_exec=40, **bo_kw))
+        for hot in (16, 64)
+        for bo, bo_kw in (
+            ("fixed", {}),
+            ("exp", dict(backoff_mode="exp", backoff_max_rounds=4096)),
+        )
+    ]
+    res = run_cells(cells)
+
+    rows = [("fig", "lane", "interval", "policy", "throughput_txn_s",
+             "p99_rounds", "backlog_max", "offered", "admitted",
+             "committed", "rejected", "shed", "goodput_frac")]
+    thr, p99, blog, rej, shed = {}, {}, {}, {}, {}
+    for iv in intervals:
+        for nm in policies:
+            r = res[f"fig17_i{iv}_{nm}"]
+            k = (iv, nm)
+            thr[k], p99[k] = r["throughput_txn_s"], r["p99_rounds"]
+            blog[k] = r["backlog_max"]
+            rej[k], shed[k] = r["rejected"], r["shed"]
+            rows.append(("fig17", "load", iv, nm, round(thr[k]), p99[k],
+                         blog[k], r["offered"], r["admitted"],
+                         r["committed"], rej[k], shed[k],
+                         r["goodput_frac"]))
+    bst = {}
+    for nm in ("none", "deadline_shed"):
+        r = res[f"fig17_burst_i{mid}_{nm}"]
+        bst[nm] = r
+        rows.append(("fig17", "burst", mid, nm,
+                     round(r["throughput_txn_s"]), r["p99_rounds"],
+                     r["backlog_max"], r["offered"], r["admitted"],
+                     r["committed"], r["rejected"], r["shed"],
+                     r["goodput_frac"]))
+    bo = {}
+    for hot in (16, 64):
+        for mode in ("fixed", "exp"):
+            r = res[f"fig17_backoff_h{hot}_{mode}"]
+            bo[(hot, mode)] = r
+            rows.append(("fig17", "backoff", 0, f"h{hot}_{mode}",
+                         round(r["throughput_txn_s"]), r["p99_rounds"],
+                         r["backlog_max"], 0, 0, r["commits"],
+                         r["aborts_deadlock"], 0, 1.0))
+
+    pols = [nm for nm in policies if nm != "none"]
+    bounded = ("bounded_backlog", "deadline_shed")
+    claims = [
+        (
+            "admission policies are invisible below the knee: no drops "
+            "and committed throughput within 2% of the no-policy lane",
+            all(rej[(slow, nm)] + shed[(slow, nm)] == 0
+                and abs(thr[(slow, nm)] - thr[(slow, "none")])
+                <= 0.02 * thr[(slow, "none")]
+                for nm in pols),
+        ),
+        (
+            "graceful degradation: past the knee every policy's "
+            "committed throughput plateaus (6x the post-knee load "
+            "keeps >= 80% of it) while the drop counters absorb the "
+            "excess",
+            all(thr[(fast, nm)] >= 0.8 * thr[(mid, nm)] for nm in pols)
+            and all(rej[(fast, nm)] + shed[(fast, nm)]
+                    > 4 * (rej[(mid, nm)] + shed[(mid, nm)])
+                    for nm in bounded),
+        ),
+        (
+            "without admission control overload p99 diverges "
+            "(queue-bound, >=4x from below-knee); backlog caps and "
+            "deadlines keep it at least one log-2 bucket lower",
+            p99[(fast, "none")] >= 4 * max(p99[(slow, "none")], 1)
+            and all(2 * p99[(fast, nm)] <= p99[(fast, "none")]
+                    for nm in bounded),
+        ),
+        (
+            "the backlog bound holds: peak sampled backlog <= cap + "
+            "one in-flight epoch burst, vs an unbounded queue >=8x "
+            "larger without a policy",
+            blog[(fast, "bounded_backlog")] <= cap + 64
+            and blog[(fast, "none")]
+            >= 8 * blog[(fast, "bounded_backlog")],
+        ),
+        (
+            "4x-compressed arrival bursts at the same average load "
+            "inflate the uncontrolled backlog; deadline shedding holds "
+            "the burst-lane p99 a bucket under the uncontrolled one",
+            bst["none"]["backlog_max"] > blog[(mid, "none")]
+            and 2 * bst["deadline_shed"]["p99_rounds"]
+            <= bst["none"]["p99_rounds"],
+        ),
+        (
+            "bounded exponential backoff beats fixed backoff under "
+            "high contention (>=20% more committed work, <1/4 the "
+            "aborts) and never hurts at moderate contention",
+            bo[(16, "exp")]["throughput_txn_s"]
+            >= 1.2 * bo[(16, "fixed")]["throughput_txn_s"]
+            and 4 * bo[(16, "exp")]["aborts_deadlock"]
+            < bo[(16, "fixed")]["aborts_deadlock"]
+            and bo[(64, "exp")]["throughput_txn_s"]
+            >= 0.95 * bo[(64, "fixed")]["throughput_txn_s"],
+        ),
+    ]
+    return rows, claims
+
+
 ALL_FIGURES = [
     fig1_readonly_scaling,
     fig4_deadlock_overhead,
@@ -895,4 +1054,5 @@ ALL_FIGURES = [
     fig14_fragment_granularity,
     fig15_planner_saturation,
     fig16_latency_vs_load,
+    fig17_graceful_degradation,
 ]

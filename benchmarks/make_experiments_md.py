@@ -170,7 +170,7 @@ def figures_section(out):
                     "artifacts/bench_figures.txt`)\n")
         return
     txt = open(path).read()
-    claims = [l for l in txt.splitlines() if l.startswith("CLAIM,")]
+    claims = [ln for ln in txt.splitlines() if ln.startswith("CLAIM,")]
     n_pass = sum(1 for c in claims if c.startswith("CLAIM,PASS"))
     out.append(
         f"`python -m benchmarks.run` validates **{n_pass}/{len(claims)}** "

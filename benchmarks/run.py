@@ -10,7 +10,6 @@ import argparse
 import glob
 import json
 import os
-import sys
 import time
 
 

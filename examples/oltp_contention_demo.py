@@ -99,4 +99,38 @@ for lanes in (1, 2, 4):
 print("\none planner lane saturates (util ~1) and its plan queue backs "
       "up; adding planner lanes drains the queue until execution is "
       "the bottleneck again — the fig15 planning-cost crossover "
-      "mechanism")
+      "mechanism\n")
+
+# --- overload & admission control ------------------------------------------
+# Open the loop at ~2x the high-contention capacity knee: 64-txn epochs
+# arrive on a fixed schedule whether or not the engine keeps up.
+# Without admission control the backlog and the queueing tail grow with
+# the horizon; a bounded backlog or a queueing deadline sheds the
+# excess at arrival, holding p99 and the queue while committed
+# throughput stays at capacity (benchmarks fig17, engine counters
+# pinned in tests/test_overload.py).
+wl = make_workload(
+    WorkloadConfig(kind="ycsb", num_txns=4096, num_records=1_000_000,
+                   num_hot=16, batch_epoch=64, seed=0)
+)
+POLICIES = (
+    ("no admission control", {}),
+    ("bounded backlog (cap 64)",
+     dict(admission_policy="bounded_backlog", backlog_cap=64)),
+    ("deadline shed (1000 rounds)",
+     dict(admission_policy="deadline_shed", deadline_rounds=1000)),
+)
+print(f"{'admission policy':>28s} {'goodput':>12s} {'p99':>8s} "
+      f"{'backlog':>8s} {'dropped':>8s}")
+for name, kw in POLICIES:
+    res = run_simulation(
+        EngineConfig(protocol="deadlock_free", n_exec=48,
+                     epoch_interval_rounds=200, **kw, **SIM), wl
+    )
+    m = res.metrics
+    print(f"{name:>28s} {res.throughput_txn_s/1e3:10.1f}k/s "
+          f"{m.p99:8d} {int(max(m.q_depth)):8d} "
+          f"{m.rejected + m.shed:8d}")
+print("\nsame committed throughput, but with admission control the "
+      "excess load lands in the drop counters instead of the queue — "
+      "p99 and the backlog stay bounded as the horizon grows")

@@ -264,4 +264,115 @@ def planner_busy_integral(
     ))
 
 
+# --------------------------------------------------------------------------
+# Overload-robustness oracles (admission control + bounded backoff).
+#
+# The engine's admission policies and abort backoff are exact integer
+# recurrences over the closed-form arrival schedule; the functions below
+# are their pure-python mirrors, pinned bit-exactly against the carried
+# engine counters in ``tests/test_overload.py``. Like the planner
+# schedule above they depend only on the arrival/attempt sequences —
+# never on execution — which is what makes them usable as oracles.
+# --------------------------------------------------------------------------
+
+# Shift cap for the exponential backoff (see :func:`exp_backoff_rounds`):
+# the doubling stops after this many aborts so the shift never overflows
+# int32 (base << 16 with the default base of 4 is ~262k rounds).
+BACKOFF_SHIFT_CAP = 16
+
+
+def exp_backoff_rounds(base_rounds: int, attempt: int, max_rounds: int) -> int:
+    """Bounded exponential backoff after the ``attempt``-th abort
+    (attempt 0 = first execution): ``min(base << min(attempt, 16), max)``
+    — shift-and-cap integer math, the exact formula the engine applies
+    to the ``C_ATTEMPT`` slot column under
+    ``EngineConfig.backoff_mode == "exp"``.
+
+    >>> [exp_backoff_rounds(4, a, 256) for a in range(8)]
+    [4, 8, 16, 32, 64, 128, 256, 256]
+    >>> exp_backoff_rounds(4, 40, 1 << 20)  # shift saturates at 16
+    262144
+    """
+    shift = min(int(attempt), BACKOFF_SHIFT_CAP)
+    return min(int(base_rounds) << shift, int(max_rounds))
+
+
+def token_grant(r: int, interval_rounds: int, burst: int) -> int:
+    """Tokens granted by round ``r`` under the token-bucket admission
+    policy: the bucket starts full (``burst`` tokens) and refills one
+    token every ``interval_rounds`` rounds. Global txn id ``g`` may be
+    admitted at round ``r`` iff ``g < token_grant(r, ...)``.
+
+    >>> [token_grant(r, 10, 2) for r in (0, 9, 10, 25, 100)]
+    [2, 2, 3, 4, 12]
+    """
+    return int(burst) + int(r) // int(interval_rounds)
+
+
+def token_ready_round(g: int, interval_rounds: int, burst: int) -> int:
+    """Earliest round at which the token bucket admits global txn id
+    ``g`` (ignoring arrival and slot availability): the inverse of
+    :func:`token_grant`, used both by the engine's event-leap wake
+    candidate and by the host-side admission-schedule oracle.
+
+    >>> [token_ready_round(g, 10, 2) for g in (0, 1, 2, 3, 11)]
+    [0, 0, 10, 20, 100]
+    >>> all(token_grant(token_ready_round(g, 7, 3), 7, 3) > g
+    ...     for g in range(50))
+    True
+    """
+    return max(int(g) - int(burst) + 1, 0) * int(interval_rounds)
+
+
+def token_bucket_schedule(
+    arrive_rounds, interval_rounds: int, burst: int
+) -> list[int]:
+    """Admission-eligibility round of each transaction under the
+    token-bucket gate: ``max(arrival, token_ready_round(g))``. This is
+    the pure gate schedule — actual admission additionally waits for a
+    free exec slot, so the engine's admission rounds are lower-bounded
+    by (and, with spare slots, equal to) this schedule.
+
+    >>> token_bucket_schedule([0, 0, 0, 0], interval_rounds=5, burst=2)
+    [0, 0, 5, 10]
+    >>> token_bucket_schedule([0, 20, 40], interval_rounds=5, burst=1)
+    [0, 20, 40]
+    """
+    return [
+        max(int(a), token_ready_round(g, interval_rounds, burst))
+        for g, a in enumerate(arrive_rounds)
+    ]
+
+
+def backlog_drops(arrived: int, consumed: int, cap: int) -> int:
+    """Transactions a bounded-backlog gate drops *right now*: the
+    excess of the waiting queue (``arrived - consumed``) over the cap.
+    ``consumed`` counts transactions already admitted or dropped. The
+    engine applies this floor every executed round (dropping the
+    *oldest* waiters), so the carried reject counter equals the sum of
+    these increments — and the backlog never exceeds ``cap`` except
+    transiently within an arrival round.
+
+    >>> backlog_drops(arrived=10, consumed=3, cap=5)
+    2
+    >>> backlog_drops(arrived=10, consumed=8, cap=5)
+    0
+    """
+    return max(int(arrived) - int(consumed) - int(cap), 0)
+
+
+def deadline_drops(arrived_stale: int, consumed: int) -> int:
+    """Transactions a deadline-shed gate drops right now: every waiter
+    that arrived long enough ago to have exceeded the queueing deadline
+    (``arrived_stale`` = arrivals up to round ``r - deadline - 1``) and
+    was neither admitted nor already dropped.
+
+    >>> deadline_drops(arrived_stale=7, consumed=5)
+    2
+    >>> deadline_drops(arrived_stale=4, consumed=5)
+    0
+    """
+    return max(int(arrived_stale) - int(consumed), 0)
+
+
 DEFAULT_COST_MODEL = CostModel()

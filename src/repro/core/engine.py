@@ -89,7 +89,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import planner as planner_lib
-from repro.core.cost_model import DEFAULT_COST_MODEL, CostModel
+from repro.core.cost_model import (
+    BACKOFF_SHIFT_CAP,
+    DEFAULT_COST_MODEL,
+    CostModel,
+)
 from repro.core.lockgrant import (
     KEY_SENTINEL,
     REQ_NONE,
@@ -188,6 +192,19 @@ NCAT = 6
 
 _IMAX = jnp.iinfo(jnp.int32).max
 
+# Saturation bound for the open-arrival closed forms: products of
+# (txn-id, round) quantities clamp here instead of wrapping int32. 2^30
+# is beyond any simulable round or txn id, so a saturated arrival round
+# reads as "never arrives" and a saturated count as "everything" — both
+# safe, and the clamp never fires inside the int32-exact range, so
+# results there are bit-identical to the unguarded arithmetic.
+_SAT = 1 << 30
+
+
+def _sat_mul(a, b):
+    """``a * b`` clamped to ``_SAT`` (int32-safe; a >= 0, b >= 0)."""
+    return jnp.where(a > _SAT // jnp.maximum(b, 1), _SAT, a * b)
+
 PROTOCOLS = (
     "twopl_waitdie",
     "twopl_waitfor",
@@ -245,6 +262,53 @@ class EngineConfig:
     # For non-batch protocols, epochs are batch_epoch-sized slices of
     # the workload's submission order.
     epoch_interval_rounds: int = 0
+    # --- overload robustness layer (all defaults = off; the off paths
+    # compile to the pre-layer graph, so golden traces stay
+    # bit-identical) ---
+    # Admission-control policy over the open-arrival backlog. The
+    # *kind* is a compile-time static (each policy gates admission with
+    # different traced arithmetic); every numeric parameter below is a
+    # traced plan scalar, so one compiled runner serves a whole policy
+    # sweep. Requires open arrival (epoch_interval_rounds > 0).
+    #   none            unbounded backlog (the pre-layer behavior)
+    #   bounded_backlog drop the oldest waiters whenever the backlog
+    #                   exceeds backlog_cap (counted in pol_rejected)
+    #   token_bucket    admission additionally waits for a token: the
+    #                   bucket holds token_burst tokens and refills one
+    #                   every token_interval_rounds (backpressure — no
+    #                   drops; admissions counted in pol_tb_adm)
+    #   deadline_shed   drop waiters whose queueing delay exceeds
+    #                   deadline_rounds (pol_shed), and give up on
+    #                   admitted txns that abort past the end-to-end
+    #                   deadline (pol_timedout)
+    admission_policy: str = "none"
+    backlog_cap: int = 0  # bounded_backlog: max waiting txns
+    token_interval_rounds: int = 0  # token_bucket: rounds per token
+    token_burst: int = 0  # token_bucket: bucket capacity
+    deadline_rounds: int = 0  # deadline_shed: deadline (rounds)
+    # Bounded retry: after retry_budget total attempts an aborted txn is
+    # dropped instead of backing off again (counted in pol_sacrificed).
+    # 0 = unlimited retries (default). The budget value is traced; only
+    # the on/off flag is static.
+    retry_budget: int = 0
+    # Abort backoff: "fixed" = cost.abort_backoff_rounds every time
+    # (the pre-layer behavior); "exp" = bounded exponential,
+    # min(base << min(attempt, 16), backoff_max_rounds) — deterministic
+    # shift-and-cap integer math on the C_ATTEMPT column, exact under
+    # event leaping and vmapping (cost_model.exp_backoff_rounds is the
+    # host-side oracle).
+    backoff_mode: str = "fixed"
+    backoff_max_rounds: int = 256  # exp backoff cap (traced)
+    # Bursty open arrival: replace the fixed epoch interval with a
+    # deterministic schedule (workloads.epoch_arrival_schedule) —
+    # "burst" = on/off (all of burst_period_epochs' epochs arrive
+    # within the first burst_on_epochs intervals), "diurnal" = square
+    # wave (first half of the period at double rate). Average offered
+    # load matches the uniform schedule; arrival rounds are stamped
+    # per-txn so event leaping wakes exactly at bursts.
+    arrival_pattern: str = "uniform"
+    burst_period_epochs: int = 0
+    burst_on_epochs: int = 0
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -287,6 +351,55 @@ class EngineConfig:
             assert self.protocol != "partitioned_store", (
                 "open epoch arrival is not modeled for the H-Store "
                 "per-lane admission streams"
+            )
+        # --- overload robustness layer ---
+        assert self.admission_policy in (
+            "none", "bounded_backlog", "token_bucket", "deadline_shed"
+        ), self.admission_policy
+        assert self.backoff_mode in ("fixed", "exp"), self.backoff_mode
+        assert self.arrival_pattern in (
+            "uniform", "burst", "diurnal"
+        ), self.arrival_pattern
+        assert self.retry_budget >= 0
+        if self.admission_policy != "none":
+            assert self.epoch_interval_rounds > 0, (
+                "admission policies gate the open-arrival backlog: "
+                "set epoch_interval_rounds"
+            )
+            assert not self.inter_batch_pipeline, (
+                "admission policies skip whole epochs at batch "
+                "rollover, which the pipelined level-0 cursor does "
+                "not model"
+            )
+            if self.admission_policy == "bounded_backlog":
+                assert self.backlog_cap > 0
+            if self.admission_policy == "token_bucket":
+                assert self.token_interval_rounds > 0
+                assert self.token_burst > 0
+            if self.admission_policy == "deadline_shed":
+                assert self.deadline_rounds > 0
+        if self.retry_budget or self.backoff_mode != "fixed":
+            assert not self.is_batch_planned, (
+                "batch-planned execution has no abort path: retry "
+                "budgets and backoff shaping do not apply"
+            )
+        if self.arrival_pattern != "uniform":
+            assert self.epoch_interval_rounds > 0, (
+                "bursty arrival shapes the open-arrival schedule: "
+                "set epoch_interval_rounds"
+            )
+            assert self.burst_period_epochs > 0
+            if self.arrival_pattern == "burst":
+                assert 0 < self.burst_on_epochs <= self.burst_period_epochs
+        if (
+            self.admission_policy != "none"
+            or self.retry_budget
+            or self.backoff_mode != "fixed"
+            or self.arrival_pattern != "uniform"
+        ):
+            assert self.state_layout == "packed", (
+                "the frozen legacy engine predates the overload "
+                "robustness layer"
             )
 
     @property
@@ -336,6 +449,14 @@ class EngineConfig:
             # arrival changes the traced computation
             self.n_planner_lanes,
             self.epoch_interval_rounds > 0,
+            # overload robustness: policy / backoff / burst *kinds* are
+            # static (each compiles different gating arithmetic); their
+            # numeric parameters are traced plan scalars, so one runner
+            # serves a whole policy-parameter sweep
+            self.admission_policy,
+            self.retry_budget > 0,
+            self.backoff_mode,
+            self.arrival_pattern != "uniform",
             self.cost,
         )
 
@@ -410,6 +531,43 @@ def qgrid_interval(cfg: EngineConfig) -> int:
     return max(1, -(-cfg.max_rounds // QDEPTH_SAMPLES))
 
 
+def _epoch_schedule_arrays(cfg: EngineConfig) -> tuple[np.ndarray, int, int]:
+    """One period of the bursty epoch-arrival schedule:
+    ``(sched [SP], period_rounds, SP)`` (see
+    ``workloads.epoch_arrival_schedule``). Only meaningful when
+    ``cfg.arrival_pattern != "uniform"``."""
+    from repro.core.workloads import epoch_arrival_schedule
+
+    sched, period = epoch_arrival_schedule(
+        cfg.arrival_pattern,
+        cfg.epoch_interval_rounds,
+        cfg.burst_period_epochs,
+        cfg.burst_on_epochs,
+    )
+    return sched.astype(np.int64), int(period), len(sched)
+
+
+def _policy_scalars(cfg: EngineConfig) -> dict:
+    """Traced scalar parameters of the overload-robustness layer. Only
+    the parameters of the *active* policy are emitted, so default
+    configs carry no extra plan entries and cells sweeping a policy
+    parameter share one compiled runner."""
+    p: dict = {}
+    i32 = np.int32
+    if cfg.admission_policy == "bounded_backlog":
+        p["pol_cap"] = np.asarray(cfg.backlog_cap, i32)
+    elif cfg.admission_policy == "token_bucket":
+        p["pol_tb_iv"] = np.asarray(cfg.token_interval_rounds, i32)
+        p["pol_tb_burst"] = np.asarray(cfg.token_burst, i32)
+    elif cfg.admission_policy == "deadline_shed":
+        p["pol_deadline"] = np.asarray(cfg.deadline_rounds, i32)
+    if cfg.retry_budget > 0:
+        p["pol_retry_budget"] = np.asarray(cfg.retry_budget, i32)
+    if cfg.backoff_mode == "exp":
+        p["pol_bo_max"] = np.asarray(cfg.backoff_max_rounds, i32)
+    return p
+
+
 def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
     """The traced plan arrays consumed by the step builders.
 
@@ -478,6 +636,24 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
             p["cum_usize"] = np.concatenate(
                 [[0], np.cumsum(usz)]
             ).astype(np.int32)
+        if cfg.arrival_pattern != "uniform":
+            sched_arr, period, sp = _epoch_schedule_arrays(cfg)
+            p["ep_sched"] = sched_arr.astype(np.int32)
+            p["sched_period"] = np.asarray(period, np.int32)
+            p["sched_epochs"] = np.asarray(sp, np.int32)
+        p.update(_policy_scalars(cfg))
+        if cfg.admission_policy in ("bounded_backlog", "token_bucket"):
+            # the batch engine sheds / gates whole epochs: caps given in
+            # transactions round down to epochs (at least one)
+            b = max(int(plan.epoch_txns), 1)
+            if cfg.admission_policy == "bounded_backlog":
+                p["pol_cap_epochs"] = np.asarray(
+                    max(cfg.backlog_cap // b, 1), np.int32
+                )
+            else:
+                p["pol_tb_burst_e"] = np.asarray(
+                    max(cfg.token_burst // b, 1), np.int32
+                )
         p["qgrid_iv"] = np.asarray(qgrid_interval(cfg), np.int32)
         return p
     keys = np.asarray(plan.keys, np.int32)
@@ -510,16 +686,84 @@ def plan_device(cfg: EngineConfig, plan: planner_lib.Plan) -> dict:
         n = keys.shape[0]
         b = max(int(plan.epoch_txns), 1)
         iv = int(cfg.epoch_interval_rounds)
-        p["arrive_round"] = (
-            (np.arange(n, dtype=np.int64) // b) * iv
-        ).astype(np.int32)
-        p["arrive_cycle"] = np.asarray(-(-n // b) * iv, np.int32)
+        n_ep = -(-n // b)
+        if cfg.arrival_pattern != "uniform":
+            # bursty arrival: epoch e's round comes from the periodic
+            # schedule (tiled across the workload's epochs); admission,
+            # leaping and latency stamping all read arrive_round, so
+            # only the backlog closed form needs the per-epoch array
+            sched_arr, period, sp = _epoch_schedule_arrays(cfg)
+            reps = -(-n_ep // sp)
+            ep_arr = (
+                np.tile(sched_arr, reps)
+                + np.repeat(np.arange(reps, dtype=np.int64) * period, sp)
+            )[:n_ep]
+            p["arrive_round"] = ep_arr[
+                np.arange(n, dtype=np.int64) // b
+            ].astype(np.int32)
+            p["arrive_cycle"] = np.asarray(reps * period, np.int32)
+            p["ep_arrive"] = ep_arr.astype(np.int32)
+        else:
+            p["arrive_round"] = (
+                (np.arange(n, dtype=np.int64) // b) * iv
+            ).astype(np.int32)
+            p["arrive_cycle"] = np.asarray(n_ep * iv, np.int32)
         # epoch size / interval as traced scalars: closed-form
         # arrived-txn counts at any round for the backlog samples
         p["epoch_txns"] = np.asarray(b, np.int32)
         p["epoch_interval"] = np.asarray(iv, np.int32)
+        p.update(_policy_scalars(cfg))
+    elif cfg.backoff_mode == "exp" or cfg.retry_budget > 0:
+        # backoff shaping / retry budgets apply under closed loop too
+        p.update(_policy_scalars(cfg))
     p["qgrid_iv"] = np.asarray(qgrid_interval(cfg), np.int32)
     return p
+
+
+def offered_by_round(
+    cfg: EngineConfig, plan: planner_lib.Plan, r: int
+) -> int:
+    """Host-side mirror of the engine's arrived-by closed form: how
+    many schedulable units (txns; fragments under ``fragment_exec``)
+    the open-arrival schedule has offered by round ``r`` inclusive.
+    Exact int64 arithmetic — the goodput denominator for
+    ``Metrics``' committed / admitted / offered split. Returns 0 for
+    closed-loop configs (offered == admitted there)."""
+    if cfg.epoch_interval_rounds <= 0 or r < 0:
+        return 0
+    iv = int(cfg.epoch_interval_rounds)
+    if cfg.is_batch_planned:
+        sched = plan.sched
+        nb = sched.num_batches
+        usz = sched.batch_fsize if cfg.fragment_exec else sched.batch_size
+        cum = np.concatenate([[0], np.cumsum(np.asarray(usz, np.int64))])
+        nu = int(cum[-1])
+        if cfg.arrival_pattern != "uniform":
+            ep_sched, period, sp = _epoch_schedule_arrays(cfg)
+            n_arr = (r // period) * sp + int(
+                np.searchsorted(ep_sched, r % period, side="right")
+            )
+        else:
+            n_arr = r // iv + 1
+        return int((n_arr // nb) * nu + cum[n_arr % nb])
+    n = int(plan.keys.shape[0])
+    b = max(int(plan.epoch_txns), 1)
+    n_ep = -(-n // b)
+    if cfg.arrival_pattern != "uniform":
+        ep_sched, period, sp = _epoch_schedule_arrays(cfg)
+        reps = -(-n_ep // sp)
+        ep_arr = (
+            np.tile(ep_sched, reps)
+            + np.repeat(np.arange(reps, dtype=np.int64) * period, sp)
+        )[:n_ep]
+        cyc = reps * period
+        in_cyc = int(
+            np.searchsorted(ep_arr, r % cyc, side="right")
+        ) * b
+    else:
+        cyc = n_ep * iv
+        in_cyc = (r % cyc // iv + 1) * b
+    return int((r // cyc) * n + min(in_cyc, n))
 
 
 def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
@@ -572,6 +816,18 @@ def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
         s["agg_sum"] = jnp.zeros((R, 3), i32)
         s["agg_prev_idx"] = jnp.full((T, K), R, i32)
         s["agg_prev_upd"] = jnp.zeros((T, K, 3), i32)
+    # overload-robustness counters (carried scalars; sweep._OPT_SCALARS
+    # picks up whichever are present). Keyed on the same statics as the
+    # step builder, so vmapped cells always share a state shape.
+    if cfg.admission_policy != "none":
+        s["pol_rejected"] = jnp.zeros((), i32)  # bounded_backlog drops
+        s["pol_shed"] = jnp.zeros((), i32)  # deadline_shed queue drops
+        s["pol_timedout"] = jnp.zeros((), i32)  # in-flight deadline hits
+        s["pol_tb_adm"] = jnp.zeros((), i32)  # token-bucket admissions
+    if cfg.retry_budget > 0:
+        s["pol_sacrificed"] = jnp.zeros((), i32)  # retry budget exhausted
+    if cfg.backoff_mode == "exp":
+        s["pol_backoff_rounds"] = jnp.zeros((), i32)  # total backoff issued
     return s
 
 
@@ -612,6 +868,14 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
     # txn's epoch to arrive. Off by default; the off path compiles to
     # the pre-model graph (golden traces stay bit-identical).
     open_arrival = cfg.epoch_interval_rounds > 0
+    # overload robustness layer: policy / backoff / burst kinds are
+    # compile-time statics; their parameters ride the plan dict as
+    # traced scalars (pol_*). All off by default — the off paths are
+    # the pre-layer graph.
+    policy = cfg.admission_policy
+    exp_backoff = cfg.backoff_mode == "exp"
+    has_budget = cfg.retry_budget > 0
+    bursty = cfg.arrival_pattern != "uniform"
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
@@ -672,6 +936,56 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
 
         free = busy_until <= r
 
+        if open_arrival:
+            # closed forms over the arrival schedule (saturating: ids /
+            # rounds past the int32-exact range read as "never")
+            def arr_of(g):
+                # arrival round of global txn id g (the workload wraps
+                # modulo N every arrive_cycle rounds)
+                return p["arrive_round"][g % N] + _sat_mul(
+                    g // N, p["arrive_cycle"]
+                )
+
+            def arrived_by(x):
+                # txns with arrival round <= x — the exact inverse of
+                # arr_of: arrived_by(x) > g  iff  x >= arr_of(g)
+                cyc = p["arrive_cycle"]
+                xp = jnp.maximum(x, 0)
+                if bursty:
+                    in_cyc = jnp.searchsorted(
+                        p["ep_arrive"], xp % cyc, side="right"
+                    ).astype(i32) * p["epoch_txns"]
+                else:
+                    in_cyc = (
+                        xp % cyc // p["epoch_interval"] + 1
+                    ) * p["epoch_txns"]
+                n_in = jnp.minimum(in_cyc, N)
+                return jnp.where(
+                    x < 0, 0, _sat_mul(xp // cyc, N) + n_in
+                )
+
+        # --------------------------------------- 1a. admission-control drops
+        # Queue-side policy drops advance next_txn *before* slot ranking,
+        # so dropped txns are never loaded and cost nothing downstream.
+        # Drops happen only at executed rounds; the stage-12 leap
+        # candidates guarantee none falls strictly inside a leap gap, so
+        # the counters are bit-identical dense vs leaped.
+        if policy == "bounded_backlog":
+            # drop the oldest waiters beyond the backlog cap
+            drop = jnp.maximum(
+                arrived_by(r) - p["pol_cap"] - s["next_txn"], 0
+            )
+            s["pol_rejected"] = s["pol_rejected"] + drop
+            s["next_txn"] = s["next_txn"] + drop
+        elif policy == "deadline_shed":
+            # drop waiters whose queueing delay exceeds the deadline:
+            # txns arrived by r - deadline - 1 have waited > deadline
+            drop = jnp.maximum(
+                arrived_by(r - p["pol_deadline"] - 1) - s["next_txn"], 0
+            )
+            s["pol_shed"] = s["pol_shed"] + drop
+            s["next_txn"] = s["next_txn"] + drop
+
         # ------------------------------------------ 1+2. admission & retry
         # New admissions (EMPTY slots) and backoff->retry (BACKOFF slots
         # whose timer expired) are disjoint and share most column resets,
@@ -684,11 +998,22 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                 # global txn id g arrives with its epoch; arrival is
                 # monotone in g, so the admitted set is a prefix of the
                 # ranked empty slots and tids stay contiguous
-                arr_t = (
-                    p["arrive_round"][new_tid % N]
-                    + (new_tid // N) * p["arrive_cycle"]
-                )
+                arr_t = arr_of(new_tid)
                 adm = empty & (arr_t <= r)
+                if policy == "token_bucket":
+                    # backpressure, no drops: txn g additionally waits
+                    # for token g — the bucket starts with token_burst
+                    # and refills one every token_interval_rounds
+                    # (cost_model.token_grant is the host oracle). The
+                    # gate loosens as g falls, so the admitted set is
+                    # still a prefix of the ranked empty slots.
+                    adm = adm & (
+                        new_tid
+                        < p["pol_tb_burst"] + r // p["pol_tb_iv"]
+                    )
+                    s["pol_tb_adm"] = s["pol_tb_adm"] + adm.sum(
+                        dtype=i32
+                    )
             else:
                 adm = empty
             new_widx = new_tid % N
@@ -1259,15 +1584,55 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         s["lat_hist"] = s["lat_hist"].at[
             jnp.where(com, lat_b, LAT_BUCKETS)
         ].add(1, mode="drop")
+        aborting = rel_done_all & ~committing
+        if exp_backoff:
+            # bounded exponential backoff: base << attempt, shift-capped
+            # then clamped (deterministic integer math on C_ATTEMPT —
+            # cost_model.exp_backoff_rounds is the host oracle)
+            bo = jnp.minimum(
+                cm.abort_backoff_rounds
+                << jnp.minimum(attempt, BACKOFF_SHIFT_CAP),
+                p["pol_bo_max"],
+            )
+        else:
+            bo = cm.abort_backoff_rounds
+        if has_budget or policy == "deadline_shed":
+            # give-up paths: a retrying txn is dropped instead of backing
+            # off when its retry budget is spent (pol_sacrificed, checked
+            # first) or, under deadline_shed, when its end-to-end latency
+            # has already blown the deadline (pol_timedout)
+            give_up = jnp.zeros((T,), jnp.bool_)
+            if has_budget:
+                sac = aborting & (attempt + 1 >= p["pol_retry_budget"])
+                s["pol_sacrificed"] = (
+                    s["pol_sacrificed"] + sac.sum(dtype=i32)
+                )
+                give_up = give_up | sac
+            if policy == "deadline_shed":
+                timed = (
+                    aborting & ~give_up
+                    & (r - arrive > p["pol_deadline"])
+                )
+                s["pol_timedout"] = (
+                    s["pol_timedout"] + timed.sum(dtype=i32)
+                )
+                give_up = give_up | timed
+            leave = committing | give_up
+            drop_tid = com | give_up
+            back = aborting & ~give_up
+        else:
+            leave = committing
+            drop_tid = com
+            back = aborting
+        if exp_backoff:
+            s["pol_backoff_rounds"] = s["pol_backoff_rounds"] + jnp.where(
+                back, bo, 0
+            ).sum(dtype=i32)
         phase = jnp.where(
-            rel_done_all, jnp.where(committing, EMPTY, BACKOFF), phase
+            rel_done_all, jnp.where(leave, EMPTY, BACKOFF), phase
         )
-        tid = jnp.where(com, -1, tid)
-        busy_until = jnp.where(
-            rel_done_all & ~committing,
-            r + cm.abort_backoff_rounds,
-            busy_until,
-        )
+        tid = jnp.where(drop_tid, -1, tid)
+        busy_until = jnp.where(back, r + bo, busy_until)
         s["want"] = jnp.where(rel_done_all[:, None], False, s["want"])
 
         # ------------------------------------------------ 11. lane accounting
@@ -1344,13 +1709,30 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
                     # event until then (arrival is monotone in g, so no
                     # admission can happen sooner)
                     g0 = s["next_txn"]
-                    arr0 = (
-                        p["arrive_round"][g0 % N]
-                        + (g0 // N) * p["arrive_cycle"]
-                    )
+                    arr0 = arr_of(g0)
+                    if policy == "token_bucket":
+                        # admission additionally waits for token g0:
+                        # earliest grant round is the host oracle
+                        # cost_model.token_ready_round
+                        arr0 = jnp.maximum(arr0, _sat_mul(
+                            jnp.maximum(g0 - p["pol_tb_burst"] + 1, 0),
+                            p["pol_tb_iv"],
+                        ))
                     can_adm = jnp.broadcast_to(arr0 <= r + 1, (T,))
                     cand = jnp.minimum(cand, jnp.where(
                         (phase == EMPTY).any(), arr0, _IMAX))
+                    # policy drop events are wake-ups in their own right
+                    # (not gated on an EMPTY slot): the next drop round
+                    # is closed-form in next_txn, so leaping lands on
+                    # it exactly and stage 1a stays dense-identical
+                    if policy == "bounded_backlog":
+                        cand = jnp.minimum(
+                            cand, arr_of(g0 + p["pol_cap"])
+                        )
+                    elif policy == "deadline_shed":
+                        cand = jnp.minimum(
+                            cand, arr0 + p["pol_deadline"] + 1
+                        )
                 else:
                     can_adm = jnp.ones((T,), jnp.bool_)
             else:
@@ -1406,14 +1788,11 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             qm, (tid >= 0).sum(dtype=i32), s["q_inflight"]
         )
         if open_arrival:
-            # arrived(x) = full workload cycles + whole epochs within
-            # the cycle (epoch e of a cycle = epoch_txns txns arriving
-            # at e * epoch_interval), capped at N per cycle
-            cyc = p["arrive_cycle"]
-            arrived = (qgrid // cyc) * N + jnp.minimum(
-                (qgrid % cyc // p["epoch_interval"] + 1) * p["epoch_txns"],
-                N,
-            )
+            # backlog at grid point x: txns arrived by x (closed form —
+            # full workload cycles + whole epochs within the cycle,
+            # capped at N per cycle) minus the admission cursor; policy
+            # drops advance next_txn, so drops leave the backlog
+            arrived = arrived_by(qgrid)
             s["q_depth"] = jnp.where(
                 qm, jnp.maximum(arrived - s["next_txn"], 0), s["q_depth"]
             )
@@ -1517,6 +1896,13 @@ def _batch_state0(cfg: EngineConfig, plan: planner_lib.Plan, T: int):
         s["pipe_commits"] = jnp.zeros((), i32)  # cumulative early commits
     if cfg.n_planner_lanes > 0 or cfg.epoch_interval_rounds > 0:
         s["epoch_ctr"] = jnp.zeros((), i32)  # global batch (epoch) index
+    if cfg.admission_policy != "none":
+        # overload-robustness counters (see _state0; the batch engine
+        # sheds whole epochs, so timeouts never fire — no abort path)
+        s["pol_rejected"] = jnp.zeros((), i32)
+        s["pol_shed"] = jnp.zeros((), i32)
+        s["pol_timedout"] = jnp.zeros((), i32)
+        s["pol_tb_adm"] = jnp.zeros((), i32)
     if cfg.n_planner_lanes > 0:
         # planner-lane throughput model: batch 0 arrives at round 0 on a
         # free lane 0, so its plan completes after its own work span
@@ -1578,6 +1964,13 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
     L = cfg.n_planner_lanes
     planner_model = L > 0
     open_arrival = cfg.epoch_interval_rounds > 0
+    # overload robustness (see make_step): the batch engine has no abort
+    # path, so the layer reduces to epoch-granular admission control —
+    # bounded_backlog / deadline_shed skip stale whole epochs at batch
+    # rollover, token_bucket delays an epoch's plan start until its
+    # token accrues. Policies exclude inter_batch_pipeline (asserted).
+    policy = cfg.admission_policy
+    bursty = cfg.arrival_pattern != "uniform"
 
     lane_of = jnp.arange(T, dtype=jnp.int32) // W
     slot_ids = jnp.arange(T, dtype=jnp.int32)
@@ -1613,6 +2006,40 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         batch_of = p["batch_of"]  # [N] txn-level (commit barrier)
         bsize = p["batch_size"]
         plan_rounds = p["plan_rounds"]  # [NB]
+        if planner_model or open_arrival:
+            interval = p["epoch_interval"]
+        if open_arrival:
+            # closed forms over the epoch-arrival schedule (saturating;
+            # see make_step). Epoch g arrives whole at ep_arrival(g);
+            # epochs_arrived_by is its exact inverse.
+            if bursty:
+                def ep_arrival(g):
+                    return _sat_mul(
+                        g // p["sched_epochs"], p["sched_period"]
+                    ) + p["ep_sched"][g % p["sched_epochs"]]
+
+                def epochs_arrived_by(x):
+                    xp = jnp.maximum(x, 0)
+                    cnt = _sat_mul(
+                        xp // p["sched_period"], p["sched_epochs"]
+                    ) + jnp.searchsorted(
+                        p["ep_sched"], xp % p["sched_period"],
+                        side="right",
+                    ).astype(i32)
+                    return jnp.where(x < 0, 0, cnt)
+            else:
+                def ep_arrival(g):
+                    return _sat_mul(g, interval)
+
+                def epochs_arrived_by(x):
+                    return jnp.where(
+                        x < 0, 0, jnp.maximum(x, 0) // interval + 1
+                    )
+
+            def units_before(g):
+                # schedulable units in global epochs [0, g) (fragments
+                # under frag mode; the workload wraps modulo NB)
+                return _sat_mul(g // NB, NU) + p["cum_usize"][g % NB]
 
         sl = s["slots"]
         tid = sl[BC_TID]
@@ -1643,7 +2070,32 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         #     work sequences (cost_model.planner_lane_schedule is the
         #     host-side oracle).
         adv = s["batch_left"] == 0
-        new_b = jnp.where(adv, (s["cur_batch"] + 1) % NB, s["cur_batch"])
+        if policy in ("bounded_backlog", "deadline_shed"):
+            # epoch-granular shedding: at rollover (always an executed
+            # round, so dense and leaped runs evaluate the same r) skip
+            # straight past the epochs the queue policy has dropped —
+            # those beyond the backlog cap (oldest first), or those
+            # whose queueing delay already exceeds the deadline. The
+            # dropped units advance next_txn so the backlog samples see
+            # them leave the queue.
+            g_next = s["epoch_ctr"] + 1
+            if policy == "bounded_backlog":
+                floor_g = epochs_arrived_by(r) - p["pol_cap_epochs"]
+            else:
+                floor_g = epochs_arrived_by(r - p["pol_deadline"] - 1)
+            skip = jnp.where(adv, jnp.clip(floor_g - g_next, 0, _SAT), 0)
+            dropped = units_before(g_next + skip) - units_before(g_next)
+            ckey = (
+                "pol_rejected" if policy == "bounded_backlog"
+                else "pol_shed"
+            )
+            s[ckey] = s[ckey] + dropped
+            s["next_txn"] = s["next_txn"] + dropped
+        else:
+            skip = 0
+        new_b = jnp.where(
+            adv, (s["cur_batch"] + 1 + skip) % NB, s["cur_batch"]
+        )
         # stale flags (the workload wraps around modulo NB) are cleared
         # one batch ahead of admission: the incoming batch here, or the
         # incoming *pipeline* batch when early admission is on (the new
@@ -1667,9 +2119,22 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             s["bpos"] = jnp.where(adv, ustart[new_b], s["bpos"])
             s["batch_left"] = jnp.where(adv, bsize[new_b], s["batch_left"])
         if planner_model or open_arrival:
-            interval = p["epoch_interval"]
-            g_new = s["epoch_ctr"] + 1  # the new batch's global index
-            arrive_new = g_new * interval
+            g_new = s["epoch_ctr"] + 1 + skip  # new batch's global index
+            if open_arrival:
+                arrive_new = ep_arrival(g_new)
+                if policy == "token_bucket":
+                    # backpressure: epoch g's plan additionally waits
+                    # for its (epoch-granular) token; the arrival stamp
+                    # below keeps the true arrival round, so latency
+                    # includes the token wait
+                    arrive_new = jnp.maximum(arrive_new, _sat_mul(
+                        jnp.maximum(
+                            g_new - p["pol_tb_burst_e"] + 1, 0
+                        ),
+                        p["pol_tb_iv"],
+                    ))
+            else:
+                arrive_new = g_new * interval
         if planner_model:
             lane = g_new % L
             lane_free_prev = s["lane_free"][lane]
@@ -1721,7 +2186,7 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             new_plan_fin = s["plan_fin"] + plan_rounds[new_b]
         s["plan_fin"] = jnp.where(adv, new_plan_fin, s["plan_fin"])
         if planner_model or open_arrival:
-            s["epoch_ctr"] = s["epoch_ctr"] + adv.astype(jnp.int32)
+            s["epoch_ctr"] = s["epoch_ctr"] + adv.astype(jnp.int32) + skip
         s["cur_batch"] = new_b
 
         def next_plan_fin(nb):
@@ -1732,12 +2197,16 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
             # (lane_free is only written at rollovers).
             if planner_model:
                 g_nxt = s["epoch_ctr"] + 1
+                a_nxt = (
+                    ep_arrival(g_nxt) if open_arrival
+                    else g_nxt * interval
+                )
                 return jnp.maximum(
-                    g_nxt * interval, s["lane_free"][g_nxt % L]
+                    a_nxt, s["lane_free"][g_nxt % L]
                 ) + p["plan_work"][nb]
             if open_arrival:
                 return jnp.maximum(
-                    (s["epoch_ctr"] + 1) * interval, s["plan_fin"]
+                    ep_arrival(s["epoch_ctr"] + 1), s["plan_fin"]
                 ) + plan_rounds[nb]
             return s["plan_fin"] + plan_rounds[nb]
 
@@ -1786,10 +2255,10 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         # under open arrival (pipelined early admissions belong to the
         # *next* epoch), the admission round under closed loop
         if open_arrival:
-            arr_cur = s["epoch_ctr"] * interval
+            arr_cur = ep_arrival(s["epoch_ctr"])
             if pipe:
                 arr_new = jnp.where(
-                    adm_pipe, arr_cur + interval, arr_cur
+                    adm_pipe, ep_arrival(s["epoch_ctr"] + 1), arr_cur
                 )
             else:
                 arr_new = arr_cur
@@ -1797,6 +2266,8 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         else:
             arrive = jnp.where(adm, r, arrive)
         s["next_txn"] = s["next_txn"] + n_adm
+        if policy == "token_bucket":
+            s["pol_tb_adm"] = s["pol_tb_adm"] + n_adm
         if frag:
             ftxn = jnp.where(
                 adm, p["frag_txn"][jnp.clip(widx, 0, F - 1)], ftxn
@@ -2032,10 +2503,11 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
         )
         if open_arrival:
             # backlog in admission units (fragments under frag mode, to
-            # match next_txn's granularity): epochs 0..x//interval have
-            # arrived at grid point x
-            n_arr = qgrid // interval + 1
-            arrived = (n_arr // NB) * NU + p["cum_usize"][n_arr % NB]
+            # match next_txn's granularity): all units of the epochs
+            # arrived by grid point x, minus the admission cursor
+            # (policy drops advance the cursor, leaving the backlog)
+            n_arr = epochs_arrived_by(qgrid)
+            arrived = units_before(n_arr)
             s["q_depth"] = jnp.where(
                 qm, jnp.maximum(arrived - s["next_txn"], 0), s["q_depth"]
             )

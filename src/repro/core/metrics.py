@@ -117,10 +117,29 @@ class Metrics:
     # Fig-10 breakdown extended with the planner-lane category:
     # fractions over (n_exec + n_planner_lanes) lane-rounds.
     breakdown_ext: dict[str, float]
+    # Goodput split under the overload-robustness layer (all counts over
+    # the measurement window): committed <= admitted <= offered.
+    # ``offered`` is the arrival schedule's output (== admitted under a
+    # closed loop); ``admitted`` excludes queue-side policy drops
+    # (rejected / shed); ``timedout`` / ``sacrificed`` are
+    # admitted-but-given-up transactions. All zero when the layer is off.
+    committed: int = 0
+    admitted: int = 0
+    offered: int = 0
+    rejected: int = 0
+    shed: int = 0
+    timedout: int = 0
+    sacrificed: int = 0
+
+    @property
+    def goodput_frac(self) -> float:
+        """Committed fraction of offered load (1.0 when nothing was
+        offered — closed loop with no commits yet)."""
+        return self.committed / self.offered if self.offered > 0 else 1.0
 
     def summary_row(self) -> dict[str, Any]:
         """JSON-friendly scalar digest for benchmark result rows."""
-        return dict(
+        row = dict(
             p50_rounds=self.p50,
             p99_rounds=self.p99,
             p999_rounds=self.p999,
@@ -128,6 +147,20 @@ class Metrics:
             breakdown_ext={k: float(v)
                            for k, v in self.breakdown_ext.items()},
         )
+        if self.offered > 0:
+            # emitted only for open-arrival cells, so pre-layer result
+            # rows (and their cached benchmark hashes) keep their shape
+            row.update(
+                offered=self.offered,
+                admitted=self.admitted,
+                committed=self.committed,
+                goodput_frac=round(self.goodput_frac, 6),
+                rejected=self.rejected,
+                shed=self.shed,
+                timedout=self.timedout,
+                sacrificed=self.sacrificed,
+            )
+        return row
 
 
 def build_metrics(
@@ -139,6 +172,13 @@ def build_metrics(
     exec_lane_rounds: int,
     plan_busy_rounds: int,
     plan_lane_rounds: int,
+    committed: int = 0,
+    admitted: int = 0,
+    offered: int = 0,
+    rejected: int = 0,
+    shed: int = 0,
+    timedout: int = 0,
+    sacrificed: int = 0,
 ) -> Metrics:
     """Assemble a :class:`Metrics` record from measured counters.
 
@@ -167,4 +207,11 @@ def build_metrics(
         q_depth=np.asarray(q_depth, np.int64),
         q_inflight=np.asarray(q_inflight, np.int64),
         breakdown_ext=ext,
+        committed=int(committed),
+        admitted=int(admitted),
+        offered=int(offered),
+        rejected=int(rejected),
+        shed=int(shed),
+        timedout=int(timedout),
+        sacrificed=int(sacrificed),
     )

@@ -87,9 +87,17 @@ _SCALARS = ("commits", "aborts_dl", "aborts_ollp", "wasted", "next_txn", "steps"
 #     plan_busy_int / (L * rounds) never transiently exceeds 1 (the
 #     fig15 fix; plan_busy keeps the amortized semantics the planner
 #     oracle tests pin).
+#   pol_* — overload-robustness layer (engine.EngineConfig): admission
+#     drops (pol_rejected = bounded_backlog, pol_shed = deadline_shed
+#     queue drops, pol_timedout = in-flight deadline give-ups),
+#     token-bucket admissions (pol_tb_adm), retry-budget give-ups
+#     (pol_sacrificed) and total exponential-backoff rounds issued
+#     (pol_backoff_rounds).
 _OPT_SCALARS = (
     "pipe_adm", "pipe_commits", "plan_busy", "plan_qdelay", "epoch_ctr",
     "plan_busy_int",
+    "pol_rejected", "pol_shed", "pol_timedout", "pol_tb_adm",
+    "pol_sacrificed", "pol_backoff_rounds",
 )
 
 # Metrics counter arrays carried by the packed engine (the legacy-layout
@@ -259,6 +267,26 @@ def simulate_plans(
         breakdown = {
             nm: float(cat[k]) / total_lane_rounds for k, nm in enumerate(names)
         }
+        def _delta(k):
+            return int(np.asarray(snap.get(k, 0))) - int(
+                np.asarray(wsnap.get(k, 0))
+            )
+
+        # goodput split (committed <= admitted <= offered): admitted =
+        # arrival-stream consumption minus queue-side policy drops;
+        # offered = the arrival schedule's output over the measurement
+        # window. Open arrival only — closed-loop cells keep offered=0
+        # so their metrics rows (and cached benchmark hashes) keep the
+        # pre-layer shape.
+        rejected = _delta("pol_rejected")
+        shed = _delta("pol_shed")
+        admitted = _delta("next_txn") - rejected - shed
+        if cfg.epoch_interval_rounds > 0:
+            offered = engine_lib.offered_by_round(
+                cfg, plans[i], ri
+            ) - engine_lib.offered_by_round(cfg, plans[i], wri)
+        else:
+            offered = 0
         met = None
         if "lat_hist" in snap:
             # histogram counters are cumulative (warmup-subtracted);
@@ -281,6 +309,13 @@ def simulate_plans(
                 plan_busy_rounds=int(snap.get("plan_busy_int", 0))
                 - int(np.asarray(wsnap.get("plan_busy_int", 0))),
                 plan_lane_rounds=cfg.n_planner_lanes * meas_rounds,
+                committed=commits,
+                admitted=admitted,
+                offered=offered,
+                rejected=rejected,
+                shed=shed,
+                timedout=_delta("pol_timedout"),
+                sacrificed=_delta("pol_sacrificed"),
             )
         results.append(
             SimResult(

@@ -92,6 +92,69 @@ class Workload:
         return self.keys.shape[1]
 
 
+def epoch_arrival_schedule(
+    pattern: str,
+    interval_rounds: int,
+    period_epochs: int,
+    burst_on_epochs: int = 0,
+) -> tuple[np.ndarray, int]:
+    """Deterministic arrival rounds of one period's epochs under a bursty
+    arrival process (the engine's open-arrival schedules; consumed by
+    ``engine.plan_device`` and stamped into per-txn arrival rounds so
+    event leaping wakes exactly at bursts).
+
+    Returns ``(sched, period_rounds)``: ``sched[e]`` is the arrival
+    round of epoch ``e`` within one period of ``period_epochs`` epochs,
+    monotone non-decreasing with ``sched[0] == 0``; the pattern repeats
+    every ``period_rounds`` rounds. Every pattern offers the same
+    average load as a uniform arrival at ``interval_rounds`` — only the
+    shape changes:
+
+      * ``uniform`` — epoch ``e`` at ``e * interval`` (the fixed-rate
+        reference; the engine keeps its closed form for this case).
+      * ``burst`` — on/off: all ``period_epochs`` epochs arrive inside
+        the first ``burst_on_epochs`` intervals of the period, then
+        silence until the period ends.
+      * ``diurnal`` — square wave: the first half of the period's
+        epochs arrive at double rate (``interval // 2`` spacing), the
+        second half at the complementary low rate.
+
+    >>> sched, per = epoch_arrival_schedule("uniform", 10, 4)
+    >>> sched.tolist(), per
+    ([0, 10, 20, 30], 40)
+    >>> sched, per = epoch_arrival_schedule("burst", 10, 4, burst_on_epochs=2)
+    >>> sched.tolist(), per
+    ([0, 0, 10, 10], 40)
+    >>> sched, per = epoch_arrival_schedule("diurnal", 10, 6)
+    >>> sched.tolist(), per
+    ([0, 5, 10, 15, 30, 45], 60)
+    """
+    iv = int(interval_rounds)
+    P = int(period_epochs)
+    assert iv > 0 and P > 0, (interval_rounds, period_epochs)
+    period = P * iv
+    if pattern == "uniform":
+        sched = np.arange(P, dtype=np.int64) * iv
+    elif pattern == "burst":
+        on = int(burst_on_epochs)
+        assert 0 < on <= P, (burst_on_epochs, period_epochs)
+        # P epochs spread uniformly over the first `on` intervals
+        sched = (np.arange(P, dtype=np.int64) * on // P) * iv
+    elif pattern == "diurnal":
+        h1 = P - P // 2  # fast half (ceil)
+        h2 = P // 2
+        fast = np.arange(h1, dtype=np.int64) * (iv // 2)
+        start = h1 * (iv // 2)
+        spacing2 = (period - start) // max(h2, 1)
+        slow = start + np.arange(h2, dtype=np.int64) * spacing2
+        sched = np.concatenate([fast, slow])
+    else:
+        raise ValueError(f"unknown arrival pattern: {pattern}")
+    assert (np.diff(sched) >= 0).all() and sched[0] == 0
+    assert sched[-1] < period
+    return sched, period
+
+
 def make_workload(cfg: WorkloadConfig) -> Workload:
     if cfg.kind == "ycsb":
         return ycsb_workload(cfg)

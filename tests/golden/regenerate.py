@@ -87,6 +87,19 @@ CELLS = {
              batch_epoch=64, seed=0),
         dict(protocol="deadlock_free", n_exec=8,
              epoch_interval_rounds=150)),
+    # The same overloaded cell with the overload-robustness layer on:
+    # deadline shedding drops stale waiters (pol_shed), exponential
+    # backoff with a retry budget shapes the abort path, and the
+    # goodput/drop counters are pinned bit-exactly alongside the
+    # metrics arrays.
+    "deadlock_free_overload_shed": (
+        dict(kind="ycsb", num_txns=512, num_records=10_000, num_hot=8,
+             batch_epoch=64, seed=0),
+        dict(protocol="deadlock_free", n_exec=8,
+             epoch_interval_rounds=150,
+             admission_policy="deadline_shed", deadline_rounds=400,
+             retry_budget=3, backoff_mode="exp",
+             backoff_max_rounds=256)),
 }
 
 # Cells whose fingerprint additionally pins the metrics layer (latency
@@ -94,7 +107,7 @@ CELLS = {
 # the metrics arrays exist on every packed-engine run, but adding them
 # to fingerprints generated before the metrics layer would break those
 # fixtures byte-wise for no coverage gain.
-METRICS_CELLS = {"deadlock_free_overload"}
+METRICS_CELLS = {"deadlock_free_overload", "deadlock_free_overload_shed"}
 
 
 def fingerprint(res, include_metrics: bool = False) -> dict:
@@ -116,7 +129,9 @@ def fingerprint(res, include_metrics: bool = False) -> dict:
         rounds_total=res.raw["rounds_total"],
         steps_executed=res.raw["steps_executed"],
     )
-    for k in ("plan_busy", "plan_qdelay", "epoch_ctr"):
+    for k in ("plan_busy", "plan_qdelay", "epoch_ctr",
+              "pol_rejected", "pol_shed", "pol_timedout", "pol_tb_adm",
+              "pol_sacrificed", "pol_backoff_rounds"):
         if k in res.raw:
             fp[k] = res.raw[k]
     if include_metrics and res.metrics is not None:
@@ -147,9 +162,14 @@ def run_cell(name: str) -> dict:
 
 
 def main() -> None:
+    import sys
+
     from repro.core.sweep import ENGINE_VERSION
 
+    only = set(sys.argv[1:])  # regenerate only the named cells, if any
     for name in CELLS:
+        if only and name not in only:
+            continue
         golden = run_cell(name)
         golden["generated_by_engine_version"] = ENGINE_VERSION
         path = os.path.join(GOLDEN_DIR, f"{name}.json")

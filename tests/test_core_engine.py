@@ -2,7 +2,6 @@
 structural claims hold (deadlock-freedom of planned acquisition, wait-die
 false positives, ORTHRUS partitioned functionality)."""
 
-import numpy as np
 import pytest
 
 from repro.core.engine import EngineConfig, run_simulation

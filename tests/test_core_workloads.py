@@ -1,8 +1,6 @@
 """Workload generators + planner properties."""
 
 import numpy as np
-import pytest
-from hypothesis_compat import given, settings, st
 
 from repro.core import planner as P
 from repro.core.lockgrant import KEY_SENTINEL

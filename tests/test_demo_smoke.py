@@ -2,8 +2,9 @@
 
 Runs ``examples/oltp_contention_demo.py`` in a subprocess with the
 trimmed ``REPRO_DEMO_FAST`` budget and asserts the output is non-empty
-and contains all three sections — the contention sweep, the
-fragment-granularity sweep, and the planner-saturation stanza.
+and contains all four sections — the contention sweep, the
+fragment-granularity sweep, the planner-saturation stanza, and the
+overload / admission-control stanza.
 """
 
 import os
@@ -33,4 +34,6 @@ def test_demo_runs_and_prints_every_stanza():
     assert "hot records" in out  # contention sweep
     assert "multipart %" in out  # fragment-granularity sweep
     assert "planner lanes" in out  # planner-saturation stanza
+    assert "admission policy" in out  # overload-robustness stanza
+    assert "bounded backlog" in out and "deadline shed" in out
     assert "k/s" in out  # at least one throughput cell

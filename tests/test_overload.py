@@ -1,0 +1,437 @@
+"""Overload-robustness layer: admission policies, bounded backoff,
+bursty arrivals.
+
+Three layers of guarantees, mirroring the engine's contract:
+
+  * **Oracle pinning** — the carried device counters (rejects, sheds,
+    token admissions, backoff rounds, sacrifices) equal the pure-python
+    recurrences in ``repro.core.cost_model`` evaluated over the
+    closed-form arrival schedule (``engine.offered_by_round``).
+  * **Bit-identity under rejection** — the event-leaping loop and the
+    vmapped sweep driver reproduce the dense / serial reference exactly
+    for every policy, backoff mode and arrival pattern, *including* the
+    metrics layer (latency histogram, queue trajectories, goodput
+    split). Policy wake rounds are leap candidates; these tests are the
+    guard rail for that.
+  * **Arithmetic robustness** — the open-arrival closed forms saturate
+    (``engine._sat_mul``) instead of wrapping int32 at the most extreme
+    sweepable rates.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import cost_model, sweep
+from repro.core import engine as engine_lib
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+SIM = dict(max_rounds=1200, warmup_rounds=300, chunk_rounds=300,
+           target_commits=10**9)
+# warmup 0: raw pol_* deltas equal the full-run totals, so they can be
+# pinned against host oracles without reconstructing the warmup state
+SIM0 = dict(max_rounds=1200, warmup_rounds=0, chunk_rounds=300,
+            target_commits=10**9)
+
+OVERLOAD_WL = dict(kind="ycsb", num_txns=512, num_records=10_000,
+                   num_hot=8, batch_epoch=64, seed=0)
+MP_WL = dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
+             multipart_frac=1.0, num_partitions=8, batch_epoch=64, seed=0)
+
+BASE_ENG = dict(protocol="deadlock_free", n_exec=8,
+                epoch_interval_rounds=150)
+BATCH_ENG = dict(protocol="dgcc", n_cc=2, n_exec=6, window=2,
+                 fragment_exec=True, epoch_interval_rounds=30)
+
+# One representative config per policy / backoff / burst mechanism —
+# the cross product the fig17 graceful-degradation sweep explores.
+POLICY_CELLS = {
+    "bounded_backlog": dict(
+        BASE_ENG, admission_policy="bounded_backlog", backlog_cap=100),
+    "token_bucket": dict(
+        BASE_ENG, admission_policy="token_bucket",
+        token_interval_rounds=4, token_burst=32),
+    "deadline_shed": dict(
+        BASE_ENG, admission_policy="deadline_shed", deadline_rounds=400),
+    "shed_exp_budget": dict(
+        BASE_ENG, admission_policy="deadline_shed", deadline_rounds=400,
+        retry_budget=3, backoff_mode="exp", backoff_max_rounds=256),
+    "burst": dict(
+        BASE_ENG, arrival_pattern="burst", burst_period_epochs=4,
+        burst_on_epochs=1),
+    "diurnal": dict(
+        BASE_ENG, arrival_pattern="diurnal", burst_period_epochs=4),
+    "bb_burst": dict(
+        BASE_ENG, admission_policy="bounded_backlog", backlog_cap=100,
+        arrival_pattern="burst", burst_period_epochs=4,
+        burst_on_epochs=1),
+    "batch_bb": dict(
+        BATCH_ENG, admission_policy="bounded_backlog", backlog_cap=128),
+    "batch_burst": dict(
+        BATCH_ENG, arrival_pattern="burst", burst_period_epochs=4,
+        burst_on_epochs=1),
+    # QueCC's lane-granular fragment schedule depends only on the
+    # partition structure, so cells differing in hot-set size share
+    # plan shapes — the one batch protocol whose cells can actually
+    # stack under vmap (cf. test_fragment_mode_vmapped_matches_serial)
+    "batch_bb_quecc": dict(
+        protocol="quecc", n_cc=4, n_exec=6, window=2,
+        fragment_exec=True, epoch_interval_rounds=30,
+        admission_policy="bounded_backlog", backlog_cap=128),
+}
+BATCH_CELLS = {"batch_bb", "batch_burst", "batch_bb_quecc"}
+
+POL_KEYS = ("pol_rejected", "pol_shed", "pol_timedout", "pol_tb_adm",
+            "pol_sacrificed", "pol_backoff_rounds", "epoch_ctr")
+
+
+def _fingerprint(res):
+    """Counters, policy counters, and the full metrics layer — i.e.
+    everything result-visible except wall-clock and step counts."""
+    fp = [
+        res.commits, res.aborts_deadlock, res.aborts_ollp,
+        res.wasted_ops, res.rounds,
+        tuple(sorted(res.breakdown.items())),
+        res.raw["total_commits"], res.raw["next_txn"],
+        res.raw["rounds_total"],
+        tuple((k, res.raw.get(k)) for k in POL_KEYS),
+    ]
+    m = res.metrics
+    if m is not None:
+        fp += [
+            tuple(int(x) for x in m.lat_hist),
+            tuple(int(x) for x in m.q_depth),
+            tuple(int(x) for x in m.q_inflight),
+            m.p50, m.p99, m.p999,
+            m.offered, m.admitted, m.committed, m.rejected, m.shed,
+            m.timedout, m.sacrificed,
+        ]
+    return tuple(fp)
+
+
+def _run(eng_kw, wl, sim=SIM, **overrides):
+    cfg = EngineConfig(**dict(eng_kw, **overrides), **sim)
+    return run_simulation(cfg, wl)
+
+
+@pytest.fixture(scope="module")
+def overload_wl():
+    return make_workload(WorkloadConfig(**OVERLOAD_WL))
+
+
+@pytest.fixture(scope="module")
+def mp_wl():
+    return make_workload(WorkloadConfig(**MP_WL))
+
+
+# ---------------------------------------------------------------------------
+# oracle pinning: device counters == cost_model recurrences
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_backlog_never_exceeds_cap(overload_wl):
+    """The reject counter's invariant endpoint: after the last executed
+    round, the backlog (host-oracle arrivals minus consumed txns) is at
+    most the cap — i.e. ``cost_model.backlog_drops`` of the final state
+    is zero — and consumption splits exactly into admitted + rejected."""
+    cap = 100
+    eng = dict(BASE_ENG, admission_policy="bounded_backlog",
+               backlog_cap=cap)
+    res = _run(eng, overload_wl, sim=SIM0)
+    cfg = EngineConfig(**eng, **SIM0)
+    plan = engine_lib.make_plan(cfg, overload_wl)
+    r_last = res.raw["rounds_total"] - 1
+    arrived = engine_lib.offered_by_round(cfg, plan, r_last)
+    consumed = res.raw["next_txn"]
+    assert res.raw["pol_rejected"] > 0  # the cell genuinely overloads
+    assert cost_model.backlog_drops(arrived, consumed, cap) == 0
+    backlog = arrived - consumed
+    assert 0 <= backlog <= cap
+    # the sampled trajectory obeys the bound up to one in-flight epoch
+    # burst (arrivals land before the same round's drop stage runs)
+    assert (int(np.max(res.metrics.q_depth))
+            <= cap + OVERLOAD_WL["batch_epoch"])
+    m = res.metrics
+    assert m.admitted + m.rejected == consumed
+    assert m.committed <= m.admitted <= m.offered
+
+
+def test_deadline_shed_clears_stale_waiters(overload_wl):
+    """After the last executed round no waiter older than the deadline
+    remains queued: ``cost_model.deadline_drops`` of the final state is
+    zero, against the host-side arrival oracle."""
+    deadline = 400
+    eng = dict(BASE_ENG, admission_policy="deadline_shed",
+               deadline_rounds=deadline)
+    res = _run(eng, overload_wl, sim=SIM0)
+    cfg = EngineConfig(**eng, **SIM0)
+    plan = engine_lib.make_plan(cfg, overload_wl)
+    r_last = res.raw["rounds_total"] - 1
+    stale = engine_lib.offered_by_round(cfg, plan, r_last - deadline - 1)
+    consumed = res.raw["next_txn"]
+    assert res.raw["pol_shed"] > 0
+    assert cost_model.deadline_drops(stale, consumed) == 0
+    assert res.metrics.shed == res.raw["pol_shed"]
+
+
+def test_token_bucket_admissions_match_grant_oracle():
+    """With arrivals and exec slots both non-binding, the token bucket
+    is the only admission constraint, so the admission counter must
+    equal ``cost_model.token_grant`` at the last executed round — the
+    event-leap must wake at every ``token_ready_round``."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=0, batch_epoch=512, seed=0)
+    )
+    iv, burst = 8, 4
+    eng = dict(protocol="deadlock_free", n_exec=32,
+               epoch_interval_rounds=1,
+               admission_policy="token_bucket",
+               token_interval_rounds=iv, token_burst=burst)
+    res = _run(eng, wl, sim=SIM0)
+    r_last = res.raw["rounds_total"] - 1
+    assert res.raw["pol_tb_adm"] == cost_model.token_grant(
+        r_last, iv, burst
+    )
+    # the pure gate schedule is consistent with the grant count
+    sched = cost_model.token_bucket_schedule(
+        [0] * res.raw["pol_tb_adm"], iv, burst
+    )
+    assert sum(s <= r_last for s in sched) == res.raw["pol_tb_adm"]
+
+
+def test_exp_backoff_with_cap_at_base_matches_fixed(overload_wl):
+    """``min(base << shift, base) == base``: exponential backoff capped
+    at the base duration must be bit-identical to fixed backoff, and
+    its backoff-rounds counter must equal base x aborts — the engine
+    applies exactly ``cost_model.exp_backoff_rounds``."""
+    base = EngineConfig(protocol="twopl_waitdie", n_exec=8, **SIM0)
+    cap = base.cost.abort_backoff_rounds
+    fixed = _run(dict(protocol="twopl_waitdie", n_exec=8), overload_wl,
+                 sim=SIM0)
+    exp = _run(dict(protocol="twopl_waitdie", n_exec=8,
+                    backoff_mode="exp", backoff_max_rounds=cap),
+               overload_wl, sim=SIM0)
+    assert _fingerprint(exp)[:9] == _fingerprint(fixed)[:9]
+    aborts = exp.aborts_deadlock + exp.aborts_ollp
+    assert aborts > 0
+    assert all(
+        cost_model.exp_backoff_rounds(cap, a, cap) == cap
+        for a in range(8)
+    )
+    assert exp.raw["pol_backoff_rounds"] == cap * aborts
+
+
+def test_exp_backoff_unbounded_cap_exceeds_fixed_total(overload_wl):
+    """With a high cap, repeat aborters double their backoff, so the
+    total issued backoff strictly exceeds base x aborts (the fixed-mode
+    total for the same abort count)."""
+    base_rounds = EngineConfig(
+        protocol="twopl_waitdie", n_exec=8, **SIM0
+    ).cost.abort_backoff_rounds
+    res = _run(dict(protocol="twopl_waitdie", n_exec=8,
+                    backoff_mode="exp", backoff_max_rounds=4096),
+               overload_wl, sim=SIM0)
+    aborts = res.aborts_deadlock + res.aborts_ollp
+    assert aborts > 0
+    assert res.raw["pol_backoff_rounds"] > base_rounds * aborts
+
+
+def test_retry_budget_one_sacrifices_every_abort(overload_wl):
+    """``retry_budget=1`` means one execution attempt: every abort
+    exhausts the budget, so sacrificed == total aborts and no aborted
+    transaction ever re-enters backoff."""
+    res = _run(dict(protocol="twopl_waitdie", n_exec=8, retry_budget=1),
+               overload_wl, sim=SIM0)
+    aborts = res.aborts_deadlock + res.aborts_ollp
+    assert aborts > 0
+    assert res.raw["pol_sacrificed"] == aborts
+
+
+# ---------------------------------------------------------------------------
+# int32 robustness at extreme rates
+# ---------------------------------------------------------------------------
+
+
+def test_sat_mul_saturates_instead_of_wrapping():
+    import jax.numpy as jnp
+
+    sat = engine_lib._SAT
+    m = engine_lib._sat_mul
+    assert int(m(jnp.int32(3), jnp.int32(5))) == 15
+    assert int(m(jnp.int32(0), jnp.int32(2**30))) == 0
+    assert int(m(jnp.int32(2**20), jnp.int32(2**20))) == sat
+    assert int(m(jnp.int32(sat), jnp.int32(2))) == sat
+    # exact right up to the saturation threshold
+    assert int(m(jnp.int32(sat // 7), jnp.int32(7))) == (sat // 7) * 7
+
+
+@pytest.mark.parametrize("policy_kw", [
+    dict(admission_policy="bounded_backlog", backlog_cap=50),
+    dict(admission_policy="deadline_shed", deadline_rounds=64),
+    dict(admission_policy="token_bucket", token_interval_rounds=10**6,
+         token_burst=1),
+])
+def test_max_sweepable_rate_stays_in_int32(policy_kw):
+    """``epoch_interval_rounds=1`` with a full-batch epoch is the
+    fastest sweepable arrival schedule (one full workload per round).
+    The closed forms' products (cycle counts, token-ready rounds) leave
+    int32 here; ``_sat_mul`` must saturate them so every counter stays
+    non-negative and consistent — and leap must still match dense."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=8, batch_epoch=512, seed=0)
+    )
+    eng = dict(protocol="deadlock_free", n_exec=8,
+               epoch_interval_rounds=1, **policy_kw)
+    sim = dict(SIM0, max_rounds=600)
+    res = _run(eng, wl, sim=sim)
+    dense = _run(eng, wl, sim=sim, event_leap=False)
+    assert _fingerprint(res) == _fingerprint(dense)
+    for k in POL_KEYS:
+        if res.raw.get(k) is not None:
+            assert res.raw[k] >= 0, k
+    cfg = EngineConfig(**eng, **sim)
+    plan = engine_lib.make_plan(cfg, wl)
+    offered = engine_lib.offered_by_round(
+        cfg, plan, res.raw["rounds_total"] - 1
+    )
+    consumed = res.raw["next_txn"]
+    admitted = consumed - res.raw["pol_rejected"] - res.raw["pol_shed"]
+    assert 0 <= admitted <= consumed <= offered
+    assert res.commits <= admitted
+
+
+def test_offered_by_round_is_exact_int64():
+    """The host oracle must not itself wrap: at a round index far past
+    any simulated budget the arithmetic is exact int64."""
+    cfg = EngineConfig(**BASE_ENG, **SIM)
+    wl = make_workload(WorkloadConfig(**OVERLOAD_WL))
+    plan = engine_lib.make_plan(cfg, wl)
+    n = OVERLOAD_WL["num_txns"]
+    epochs = n // OVERLOAD_WL["batch_epoch"]
+    cyc = epochs * BASE_ENG["epoch_interval_rounds"]
+    r = 10**7
+    expect = (r // cyc) * n + min(
+        (r % cyc // 150 + 1) * 64, n
+    )
+    assert engine_lib.offered_by_round(cfg, plan, r) == expect
+    assert engine_lib.offered_by_round(cfg, plan, -1) == 0
+
+
+# ---------------------------------------------------------------------------
+# bit-identity under rejection: leap == dense, vmap == serial
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(POLICY_CELLS))
+def test_leap_matches_dense_per_policy(name, overload_wl, mp_wl):
+    """Policy drop/wake rounds are leap candidates: the leaping loop
+    must reproduce the dense loop bit-exactly — counters, goodput
+    split, latency histogram, queue trajectories — for every policy,
+    backoff mode, and arrival pattern."""
+    wl = mp_wl if name in BATCH_CELLS else overload_wl
+    leap = _run(POLICY_CELLS[name], wl, event_leap=True)
+    dense = _run(POLICY_CELLS[name], wl, event_leap=False)
+    assert _fingerprint(leap) == _fingerprint(dense)
+    assert leap.raw["steps_executed"] <= dense.raw["steps_executed"]
+
+
+@pytest.mark.parametrize(
+    "name", ["bounded_backlog", "token_bucket", "shed_exp_budget",
+             "bb_burst", "batch_bb_quecc"])
+def test_vmapped_matches_serial_per_policy(name):
+    """The stacked (vmapped) sweep driver must reproduce serial
+    per-cell execution exactly under rejection — drops and goodput
+    counters are per-cell state, not shared."""
+    wl_kw = MP_WL if name in BATCH_CELLS else OVERLOAD_WL
+    cfg = EngineConfig(**POLICY_CELLS[name], **SIM)
+    wls = [
+        make_workload(
+            WorkloadConfig(**dict(wl_kw, num_hot=h))
+        )
+        for h in (8, 64)
+    ]
+    batched = sweep.run_cells([(cfg, w) for w in wls])
+    assert [r.raw["group_cells"] for r in batched] == [2, 2]
+    serial = [run_simulation(cfg, w) for w in wls]
+    for b, s in zip(batched, serial):
+        assert _fingerprint(b) == _fingerprint(s)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    policy=st.sampled_from(
+        ["none", "bounded_backlog", "token_bucket", "deadline_shed"]),
+    interval=st.sampled_from([60, 150, 400]),
+    num_hot=st.sampled_from([0, 8, 512]),
+    pattern=st.sampled_from(["uniform", "burst"]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_leap_matches_dense_property(policy, interval, num_hot, pattern,
+                                     seed):
+    """Randomized (policy, arrival rate, contention, burstiness): the
+    leap/dense contract holds across the whole fig17 sweep space."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, batch_epoch=64, seed=seed)
+    )
+    eng = dict(protocol="deadlock_free", n_exec=8,
+               epoch_interval_rounds=interval)
+    if policy == "bounded_backlog":
+        eng.update(admission_policy=policy, backlog_cap=64)
+    elif policy == "token_bucket":
+        eng.update(admission_policy=policy, token_interval_rounds=4,
+                   token_burst=16)
+    elif policy == "deadline_shed":
+        eng.update(admission_policy=policy, deadline_rounds=300)
+    if pattern == "burst":
+        eng.update(arrival_pattern="burst", burst_period_epochs=4,
+                   burst_on_epochs=1)
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    leap = _run(eng, wl, sim=sim, event_leap=True)
+    dense = _run(eng, wl, sim=sim, event_leap=False)
+    assert _fingerprint(leap) == _fingerprint(dense)
+
+
+# ---------------------------------------------------------------------------
+# config validation and default bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_policy_requires_open_arrival():
+    with pytest.raises(AssertionError):
+        EngineConfig(protocol="deadlock_free", n_exec=8,
+                     admission_policy="bounded_backlog", backlog_cap=10)
+
+
+def test_burst_requires_period():
+    with pytest.raises(AssertionError):
+        EngineConfig(protocol="deadlock_free", n_exec=8,
+                     epoch_interval_rounds=100, arrival_pattern="burst")
+
+
+def test_batch_engine_rejects_backoff_knobs():
+    with pytest.raises(AssertionError):
+        EngineConfig(protocol="dgcc", n_cc=2, n_exec=6,
+                     epoch_interval_rounds=30, retry_budget=2)
+
+
+def test_layer_off_keeps_state_and_raw_shape(overload_wl):
+    """With every knob at its default the layer must be invisible: no
+    policy counters in the carried state or the result, and the
+    goodput split degenerates to offered == admitted accounting."""
+    res = _run(BASE_ENG, overload_wl)
+    assert all(res.raw.get(k) is None for k in POL_KEYS[:-1])
+    m = res.metrics
+    assert m.rejected == m.shed == m.timedout == m.sacrificed == 0
+    assert m.admitted <= m.offered
+    assert m.committed == res.commits
+    row = m.summary_row()
+    assert row["goodput_frac"] == round(m.committed / m.offered, 6)
+    # closed-loop cells keep the pre-layer row shape entirely
+    closed = _run(dict(protocol="deadlock_free", n_exec=8), overload_wl)
+    assert "goodput_frac" not in closed.metrics.summary_row()
+    assert closed.metrics.goodput_frac == 1.0

@@ -8,14 +8,12 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config, get_smoke_config
 from repro.sharding.policies import (
-    DEFAULT_RULES,
     rules_for,
     spec_for,
 )

@@ -114,7 +114,8 @@ def test_optimizer_decreases_quadratic(name):
                      min_dim_size_to_factor=4)
     params = {"w": jnp.ones((8, 8)) * 3.0}
     st = init_opt_state(ocfg, params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     l0 = float(loss(params))
     for _ in range(20):
         g = jax.grad(loss)(params)

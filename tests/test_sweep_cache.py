@@ -52,6 +52,50 @@ TRACED_VARIANTS = {
     # *value* is traced (one compilation per epoch-rate sweep), which
     # test_epoch_interval_value_shares_a_runner pins below
     "epoch_interval_rounds": dict(epoch_interval_rounds=100),
+    # Overload-robustness layer: the policy / backoff / burst *kinds*
+    # are statics; every numeric parameter is a traced plan scalar
+    # (test_policy_param_value_shares_a_runner pins that below). Each
+    # parameter's variant therefore also flips the kind that makes it
+    # legal — plus an unrelated static (event_leap / n_exec) where two
+    # parameters share one kind, so every variant keys a distinct
+    # runner-cache entry.
+    "admission_policy": dict(
+        admission_policy="bounded_backlog", backlog_cap=64,
+        epoch_interval_rounds=100,
+    ),
+    "backlog_cap": dict(
+        admission_policy="bounded_backlog", backlog_cap=64,
+        epoch_interval_rounds=100, event_leap=False,
+    ),
+    "token_interval_rounds": dict(
+        admission_policy="token_bucket", token_interval_rounds=4,
+        token_burst=8, epoch_interval_rounds=100,
+    ),
+    "token_burst": dict(
+        admission_policy="token_bucket", token_interval_rounds=4,
+        token_burst=8, epoch_interval_rounds=100, event_leap=False,
+    ),
+    "deadline_rounds": dict(
+        admission_policy="deadline_shed", deadline_rounds=200,
+        epoch_interval_rounds=100,
+    ),
+    "retry_budget": dict(retry_budget=2),
+    "backoff_mode": dict(backoff_mode="exp"),
+    "backoff_max_rounds": dict(
+        backoff_mode="exp", backoff_max_rounds=64, retry_budget=1,
+    ),
+    "arrival_pattern": dict(
+        arrival_pattern="burst", burst_period_epochs=4,
+        burst_on_epochs=1, epoch_interval_rounds=100,
+    ),
+    "burst_period_epochs": dict(
+        arrival_pattern="diurnal", burst_period_epochs=6,
+        epoch_interval_rounds=100, event_leap=False,
+    ),
+    "burst_on_epochs": dict(
+        arrival_pattern="burst", burst_period_epochs=4,
+        burst_on_epochs=2, epoch_interval_rounds=100, n_exec=5,
+    ),
     "cost": dict(
         cost=dataclasses.replace(
             EngineConfig(**BASE).cost, lock_op_cycles=999
@@ -104,6 +148,42 @@ def test_epoch_interval_value_shares_a_runner():
     da = EngineConfig(**dg, epoch_interval_rounds=50)
     db = EngineConfig(**dg, epoch_interval_rounds=400)
     assert da.trace_statics() == db.trace_statics()
+
+
+def test_policy_param_value_shares_a_runner():
+    """Every numeric overload-layer parameter (caps, intervals, budgets,
+    deadlines, burst shape) is a traced plan scalar: a load x policy-knob
+    sweep compiles one runner per policy *kind*, not per value. Only the
+    kind switches (admission_policy / backoff_mode / pattern != uniform
+    / retry_budget > 0) key the cache."""
+    base = dict(BASE, epoch_interval_rounds=100)
+    for kind_kw, a_kw, b_kw in (
+        (dict(admission_policy="bounded_backlog"),
+         dict(backlog_cap=32), dict(backlog_cap=512)),
+        (dict(admission_policy="token_bucket", token_burst=8),
+         dict(token_interval_rounds=2), dict(token_interval_rounds=64)),
+        (dict(admission_policy="token_bucket", token_interval_rounds=4),
+         dict(token_burst=1), dict(token_burst=128)),
+        (dict(admission_policy="deadline_shed"),
+         dict(deadline_rounds=50), dict(deadline_rounds=5000)),
+        (dict(backoff_mode="exp"),
+         dict(backoff_max_rounds=16), dict(backoff_max_rounds=1024)),
+        (dict(), dict(retry_budget=1), dict(retry_budget=9)),
+        (dict(arrival_pattern="burst", burst_period_epochs=8),
+         dict(burst_on_epochs=1), dict(burst_on_epochs=7)),
+        (dict(arrival_pattern="diurnal"),
+         dict(burst_period_epochs=4), dict(burst_period_epochs=32)),
+    ):
+        a = EngineConfig(**base, **kind_kw, **a_kw)
+        b = EngineConfig(**base, **kind_kw, **b_kw)
+        assert a.trace_statics() == b.trace_statics(), (kind_kw, a_kw)
+    # the burst/diurnal *shape* is traced too: both patterns share the
+    # single open-arrival-with-schedule runner
+    burst = EngineConfig(**base, arrival_pattern="burst",
+                         burst_period_epochs=8, burst_on_epochs=2)
+    diurnal = EngineConfig(**base, arrival_pattern="diurnal",
+                           burst_period_epochs=8)
+    assert burst.trace_statics() == diurnal.trace_statics()
 
 
 def test_runner_cache_misses_on_statics_and_shapes():

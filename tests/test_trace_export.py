@@ -1,0 +1,166 @@
+"""Chrome-trace export (``tools/trace_export.py``): schema, track
+monotonicity, and event accounting.
+
+The per-slot span extractor is a *second* observer of the engine's
+trajectory: every transaction's pass through the release phase becomes
+one ``"rel"`` duration event, so the span count must equal the engine's
+own ``commits + aborts`` counters — an end-to-end cross-check between
+the slot-matrix snapshots and the carried scalar counters. The JSON
+must load as the Trace Event Format chrome://tracing and Perfetto
+expect: ``traceEvents`` records with ``name``/``ph``/``pid``/``ts``,
+duration events carrying ``dur``, and per-track non-overlapping,
+monotonically ordered spans.
+"""
+
+import json
+
+import pytest
+
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+from tools.trace_export import chrome_trace, main, replay_dense
+
+ROUNDS = 400
+SIM = dict(max_rounds=ROUNDS, warmup_rounds=0, chunk_rounds=ROUNDS,
+           target_commits=10**9)
+
+# a contended wait-die cell (plenty of aborts) and an overloaded
+# open-arrival cell with the robustness layer shedding + retiring txns
+CELLS = {
+    "waitdie_hot": (
+        dict(kind="ycsb", num_txns=128, num_records=10_000, num_hot=8,
+             seed=0),
+        dict(protocol="twopl_waitdie", n_exec=4),
+    ),
+    "overload_shed": (
+        dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
+             batch_epoch=64, seed=0),
+        dict(protocol="twopl_waitdie", n_exec=4,
+             epoch_interval_rounds=100,
+             admission_policy="deadline_shed", deadline_rounds=200,
+             retry_budget=3, backoff_mode="exp",
+             backoff_max_rounds=128),
+    ),
+}
+
+
+def _cell(name):
+    wl_kw, eng_kw = CELLS[name]
+    wl = make_workload(WorkloadConfig(**wl_kw))
+    cfg = EngineConfig(**eng_kw, **SIM)
+    return cfg, wl
+
+
+@pytest.fixture(scope="module")
+def traced():
+    out = {}
+    for name in CELLS:
+        cfg, wl = _cell(name)
+        snaps, _ = replay_dense(cfg, wl)
+        out[name] = (cfg, wl, snaps, chrome_trace(snaps, cfg))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CELLS))
+def test_chrome_trace_schema(traced, name):
+    """Every record is a well-formed trace event: required keys, known
+    phase codes, JSON-serializable as-is."""
+    _cfg, _wl, _snaps, events = traced[name]
+    json.dumps(events)  # round-trippable without a custom encoder
+    assert events
+    for e in events:
+        assert {"name", "ph", "pid", "ts"} <= set(e)
+        assert e["ph"] in ("X", "C")
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] > 0
+            assert isinstance(e["tid"], int)
+            assert e["args"]["rounds"] >= 1
+        else:
+            assert "inflight" in e["args"]
+
+
+@pytest.mark.parametrize("name", sorted(CELLS))
+def test_chrome_trace_tracks_are_monotonic(traced, name):
+    """Within each slot track the spans must not overlap (each slot
+    holds one txn-phase at a time), and the counter track must sample
+    every round in order."""
+    cfg, _wl, snaps, events = traced[name]
+    us = cfg.cost.round_seconds * 1e6
+    tracks = {}
+    for e in events:
+        if e["ph"] == "X":
+            tracks.setdefault(e["tid"], []).append(e)
+    assert tracks
+    for slot, evs in tracks.items():
+        end = 0.0
+        for e in sorted(evs, key=lambda e: e["ts"]):
+            assert e["ts"] >= end - 1e-6, slot
+            end = e["ts"] + e["dur"]
+            assert end <= len(snaps) * us + 1e-6
+    counter_ts = [e["ts"] for e in events if e["ph"] == "C"]
+    assert counter_ts == sorted(counter_ts)
+    assert len(counter_ts) == len(snaps)
+
+
+def _attempt_ends(events, n_snaps, us):
+    """Execution-attempt terminations visible in the trace: an attempt
+    ends either by re-entering backoff (an abort that will retry) or by
+    the transaction vanishing from its slot (commit, or a policy
+    give-up — sacrifice / in-flight timeout, which the engine also
+    counts as an abort). Transactions still resident at the replay
+    horizon end nothing."""
+    tracks = {}
+    for e in events:
+        if e["ph"] == "X":
+            tracks.setdefault(e["tid"], []).append(e)
+    total = 0
+    for evs in tracks.values():
+        evs.sort(key=lambda e: e["ts"])
+        total += sum(e["args"]["phase"] == "backoff" for e in evs)
+        for i, e in enumerate(evs):
+            nxt = evs[i + 1] if i + 1 < len(evs) else None
+            if nxt is not None and nxt["args"]["txn"] == e["args"]["txn"]:
+                continue  # same attempt, next phase
+            if (e["ts"] + e["dur"]) / us < n_snaps - 1e-6:
+                total += 1  # slot released (or handed over) pre-horizon
+    return total
+
+
+@pytest.mark.parametrize("name", sorted(CELLS))
+def test_attempt_ends_count_commits_plus_aborts(traced, name):
+    """The trace's attempt terminations must equal the engine's own
+    ``commits + aborts`` counters for the identical cell — the span
+    extractor and the carried scalar counters observe the same
+    trajectory."""
+    cfg, wl, snaps, events = traced[name]
+    us = cfg.cost.round_seconds * 1e6
+    res = run_simulation(cfg, wl)
+    assert res.commits > 0
+    if name == "overload_shed":
+        # the robustness layer is genuinely active in this cell
+        assert res.raw["pol_shed"] > 0
+        assert res.aborts_deadlock > 0
+        assert res.raw["pol_sacrificed"] > 0
+    assert _attempt_ends(events, len(snaps), us) == (
+        res.commits + res.aborts_deadlock + res.aborts_ollp
+    )
+
+
+def test_main_round_trip(tmp_path, capsys):
+    """The CLI writes a loadable trace file whose event population
+    matches a direct chrome_trace call."""
+    out = tmp_path / "trace.json"
+    rc = main([
+        "--protocol", "deadlock_free", "--num-txns", "64",
+        "--num-hot", "8", "--n-exec", "4", "--rounds", "120",
+        "--out", str(out),
+    ])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["displayTimeUnit"] == "ms"
+    events = data["traceEvents"]
+    assert any(e["ph"] == "X" for e in events)
+    assert sum(e["ph"] == "C" for e in events) == 121
+    msg = capsys.readouterr().out
+    assert str(out) in msg and "commits" in msg
