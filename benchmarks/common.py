@@ -60,22 +60,30 @@ SIM = dict(
 PROCS = int(os.environ.get("REPRO_BENCH_PROCS", "0"))
 USE_VMAP = bool(int(os.environ.get("REPRO_BENCH_VMAP", "0")))
 
+# Mega-dispatch fusing: REPRO_BENCH_K=8 runs every cell with
+# ``rounds_per_dispatch=8`` (results are bit-identical for any K — the
+# knob only trades compile time for per-round dispatch overhead, see
+# benchmarks/README.md "per-dispatch cost model"). K=1 keeps cache keys
+# byte-identical to the pre-knob layout so recorded fig13–fig17 results
+# stay valid; any other K is folded into the cell hash.
+BENCH_K = int(os.environ.get("REPRO_BENCH_K", "1"))
+ENG_OVERRIDES = {} if BENCH_K == 1 else {"rounds_per_dispatch": BENCH_K}
+
 _POOL = None
 
 
 def _cell_hash(wl_cfg, eng_kw: dict) -> str:
     from repro.core.sweep import ENGINE_VERSION
 
-    key = json.dumps(
-        {
-            "wl": wl_cfg.__dict__,
-            "eng": {k: str(v) for k, v in eng_kw.items()},
-            "sim": SIM,
-            "engine": ENGINE_VERSION,
-        },
-        sort_keys=True,
-        default=str,
-    )
+    key_dict = {
+        "wl": wl_cfg.__dict__,
+        "eng": {k: str(v) for k, v in eng_kw.items()},
+        "sim": SIM,
+        "engine": ENGINE_VERSION,
+    }
+    if ENG_OVERRIDES:
+        key_dict["eng_overrides"] = ENG_OVERRIDES
+    key = json.dumps(key_dict, sort_keys=True, default=str)
     return hashlib.sha1(key.encode()).hexdigest()[:16]
 
 
@@ -120,7 +128,7 @@ def _simulate_cells(payload):
     out = []
     for name, wl_kw, eng_kw in cells:
         wl = make_workload(WorkloadConfig(**wl_kw))
-        cfg = EngineConfig(**eng_kw, **sim)
+        cfg = EngineConfig(**{**ENG_OVERRIDES, **eng_kw}, **sim)
         t0 = time.time()
         res = run_simulation(cfg, wl)
         out.append((name, _result_row(name, res, time.time() - t0)))
@@ -142,7 +150,8 @@ def _simulate_cells_vmapped(payload):
 
     t0 = time.time()
     pairs = [
-        (EngineConfig(**eng_kw, **sim), make_workload(WorkloadConfig(**wl_kw)))
+        (EngineConfig(**{**ENG_OVERRIDES, **eng_kw}, **sim),
+         make_workload(WorkloadConfig(**wl_kw)))
         for _name, wl_kw, eng_kw in cells
     ]
     results = sweep.run_cells(pairs)

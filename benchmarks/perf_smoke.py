@@ -10,6 +10,7 @@ regressions that leave rounds/s unchanged.
   PYTHONPATH=src REPRO_BENCH_FAST=1 python -m benchmarks.perf_smoke
   PYTHONPATH=src python -m benchmarks.perf_smoke --reset-baseline
   PYTHONPATH=src python -m benchmarks.perf_smoke --compare-legacy
+  PYTHONPATH=src python -m benchmarks.perf_smoke --compare-k
 
 The three cells cover the engine's step-cost regimes: dynamic 2PL
 (dense rounds, deadlock logic), per-transaction planned locking, and a
@@ -19,7 +20,12 @@ per-round step cost — the regime the packed-state rewrite targets.
 ``--compare-legacy`` additionally times the frozen pre-rewrite step
 builders (``state_layout="legacy"``) on the same cells and records the
 per-cell speedup under ``packed_vs_legacy`` (results are bit-identical;
-only the wall clock may differ). Runs always bypass the benchmark
+only the wall clock may differ). ``--compare-k`` does the same for the
+K-round mega-dispatch: it times ``rounds_per_dispatch=8`` against K=1
+warm-vs-warm, records the per-cell ratio under
+``megadispatch_speedup``, and *gates* on the saturated lock-table
+cells — if fusing stops amortizing per-round dispatch cost there, the
+PR 8 speedup is silently gone. Runs always bypass the benchmark
 cache — the point is to time the engine, not to reread old results.
 """
 
@@ -32,6 +38,18 @@ import sys
 import time
 
 REGRESSION_FACTOR = 3.0
+# --compare-k gate: minimum warm K=8/K=1 throughput ratio on the
+# saturated lock-table cells. On the 2-core CPU CI box fused dispatch
+# is roughly neutral (measured ~0.7-1.1x: XLA CPU pays per *op
+# executed*, not per dispatch — the fusing upside is accelerator
+# backends with per-launch overhead). The floor exists to catch a
+# fusing formulation that breaks carried-buffer aliasing and
+# degenerates into whole-state copies: the known-bad unguarded unroll
+# measures ~0.28x here, well below the floor, while a healthy build's
+# worst cell (waitdie, ~0.6x) stays comfortably above it.
+MEGADISPATCH_MIN = 0.4
+MEGADISPATCH_GATED = ("smoke_twopl_waitdie", "smoke_deadlock_free")
+MEGADISPATCH_K = 8
 
 YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0,
             num_hot=64)
@@ -48,7 +66,8 @@ SMOKE_CELLS = [
 ]
 
 
-def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
+def run_smoke(compare_legacy: bool = False,
+              compare_k: bool = False) -> dict[str, dict]:
     from benchmarks.common import SIM
     from repro.core.engine import EngineConfig, run_simulation
     from repro.core.sweep import ENGINE_VERSION
@@ -90,12 +109,38 @@ def run_smoke(compare_legacy: bool = False) -> dict[str, dict]:
             out[name]["warm_wall_s"] = round(pwall, 2)
             out[name]["legacy_warm_wall_s"] = round(lwall, 2)
             out[name]["packed_vs_legacy"] = round(lwall / pwall, 2)
+        if compare_k:
+            # warm-vs-warm K=1 against K=8 mega-dispatch: both runners
+            # compiled and cached, so the ratio is pure per-round
+            # dispatch-overhead amortization (results are bit-identical
+            # — asserted, it's the engine's contract)
+            t0 = time.time()
+            run_simulation(cfg, wl)
+            k1_wall = max(time.time() - t0, 1e-9)
+            k_cfg = dataclasses.replace(
+                cfg, rounds_per_dispatch=MEGADISPATCH_K
+            )
+            run_simulation(k_cfg, wl)  # warm the compile cache
+            t0 = time.time()
+            kres = run_simulation(k_cfg, wl)
+            k_wall = max(time.time() - t0, 1e-9)
+            assert (kres.commits, kres.aborts_deadlock, kres.rounds) == (
+                res.commits, res.aborts_deadlock, res.rounds
+            ), f"{name}: fused-K/K=1 results diverged"
+            out[name]["warm_wall_s"] = round(k1_wall, 2)
+            out[name]["k8_warm_wall_s"] = round(k_wall, 2)
+            out[name]["k8_rounds_per_s"] = round(
+                res.raw["rounds_total"] / k_wall, 1
+            )
+            out[name]["megadispatch_speedup"] = round(k1_wall / k_wall, 2)
         print(
             f"{name:24s} wall={out[name]['wall_s']:6.2f}s "
             f"rounds/s={out[name]['sim_rounds_per_s']:9.1f} "
             f"steps={out[name]['steps_executed']}/{out[name]['rounds_total']}"
             + (f" packed_vs_legacy={out[name]['packed_vs_legacy']:.2f}x"
                if "packed_vs_legacy" in out[name] else "")
+            + (f" megadispatch_speedup={out[name]['megadispatch_speedup']:.2f}x"
+               if "megadispatch_speedup" in out[name] else "")
         )
     return out
 
@@ -112,13 +157,18 @@ def main() -> None:
     ap.add_argument("--compare-legacy", action="store_true",
                     help="also time the frozen pre-rewrite step builders "
                          "and record the per-cell packed speedup")
+    ap.add_argument("--compare-k", action="store_true",
+                    help="also time rounds_per_dispatch=8 warm-vs-warm, "
+                         "record the per-cell megadispatch_speedup, and "
+                         "gate on the saturated lock-table cells")
     args = ap.parse_args()
     os.environ.setdefault("REPRO_BENCH_FAST", "1")
 
     from benchmarks.common import load_bench_engine, save_bench_engine
     from repro.core.sweep import ENGINE_VERSION
 
-    smoke = run_smoke(compare_legacy=args.compare_legacy)
+    smoke = run_smoke(compare_legacy=args.compare_legacy,
+                      compare_k=args.compare_k)
     data = load_bench_engine()
     data["engine_version"] = ENGINE_VERSION
     baseline = data.get("ci_baseline")
@@ -150,6 +200,26 @@ def main() -> None:
     else:
         data["ci_baseline"] = smoke
         print("# recorded new CI baseline")
+
+    if args.compare_k:
+        for name in MEGADISPATCH_GATED:
+            spd = smoke.get(name, {}).get("megadispatch_speedup")
+            if spd is not None and spd < MEGADISPATCH_MIN:
+                failures.append(
+                    f"{name}: megadispatch_speedup {spd:.2f}x is below the "
+                    f"{MEGADISPATCH_MIN:.1f}x floor (K={MEGADISPATCH_K} "
+                    "fusing is copying carried state instead of aliasing)"
+                )
+            # warm fused throughput also gates against its own recorded
+            # baseline, symmetric with the cold sim_rounds_per_s gate
+            base_k8 = (baseline or {}).get(name, {}).get("k8_rounds_per_s")
+            cur_k8 = smoke.get(name, {}).get("k8_rounds_per_s")
+            if base_k8 and cur_k8 and cur_k8 * REGRESSION_FACTOR < base_k8:
+                failures.append(
+                    f"{name}: warm K={MEGADISPATCH_K} {cur_k8:.0f} rounds/s "
+                    f"is >{REGRESSION_FACTOR:.0f}x below baseline "
+                    f"{base_k8:.0f}"
+                )
 
     data["last_smoke"] = smoke
     save_bench_engine(data)

@@ -375,4 +375,34 @@ def deadline_drops(arrived_stale: int, consumed: int) -> int:
     return max(int(arrived_stale) - int(consumed), 0)
 
 
+def megadispatch_speedup(compute_us: float, overhead_us: float,
+                         k: int) -> float:
+    """Predicted warm-throughput ratio of fusing ``k`` engine rounds
+    into one dispatch versus one round per dispatch. With per-round
+    compute ``c`` and per-dispatch overhead ``o`` (launch, host
+    round-trip, runtime bookkeeping), K-fusing amortizes ``o`` over
+    ``k`` rounds::
+
+        speedup(k) = (c + o) / (c + o / k)
+
+    The model says where fusing pays: it approaches ``1 + o/c`` as
+    ``k`` grows, so the win is bounded by the overhead-to-compute
+    ratio. On XLA CPU ``o`` is a few microseconds against a
+    multi-hundred-microsecond round, so the predicted (and measured)
+    ratio is ~1.0 — the lever is accelerator backends where a kernel
+    launch costs as much as the round itself.
+
+    >>> megadispatch_speedup(compute_us=10.0, overhead_us=10.0, k=8)
+    1.7777777777777777
+    >>> round(megadispatch_speedup(compute_us=300.0, overhead_us=3.0, k=8), 4)
+    1.0087
+    >>> megadispatch_speedup(compute_us=100.0, overhead_us=50.0, k=1)
+    1.0
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    c, o = float(compute_us), float(overhead_us)
+    return (c + o) / (c + o / k)
+
+
 DEFAULT_COST_MODEL = CostModel()

@@ -309,6 +309,36 @@ class EngineConfig:
     arrival_pattern: str = "uniform"
     burst_period_epochs: int = 0
     burst_on_epochs: int = 0
+    # K-round mega-dispatch: the sweep runner unrolls K copies of the
+    # step body per `lax.while_loop` iteration (each copy guarded by
+    # `r < r_end`), amortizing the fixed per-op dispatch overhead of
+    # ~90 fused kernels/round across K rounds. Results are bit-identical
+    # for every K — each executed inner step sees exactly the state the
+    # K=1 loop would have seen, and steps at the chunk bound are skipped
+    # — so golden traces and differential oracles hold at any value.
+    # The compiled value is the pow2 bucket `dispatch_rounds` (trace
+    # static), so a K sweep shares runners per bucket.
+    rounds_per_dispatch: int = 1
+    # Release / wait-for representation for the non-ORTHRUS grant +
+    # deadlock stages. "csr" (default): FIFO enq-min via a [T]-sized
+    # sort + segmented min over the compact pending-request list, and
+    # wait-for edges from the lock table (write holders) plus a carried
+    # per-record packed reader bitmask — no [T, T] stamp comparison and
+    # no [T, T, K] key-equality tensor. "dense": the all-pairs
+    # formulation, kept as the in-tree oracle (results are bit-identical
+    # — golden traces run the csr path, differential tests compare the
+    # two). Ignored by ORTHRUS (segmented-grant path) and the batch
+    # engines; the frozen legacy layout predates the flag.
+    release_path: str = "csr"
+    # Grant/wavefront inner-loop implementation: "jnp" = the pure-jnp
+    # formulations in this file; "pallas" = the Pallas kernels
+    # (kernels.lock_grant for the ORTHRUS segmented grant,
+    # kernels.dep_wavefront for the batch-engine readiness scan),
+    # interpret-or-compiled per kernels.resolve_interpret; "auto"
+    # (default) = pallas on backends with compiled Pallas (TPU/GPU),
+    # jnp elsewhere. Both paths are bit-identical (the jnp code is the
+    # kernels' oracle).
+    kernel_impl: str = "auto"
     max_rounds: int = 60_000
     warmup_rounds: int = 4_000
     chunk_rounds: int = 4_000
@@ -401,6 +431,14 @@ class EngineConfig:
                 "the frozen legacy engine predates the overload "
                 "robustness layer"
             )
+        assert self.rounds_per_dispatch >= 1, self.rounds_per_dispatch
+        assert self.release_path in ("csr", "dense"), self.release_path
+        assert self.kernel_impl in ("auto", "jnp", "pallas"), self.kernel_impl
+        if self.release_path != "csr" or self.kernel_impl != "auto":
+            assert self.state_layout == "packed", (
+                "the frozen legacy engine has a single (dense, jnp) "
+                "grant/wait-for formulation"
+            )
 
     @property
     def n_slots(self) -> int:
@@ -413,6 +451,13 @@ class EngineConfig:
     @property
     def is_batch_planned(self) -> bool:
         return self.protocol in ("dgcc", "quecc")
+
+    @property
+    def dispatch_rounds(self) -> int:
+        """Compiled steps per XLA dispatch: ``rounds_per_dispatch``
+        rounded up to a power of two, so a K sweep shares compiled
+        runners per bucket instead of compiling one program per K."""
+        return 1 << (self.rounds_per_dispatch - 1).bit_length()
 
     @property
     def is_dynamic_2pl(self) -> bool:
@@ -457,6 +502,11 @@ class EngineConfig:
             self.retry_budget > 0,
             self.backoff_mode,
             self.arrival_pattern != "uniform",
+            # mega-dispatch: only the pow2 bucket is compiled in, so
+            # e.g. rounds_per_dispatch 5..8 share one runner
+            self.dispatch_rounds,
+            self.release_path,
+            self.kernel_impl,
             self.cost,
         )
 
@@ -766,6 +816,41 @@ def offered_by_round(
     return int((r // cyc) * n + min(in_cyc, n))
 
 
+def _use_pallas(cfg: EngineConfig) -> bool:
+    """Whether the step builders call the Pallas kernels for the grant /
+    wavefront inner loops (``EngineConfig.kernel_impl``). "auto" picks
+    pallas only where compiled Pallas exists (TPU/GPU) — on CPU the
+    kernels would run the interpreter, orders of magnitude slower than
+    the jnp formulations they are bit-identical to."""
+    if cfg.kernel_impl == "auto":
+        return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+    return cfg.kernel_impl == "pallas"
+
+
+def rebase_enq(s: dict) -> dict:
+    """Rebase enqueue stamps against the minimum live stamp.
+
+    ``enq_ctr`` is a monotone int32: at saturation (new request +
+    release stamps every round) it wraps after a few million rounds and
+    silently corrupts the FIFO enq-min grant comparison, whose strict
+    compares assume stamps never decrease. Grant decisions depend only
+    on stamp *differences* among live entries (``want | granted``), so
+    subtracting a uniform delta that pins the minimum live stamp at 1
+    is bit-exact — the sweep runner applies this at every dispatch
+    boundary, bounding the counter by the in-flight request count
+    instead of total simulated work. With no live entries the counter
+    resets to 1. (The frozen legacy oracle keeps the unrebased counter;
+    decisions are equal over any horizon short of the wrap.)
+    """
+    live = s["want"] | s["granted"]
+    m = jnp.min(jnp.where(live, s["enq"], _IMAX))
+    delta = jnp.minimum(m, s["enq_ctr"]) - 1
+    s = dict(s)
+    s["enq"] = s["enq"] - delta
+    s["enq_ctr"] = s["enq_ctr"] - delta
+    return s
+
+
 def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
     R = num_records
     i32 = jnp.int32
@@ -816,6 +901,13 @@ def _state0(cfg: EngineConfig, num_records: int, T: int, K: int):
         s["agg_sum"] = jnp.zeros((R, 3), i32)
         s["agg_prev_idx"] = jnp.full((T, K), R, i32)
         s["agg_prev_upd"] = jnp.zeros((T, K, 3), i32)
+    if cfg.release_path == "csr" and cfg.deadlock_scheme != "none":
+        # csr wait-for: carried per-record packed reader bitmask
+        # (bit u of rdr[q, u // 32] = slot u holds >= 1 granted read
+        # entry on record q), maintained incrementally at grant /
+        # release — the deadlock stage gathers waiters' digests from it
+        # instead of building the dense [T, T, K] key-equality tensor.
+        s["rdr"] = jnp.zeros((R, (T + 31) // 32), i32)
     # overload-robustness counters (carried scalars; sweep._OPT_SCALARS
     # picks up whichever are present). Keyed on the same statics as the
     # step builder, so vmapped cells always share a state shape.
@@ -903,6 +995,16 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
         "waitfor": cm.waitfor_maintain_cycles,
         "dreadlocks": cm.dreadlocks_spin_cycles,
     }.get(dl, 0)
+    # compact CSR release / wait-for path (EngineConfig.release_path)
+    use_csr = cfg.release_path == "csr" and not cfg.is_orthrus
+    need_rdr = use_csr and dl != "none"
+    rdr_word = slot_ids // 32  # reader-bitmask word / bit per slot
+    rdr_bit = jnp.int32(1) << (slot_ids % 32)
+    use_pallas = cfg.is_orthrus and _use_pallas(cfg)
+    if use_pallas:
+        from repro.kernels.lock_grant.ops import lock_grant as _lock_grant
+
+        grant_block = max(64, min(1024, 1 << (T * K - 1).bit_length()))
 
     def rounds_of(cyc):
         return (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
@@ -1155,6 +1257,23 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             s["rc"] = s["rc"].at[jnp.where(is_rd, rel_k, R)].add(
                 -1, mode="drop"
             )
+            if need_rdr:
+                # clear the slot's reader bit once per *distinct*
+                # released read key: a slot releases all its granted
+                # entries at once, and re-entrant reads may hold several
+                # columns on one record — only the first contributes
+                dup = (
+                    (keys[:, :, None] == keys[:, None, :])
+                    & is_rd[:, None, :]
+                    & (kk[None, None, :] < kk[None, :, None])
+                ).any(-1)
+                first_rd = is_rd & ~dup
+                s["rdr"] = s["rdr"].at[
+                    jnp.where(first_rd, rel_k, R),
+                    jnp.broadcast_to(rdr_word[:, None], (T, K)),
+                ].add(
+                    jnp.where(first_rd, -rdr_bit[:, None], 0), mode="drop"
+                )
             s["granted"] = s["granted"] & ~rel_entries
 
         # ------------------------------------------------ 6. requests: want
@@ -1210,18 +1329,29 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             ent_enq = s["enq"].reshape(-1)
             safe = jnp.minimum(ent_key, R - 1)
             in_rng = ent_key < R
-            wh_free = (s["wh"][safe] == -1) & in_rng
-            rcv = jnp.where(in_rng, s["rc"][safe], 0)
-            order = lex_order(ent_key, ent_enq)
-            inv = inverse_permutation(order)
-            g_sorted, _cont, _new = segmented_grant(
-                ent_key[order],
-                ent_enq[order],
-                ent_kind[order],
-                wh_free[order],
-                rcv[order],
-            )
-            grant = g_sorted[inv].reshape(T, K)
+            if use_pallas:
+                # the Pallas segmented-grant kernel (compiled on
+                # TPU/GPU, interpreted elsewhere — see
+                # kernels.resolve_interpret); bit-identical to the jnp
+                # path below, which is its oracle
+                g_flat, _cont = _lock_grant(
+                    ent_key, ent_enq, ent_kind, s["wh"], s["rc"],
+                    num_records=R, block_n=grant_block,
+                )
+                grant = g_flat.reshape(T, K)
+            else:
+                wh_free = (s["wh"][safe] == -1) & in_rng
+                rcv = jnp.where(in_rng, s["rc"][safe], 0)
+                order = lex_order(ent_key, ent_enq)
+                inv = inverse_permutation(order)
+                g_sorted, _cont, _new = segmented_grant(
+                    ent_key[order],
+                    ent_enq[order],
+                    ent_kind[order],
+                    wh_free[order],
+                    rcv[order],
+                )
+                grant = g_sorted[inv].reshape(T, K)
             # re-entrant grants bypass the FIFO: a slot re-requesting a key
             # it already write-holds is granted immediately (real
             # transactions touch the same row more than once; without this
@@ -1254,13 +1384,43 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             renq = jnp.take_along_axis(s["enq"], kptr_c, axis=1).squeeze(1)
             rmode = jnp.take_along_axis(modes, kptr_c, axis=1).squeeze(1)
             is_wr_req = pend_t & (rmode == MODE_WRITE)
-            same_key = (rkey[None, :] == rkey[:, None]) & pend_t[None, :]
-            enq_b = jnp.broadcast_to(renq[None, :], (T, T))
-            min_wr = jnp.min(
-                jnp.where(same_key & is_wr_req[None, :], enq_b, _IMAX),
-                axis=1,
-            )
-            min_req = jnp.min(jnp.where(same_key, enq_b, _IMAX), axis=1)
+            if use_csr:
+                # compact CSR grant: sort the <= T pending requests by
+                # (key, stamp), take segmented minima of the enqueue
+                # stamps, and scatter them back to slot order — work
+                # sized to the request list (O(T log T)) instead of the
+                # all-pairs [T, T] stamp comparison below. Non-pending
+                # slots sort to a sentinel segment whose minima are
+                # never read (grant_t is masked by pend_t).
+                skey = jnp.where(pend_t, rkey, _IMAX)
+                order = lex_order(skey, renq)
+                ks = skey[order]
+                eqs = renq[order]
+                seg_start = jnp.concatenate(
+                    [jnp.ones((1,), jnp.bool_), ks[1:] != ks[:-1]]
+                )
+                seg_id = jnp.cumsum(seg_start.astype(i32)) - 1
+                min_req_seg = jax.ops.segment_min(
+                    eqs, seg_id, num_segments=T
+                )
+                min_wr_seg = jax.ops.segment_min(
+                    jnp.where(is_wr_req[order], eqs, _IMAX), seg_id,
+                    num_segments=T,
+                )
+                min_req = (
+                    jnp.zeros((T,), i32).at[order].set(min_req_seg[seg_id])
+                )
+                min_wr = (
+                    jnp.zeros((T,), i32).at[order].set(min_wr_seg[seg_id])
+                )
+            else:
+                same_key = (rkey[None, :] == rkey[:, None]) & pend_t[None, :]
+                enq_b = jnp.broadcast_to(renq[None, :], (T, T))
+                min_wr = jnp.min(
+                    jnp.where(same_key & is_wr_req[None, :], enq_b, _IMAX),
+                    axis=1,
+                )
+                min_req = jnp.min(jnp.where(same_key, enq_b, _IMAX), axis=1)
             rkey_c = jnp.minimum(rkey, R - 1)
             whv = s["wh"][rkey_c]
             rc_t = s["rc"][rkey_c]
@@ -1287,6 +1447,21 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             s["rc"] = s["rc"].at[jnp.where(g_rd_t, rkey, R)].add(
                 1, mode="drop"
             )
+            if need_rdr:
+                # reader bitmask: set the slot's bit on its *first*
+                # granted read column of the record — a re-entrant read
+                # on a key the slot already read-holds increments rc
+                # (per-entry, symmetric with release) but the bit tracks
+                # distinct membership
+                already = (
+                    (keys == rkey[:, None])
+                    & s["granted"]
+                    & (modes == MODE_READ)
+                ).any(axis=1)
+                new_rd = g_rd_t & ~already
+                s["rdr"] = s["rdr"].at[
+                    jnp.where(new_rd, rkey, R), rdr_word
+                ].add(jnp.where(new_rd, rdr_bit, 0), mode="drop")
         s["granted"] = s["granted"] | grant
 
         # ------------------------------------------------ 8. deadlock logic
@@ -1307,16 +1482,39 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
             waiting = waitkey != KEY_SENTINEL
             mymode = jnp.take_along_axis(modes, kptr_c, axis=1).squeeze(1)
             # adj[t,u]: t waits on a lock u holds in a conflicting mode
-            key_eq = keys[None, :, :] == waitkey[:, None, None]  # [t,u,k]
-            conflict = (mymode[:, None, None] == MODE_WRITE) | (
-                modes[None, :, :] == MODE_WRITE
-            )
-            adj = (
-                (key_eq & s["granted"][None, :, :] & conflict).any(-1)
-                & waiting[:, None]
-                & (slot_ids[None, :] != slot_ids[:, None])
-                & (tid[None, :] >= 0)
-            )
+            if use_csr:
+                # compact wait-for: the writer holding my key is one
+                # lock-table gather; read holders come from the carried
+                # per-record reader bitmask (bit u of word u // 32) —
+                # [T] + [T, W] gathers and a [T, T] bit extraction
+                # replace the dense [T, T, K] key-equality tensor. A
+                # read holder conflicts only with a write waiter; a
+                # write holder conflicts with everyone.
+                wt_c = jnp.minimum(waitkey, R - 1)
+                hw = s["wh"][wt_c]  # [T] writer of my key (-1 = none)
+                dig = s["rdr"][wt_c]  # [T, W] packed reader bits
+                rd_bits = jnp.take(dig, rdr_word, axis=1)  # [T, T]
+                adj_rd = ((rd_bits >> (slot_ids % 32)[None, :]) & 1) != 0
+                adj = (
+                    (
+                        (slot_ids[None, :] == hw[:, None])
+                        | (adj_rd & (mymode == MODE_WRITE)[:, None])
+                    )
+                    & waiting[:, None]
+                    & (slot_ids[None, :] != slot_ids[:, None])
+                    & (tid[None, :] >= 0)
+                )
+            else:
+                key_eq = keys[None, :, :] == waitkey[:, None, None]  # [t,u,k]
+                conflict = (mymode[:, None, None] == MODE_WRITE) | (
+                    modes[None, :, :] == MODE_WRITE
+                )
+                adj = (
+                    (key_eq & s["granted"][None, :, :] & conflict).any(-1)
+                    & waiting[:, None]
+                    & (slot_ids[None, :] != slot_ids[:, None])
+                    & (tid[None, :] >= 0)
+                )
             if dl == "waitdie":
                 # a waiter dies whenever its wait-for edge points at an
                 # older holder — evaluated on every holder change (waiting
@@ -1978,6 +2176,18 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
     exec_cycles_per_op = cm.exec_op_cycles + (
         cm.shared_index_penalty_cycles if shared_index else 0
     )
+    # Pallas readiness scan (EngineConfig.kernel_impl): the wavefront
+    # check runs the dep_wavefront kernel over the loaded slots' edge
+    # rows instead of the dense per-slot gather (its oracle)
+    P = meta.frag_pred_width if frag else meta.pred_width
+    use_pallas = _use_pallas(cfg) and P > 0
+    if use_pallas:
+        from repro.kernels.dep_wavefront.ops import (
+            dep_wavefront_ready as _dep_ready,
+        )
+
+        wave_block = max(64, min(1024, 1 << (T * P - 1).bit_length()))
+
     def rounds_of(cyc):
         return (cyc + cm.cycles_per_round - 1) // cm.cycles_per_round
     exec_rounds_one = rounds_of(exec_cycles_per_op)
@@ -2300,10 +2510,28 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
 
         # -------------------------------------------- 4. wavefront check
         # "All planned predecessors committed" — the dep_wavefront
-        # primitive in dense per-slot form (fragment-granular when
-        # cfg.fragment_exec: preds are fragments, done is [F]).
-        pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
-        dep_ok = pred_ok.all(axis=1)
+        # primitive, either in dense per-slot form or as the Pallas
+        # segmented edge scan over the loaded slots' rows
+        # (fragment-granular when cfg.fragment_exec: preds are
+        # fragments, done is [F]).
+        if use_pallas:
+            # one edge per (slot, pred) pair; stale slots contribute
+            # duplicate copies of real rows (or sentinel padding),
+            # which cannot change any unit's readiness
+            edge_dst = jnp.where(
+                preds >= 0,
+                jnp.broadcast_to(widx[:, None], preds.shape),
+                KEY_SENTINEL,
+            ).reshape(-1)
+            edge_src = jnp.maximum(preds, 0).reshape(-1)
+            ready_u = _dep_ready(
+                edge_dst, edge_src, s["done"], num_txns=NU,
+                block_n=wave_block,
+            )
+            dep_ok = ready_u[widx]
+        else:
+            pred_ok = (preds < 0) | s["done"][jnp.maximum(preds, 0)]
+            dep_ok = pred_ok.all(axis=1)
         ready = (phase == READY) & dep_ok
 
         # -------------------------------------------- 5. lane scheduling

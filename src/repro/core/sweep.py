@@ -67,8 +67,11 @@ from repro.core.workloads import Workload
 # entries from an older engine can never silently mix with fresh ones.
 # ("3-packed-slots" is bit-identical to "2-event-leap" by construction —
 # golden traces enforce it — but carries a different performance profile,
-# so perf samples keyed on the old tag must not mix with new ones.)
-ENGINE_VERSION = "3-packed-slots"
+# so perf samples keyed on the old tag must not mix with new ones.
+# "4-mega-dispatch" — K-round fused dispatch + compact CSR release/
+# wait-for + enqueue-stamp rebasing — is likewise bit-identical at every
+# rounds_per_dispatch, with a different performance profile.)
+ENGINE_VERSION = "4-mega-dispatch"
 
 _RUNNER_CACHE: dict = {}
 
@@ -143,11 +146,40 @@ def get_runner(cfg: EngineConfig, meta: PlanMeta, batched: bool):
             else step_mod.make_step
         )
         step = builder(cfg, meta)
+        # K-round mega-dispatch: each while_loop iteration (one XLA
+        # dispatch) runs up to K = cfg.dispatch_rounds steps, amortizing
+        # the fixed per-op dispatch overhead of the round body. Inner
+        # steps past the first are guarded by `r < r_end` (a lax.cond:
+        # the skipped branch costs nothing unbatched, a select under
+        # vmap), so state at every chunk boundary — and therefore every
+        # counter, including steps_executed — is bit-identical to K=1.
+        # Event leaping runs per inner step, unchanged.
+        K = cfg.dispatch_rounds
+        # enqueue-stamp rebase at dispatch boundaries (packed lock-table
+        # engines only): bounds the monotone enq_ctr by in-flight
+        # requests so it cannot wrap at long horizons. Bit-exact — grant
+        # decisions depend only on stamp differences among live entries.
+        rebase = (
+            cfg.state_layout == "packed" and not cfg.is_batch_planned
+        )
 
         def run_chunk(p, state, r_end):
+            def dispatch(s):
+                if rebase:
+                    s = engine_lib.rebase_enq(s)
+                s = step(p, s, r_end)
+                for _ in range(K - 1):
+                    s = jax.lax.cond(
+                        s["r"] < r_end,
+                        lambda st: step(p, st, r_end),
+                        lambda st: st,
+                        s,
+                    )
+                return s
+
             return jax.lax.while_loop(
                 lambda s: s["r"] < r_end,
-                lambda s: step(p, s, r_end),
+                dispatch,
                 state,
             )
 

@@ -14,4 +14,40 @@ against their oracles across shape/dtype sweeps (tests/test_kernels_*).
   moe_dispatch    — canonical-order capacity-bounded dispatch plan (P2)
   flash_attention — blocked online-softmax attention (full/SWA/chunked)
   rwkv6_scan      — RWKV6 WKV recurrence, time-chunked with VMEM state
+
+Interpret-mode resolution: every op takes ``interpret=None`` and resolves
+it via :func:`resolve_interpret` — compiled Pallas on accelerator
+backends, the interpreter elsewhere, overridable per call or through
+``REPRO_PALLAS_INTERPRET``. Resolution happens in the plain-Python
+wrapper, *outside* the jitted impl, so flipping the env var between
+calls is never masked by a stale jit-cache entry.
 """
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+# Backends with a compiled Pallas lowering. Everything else (cpu, and
+# unknown plugins) falls back to the interpreter, which runs anywhere.
+_COMPILED_PALLAS_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret: bool | None = None, *,
+                      backend: str | None = None) -> bool:
+    """Resolve a kernel's interpret mode.
+
+    Precedence: an explicit ``interpret`` argument wins; then the
+    ``REPRO_PALLAS_INTERPRET`` env var (``0``/``false`` forces compiled,
+    anything else forces the interpreter); else backend-aware — compiled
+    Pallas where it exists (TPU/GPU), interpreter otherwise (CPU).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env.strip() != "":
+        return env.strip().lower() not in ("0", "false", "no")
+    if backend is None:
+        backend = jax.default_backend()
+    return backend not in _COMPILED_PALLAS_BACKENDS

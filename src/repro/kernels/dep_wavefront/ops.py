@@ -23,23 +23,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lockgrant import KEY_SENTINEL, _segment_broadcast_last
+from repro.kernels import resolve_interpret
 from repro.kernels.dep_wavefront.kernel import dep_wavefront_kernel
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_txns", "block_n", "interpret")
-)
 def dep_wavefront_ready(edge_dst, edge_src, done, *, num_txns,
-                        block_n=1024, interpret=True):
+                        block_n=1024, interpret=None):
     """ready[u] = every dependency edge into u has a committed source.
 
     Args:
       edge_dst: int32[E] dependent unit per edge; KEY_SENTINEL = padding.
       edge_src: int32[E] dependency unit per edge (ignored for padding).
       done:     bool[N] committed bitmap over units (txns or fragments).
+      interpret: None resolves backend-aware (compiled Pallas on
+        TPU/GPU, interpreter on CPU) via
+        ``repro.kernels.resolve_interpret``.
 
     Returns bool[num_txns]; units with no edges are ready.
     """
+    return _dep_wavefront_ready_jit(
+        edge_dst, edge_src, done, num_txns=num_txns, block_n=block_n,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_txns", "block_n", "interpret")
+)
+def _dep_wavefront_ready_jit(edge_dst, edge_src, done, *, num_txns,
+                             block_n, interpret):
     n = edge_dst.shape[0]
     pad = (-n) % block_n
     if pad:
@@ -87,12 +99,9 @@ def frag_commit_barrier(frag_done, frag_txn, *, num_txns):
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_frags", "num_txns", "block_n", "interpret")
-)
 def dep_wavefront_frag_ready(edge_dst, edge_src, frag_done, frag_txn, *,
                              num_frags, num_txns, block_n=1024,
-                             interpret=True):
+                             interpret=None):
     """Fragment-granular scheduler round: readiness scan + commit join.
 
     One device-side pass evaluates, for the whole batch, which
@@ -102,7 +111,19 @@ def dep_wavefront_frag_ready(edge_dst, edge_src, frag_done, frag_txn, *,
     fragments. Returns ``(frag_ready bool[num_frags],
     txn_done bool[num_txns])``.
     """
-    frag_ready = dep_wavefront_ready(
+    return _dep_wavefront_frag_ready_jit(
+        edge_dst, edge_src, frag_done, frag_txn, num_frags=num_frags,
+        num_txns=num_txns, block_n=block_n,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_frags", "num_txns", "block_n", "interpret")
+)
+def _dep_wavefront_frag_ready_jit(edge_dst, edge_src, frag_done, frag_txn, *,
+                                  num_frags, num_txns, block_n, interpret):
+    frag_ready = _dep_wavefront_ready_jit(
         edge_dst, edge_src, frag_done, num_txns=num_frags,
         block_n=block_n, interpret=interpret,
     )

@@ -12,15 +12,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def flash_attention(q, k, v, *, kind="full", window=0, q_block=256,
+                    kv_block=256, interpret=None):
+    """interpret=None resolves backend-aware (repro.kernels.resolve_interpret)."""
+    return _flash_attention_jit(
+        q, k, v, kind=kind, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=resolve_interpret(interpret),
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "window", "q_block", "kv_block", "interpret"),
 )
-def flash_attention(q, k, v, *, kind="full", window=0, q_block=256,
-                    kv_block=256, interpret=True):
+def _flash_attention_jit(q, k, v, *, kind, window, q_block,
+                         kv_block, interpret):
     B, S, HQ, D = q.shape
     HKV = k.shape[2]
     G = HQ // HKV

@@ -18,15 +18,28 @@ from repro.core.lockgrant import (
     lex_order,
     _segment_broadcast_last,
 )
+from repro.kernels import resolve_interpret
 from repro.kernels.lock_grant.kernel import lock_grant_kernel
+
+
+def lock_grant(keys, ts, kind, write_holder, read_count, *, num_records,
+               block_n=1024, interpret=None):
+    """Drop-in twin of ``core.lockgrant.grant_round`` (grant, contenders).
+
+    ``interpret=None`` resolves backend-aware (compiled Pallas on
+    TPU/GPU, interpreter on CPU); see ``repro.kernels.resolve_interpret``.
+    """
+    return _lock_grant_jit(
+        keys, ts, kind, write_holder, read_count, num_records=num_records,
+        block_n=block_n, interpret=resolve_interpret(interpret),
+    )
 
 
 @functools.partial(
     jax.jit, static_argnames=("num_records", "block_n", "interpret")
 )
-def lock_grant(keys, ts, kind, write_holder, read_count, *, num_records,
-               block_n=1024, interpret=True):
-    """Drop-in twin of ``core.lockgrant.grant_round`` (grant, contenders)."""
+def _lock_grant_jit(keys, ts, kind, write_holder, read_count, *, num_records,
+                    block_n, interpret):
     n = keys.shape[0]
     pad = (-n) % block_n
     if pad:

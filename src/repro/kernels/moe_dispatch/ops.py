@@ -8,15 +8,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.moe_dispatch.kernel import dispatch_positions_kernel
+
+
+def moe_dispatch_plan(router_probs, *, top_k, capacity, block_n=1024,
+                      interpret=None):
+    """Kernel-backed twin of ``repro.models.moe.plan_dispatch``.
+
+    interpret=None resolves backend-aware (repro.kernels.resolve_interpret).
+    """
+    return _moe_dispatch_plan_jit(
+        router_probs, top_k=top_k, capacity=capacity, block_n=block_n,
+        interpret=resolve_interpret(interpret),
+    )
 
 
 @functools.partial(
     jax.jit, static_argnames=("top_k", "capacity", "block_n", "interpret")
 )
-def moe_dispatch_plan(router_probs, *, top_k, capacity, block_n=1024,
-                      interpret=True):
-    """Kernel-backed twin of ``repro.models.moe.plan_dispatch``."""
+def _moe_dispatch_plan_jit(router_probs, *, top_k, capacity, block_n,
+                           interpret):
     N, E = router_probs.shape
     w, eidx = jax.lax.top_k(router_probs, top_k)
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)

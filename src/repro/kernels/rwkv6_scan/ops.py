@@ -7,12 +7,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
 
 
+def rwkv6_scan(r, k, v, w, u, state0, *, chunk=128, interpret=None):
+    """Model layout [B,H,S,hd] (+ u [H,hd], state0 [B,H,hd,hd]).
+
+    interpret=None resolves backend-aware (repro.kernels.resolve_interpret).
+    """
+    return _rwkv6_scan_jit(
+        r, k, v, w, u, state0, chunk=chunk,
+        interpret=resolve_interpret(interpret),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_scan(r, k, v, w, u, state0, *, chunk=128, interpret=True):
-    """Model layout [B,H,S,hd] (+ u [H,hd], state0 [B,H,hd,hd])."""
+def _rwkv6_scan_jit(r, k, v, w, u, state0, *, chunk, interpret):
     B, H, S, D = r.shape
     f = lambda a: a.astype(jnp.float32).reshape(B * H, S, D)
     uu = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, D)).reshape(

@@ -293,10 +293,15 @@ def test_run_cells_vmapped_matches_serial():
         assert _fingerprint(b) == _fingerprint(s)
 
 
+@pytest.mark.xdist_group("compile_cache")
 def test_compile_cache_shared_across_cells():
     """Cells differing only in workload content (same shapes) must
     reuse one compiled runner; simulation budget is not part of the
-    trace either."""
+    trace either.
+
+    xdist_group: counts process-local runner-cache entries, so it is
+    pinned to the same pytest-xdist worker as the cache-accounting
+    tests in test_sweep_cache.py (--dist loadgroup)."""
     before = sweep.runner_cache_info()["entries"]
     for hot, rounds in ((16, 1000), (128, 1500)):
         cfg = EngineConfig(protocol="twopl_waitfor", n_exec=9,

@@ -1,0 +1,94 @@
+"""Backend-aware Pallas interpret-mode resolution.
+
+The kernel ops used to hard-default ``interpret=True``, so an
+accelerator run silently executed the Pallas *interpreter* instead of a
+compiled kernel. ``repro.kernels.resolve_interpret`` makes the default
+backend-aware: compiled Pallas where a lowering exists (TPU/GPU),
+interpreter elsewhere (CPU), with an explicit argument and the
+``REPRO_PALLAS_INTERPRET`` env var as overrides. These tests pin the
+resolution table per backend and the override precedence; the engine's
+``kernel_impl`` flag (which decides whether the Pallas path is wired in
+at all) resolves through the same backend list.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import resolve_interpret
+
+
+@pytest.mark.parametrize("backend,expected", [
+    ("cpu", True),       # no compiled Pallas lowering -> interpreter
+    ("tpu", False),
+    ("gpu", False),
+    ("cuda", False),
+    ("rocm", False),
+    ("weird_plugin", True),  # unknown backend: safe fallback
+])
+def test_resolved_mode_per_backend(monkeypatch, backend, expected):
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert resolve_interpret(None, backend=backend) is expected
+
+
+def test_explicit_argument_wins(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(True, backend="tpu") is True
+    assert resolve_interpret(False, backend="cpu") is False
+
+
+@pytest.mark.parametrize("env,expected", [
+    ("0", False), ("false", False), ("no", False), ("False", False),
+    ("1", True), ("true", True), ("interpret", True),
+])
+def test_env_override(monkeypatch, env, expected):
+    """REPRO_PALLAS_INTERPRET overrides the backend default both ways
+    (force-compiled on CPU for kernel debugging, force-interpret on an
+    accelerator to bisect a lowering bug)."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", env)
+    assert resolve_interpret(None, backend="cpu") is expected
+    assert resolve_interpret(None, backend="tpu") is expected
+
+
+def test_env_empty_is_unset(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "")
+    assert resolve_interpret(None, backend="cpu") is True
+    assert resolve_interpret(None, backend="tpu") is False
+
+
+def test_default_backend_resolution():
+    """With no override, resolution follows jax.default_backend() —
+    on this CI box (CPU) that means interpret mode."""
+    expected = jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+    assert resolve_interpret() is expected
+
+
+def test_ops_default_matches_explicit():
+    """An op called with the resolved default == the same op with the
+    mode spelled out (the refactor changed defaults, not semantics)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.lock_grant.ops import lock_grant
+
+    keys = jnp.array([3, 3, 1, 7, 3], jnp.int32)
+    ts = jnp.array([5, 2, 9, 1, 7], jnp.int32)
+    kind = jnp.array([1, 0, 0, 1, 1], jnp.int32)
+    wh = jnp.full((8,), -1, jnp.int32)
+    rc = jnp.zeros((8,), jnp.int32)
+    g0, c0 = lock_grant(keys, ts, kind, wh, rc, num_records=8, block_n=8)
+    g1, c1 = lock_grant(keys, ts, kind, wh, rc, num_records=8, block_n=8,
+                        interpret=resolve_interpret())
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
+def test_engine_kernel_impl_resolution():
+    """EngineConfig.kernel_impl: 'jnp' and 'pallas' force their path;
+    'auto' follows the backend (CPU -> jnp formulation)."""
+    from repro.core.engine import EngineConfig, _use_pallas
+
+    base = dict(protocol="orthrus", n_cc=2, n_exec=6, window=2)
+    assert _use_pallas(EngineConfig(**base, kernel_impl="jnp")) is False
+    assert _use_pallas(EngineConfig(**base, kernel_impl="pallas")) is True
+    auto = _use_pallas(EngineConfig(**base))
+    assert auto is (jax.default_backend() in ("tpu", "gpu", "cuda", "rocm"))

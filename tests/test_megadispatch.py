@@ -1,0 +1,226 @@
+"""Mega-dispatch (fused-K) engine: bit-exactness and counter hygiene.
+
+The K-round mega-dispatch unrolls ``EngineConfig.rounds_per_dispatch``
+copies of the step body inside the chunk ``while_loop`` to amortize
+fixed per-op XLA dispatch cost. Its contract is the same as every other
+engine change since PR 3: *bit-identical simulation* — the fused-K path
+must reproduce the K=1 fingerprints (commits, aborts, wasted ops,
+rounds, executed steps, Fig-10 breakdown) exactly, for every protocol,
+under event-leaping and dense stepping, serial and vmapped. The same
+file pins the compact CSR release/wait-for path against the dense
+in-tree oracle (``release_path="dense"``) and the Pallas kernel path
+(``kernel_impl="pallas"``) against the jnp formulation, plus the
+enqueue-stamp rebase that keeps ``enq_ctr`` bounded (the int32-wrap
+bugfix).
+"""
+
+import dataclasses
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import sweep
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.workloads import WorkloadConfig, make_workload
+
+FAST = dict(max_rounds=900, warmup_rounds=300, chunk_rounds=300,
+            target_commits=10**9)
+
+PROTO_KW = {
+    "twopl_waitdie": dict(n_exec=8),
+    "twopl_waitfor": dict(n_exec=8),
+    "twopl_dreadlocks": dict(n_exec=8),
+    "deadlock_free": dict(n_exec=8),
+    "orthrus": dict(n_cc=2, n_exec=6, window=2),
+    "partitioned_store": dict(n_exec=8),
+    "dgcc": dict(n_cc=2, n_exec=6, window=2),
+    "quecc": dict(n_cc=4, n_exec=6, window=2),
+}
+
+# protocols that use the shared lock-table grant/release path (the CSR
+# representation replaces their dense [T, T] / [T, T, K] formulations)
+LOCK_TABLE = [
+    "twopl_waitdie", "twopl_waitfor", "twopl_dreadlocks",
+    "deadlock_free", "partitioned_store",
+]
+
+
+def _fp(res):
+    """Everything the engine reports except wall-clock measurements."""
+    return (
+        res.commits,
+        res.aborts_deadlock,
+        res.aborts_ollp,
+        res.wasted_ops,
+        res.rounds,
+        res.sim_seconds,
+        tuple(sorted(res.breakdown.items())),
+        res.raw["total_commits"],
+        res.raw["next_txn"],
+        res.raw["rounds_total"],
+        res.raw["steps_executed"],
+        res.raw.get("pol_rejected"),
+        res.raw.get("pol_shed"),
+    )
+
+
+@pytest.fixture(scope="module")
+def ycsb_hot():
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                       num_hot=8, seed=0)
+    )
+
+
+@pytest.fixture(scope="module")
+def ycsb_multipart():
+    return make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=8, multipart_frac=1.0, num_partitions=8,
+                       batch_epoch=64, seed=0)
+    )
+
+
+def _run(protocol, wl, **kw):
+    cfg = EngineConfig(protocol=protocol, **PROTO_KW[protocol],
+                       **FAST, **kw)
+    return run_simulation(cfg, wl)
+
+
+@pytest.mark.parametrize("protocol", sorted(PROTO_KW))
+def test_fused_k_matches_k1(ycsb_hot, protocol):
+    """K=8 mega-dispatch is bit-identical to K=1 — leap and dense."""
+    base = _fp(_run(protocol, ycsb_hot))
+    assert _fp(_run(protocol, ycsb_hot, rounds_per_dispatch=8)) == base
+    # leap-vs-dense identity must also hold *under* the fused-K path
+    dense = _fp(_run(protocol, ycsb_hot, rounds_per_dispatch=8,
+                     event_leap=False))
+    assert dense[:10] == base[:10]  # steps_executed differs by design
+
+
+@pytest.mark.parametrize("protocol", LOCK_TABLE)
+def test_csr_release_matches_dense_oracle(ycsb_hot, protocol):
+    """The compact CSR grant/wait-for path == the dense [T, T(,K)]
+    oracle, at K=1 and fused K=8."""
+    csr = _fp(_run(protocol, ycsb_hot))
+    assert _fp(_run(protocol, ycsb_hot, release_path="dense")) == csr
+    assert _fp(_run(protocol, ycsb_hot, release_path="dense",
+                    rounds_per_dispatch=8)) == csr
+
+
+def test_fused_k_bounded_backlog_cell(ycsb_hot):
+    """Admission-policy wake candidates stay round-exact under fused K
+    (the overload layer's drop/shed counters are part of the print)."""
+    kw = dict(admission_policy="bounded_backlog", backlog_cap=48,
+              epoch_interval_rounds=60)
+    base = _fp(_run("twopl_waitdie", ycsb_hot, **kw))
+    assert base[-2] is not None  # the policy actually engaged a counter
+    for k in (2, 8):
+        assert _fp(_run("twopl_waitdie", ycsb_hot,
+                        rounds_per_dispatch=k, **kw)) == base
+
+
+def test_fused_k_quecc_fragment_cell(ycsb_multipart):
+    """Fragment-granular quecc (per-(txn, lane) fragments + commit
+    barrier) under fused K."""
+    kw = dict(fragment_exec=True)
+    base = _fp(_run("quecc", ycsb_multipart, **kw))
+    for k in (2, 8):
+        assert _fp(_run("quecc", ycsb_multipart,
+                        rounds_per_dispatch=k, **kw)) == base
+
+
+def test_fused_k_vmapped_matches_serial():
+    """The vmapped multi-cell driver == serial, with K=8 fused rounds
+    (the guarded inner steps lower to select under vmap)."""
+    cfg = EngineConfig(protocol="twopl_waitdie", n_exec=8,
+                       rounds_per_dispatch=8, **FAST)
+    wls = [
+        make_workload(
+            WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                           num_hot=h, seed=3)
+        )
+        for h in (8, 64)
+    ]
+    batched = sweep.run_cells([(cfg, w) for w in wls])
+    serial = [run_simulation(cfg, w) for w in wls]
+    for b, s_res in zip(batched, serial):
+        assert _fp(b) == _fp(s_res)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    protocol=st.sampled_from(sorted(PROTO_KW)),
+    k=st.sampled_from([1, 2, 8]),
+    num_hot=st.sampled_from([4, 32]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_fused_k_property(protocol, k, num_hot, seed):
+    """Any (protocol, K, contention, seed) cell: fused-K == K=1."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=8_000,
+                       num_hot=num_hot, seed=seed)
+    )
+    sim = dict(max_rounds=600, warmup_rounds=0, chunk_rounds=300,
+               target_commits=10**9)
+    cfg = EngineConfig(protocol=protocol, **PROTO_KW[protocol], **sim)
+    base = _fp(run_simulation(cfg, wl))
+    fused = _fp(run_simulation(
+        dataclasses.replace(cfg, rounds_per_dispatch=k), wl
+    ))
+    assert fused == base
+
+
+@pytest.mark.parametrize("protocol", ["orthrus", "dgcc"])
+def test_pallas_kernel_path_matches_jnp(ycsb_hot, protocol):
+    """kernel_impl='pallas' (orthrus grant / batch wavefront through the
+    Pallas kernels — interpret mode on CPU) == the jnp formulation."""
+    base = _fp(_run(protocol, ycsb_hot))
+    assert _fp(_run(protocol, ycsb_hot, kernel_impl="pallas")) == base
+    assert _fp(_run(protocol, ycsb_hot, kernel_impl="pallas",
+                    rounds_per_dispatch=8)) == base
+
+
+def test_enq_ctr_near_wrap_rebase(ycsb_hot, monkeypatch):
+    """Regression for the int32 enqueue-stamp wrap: force a near-wrap
+    starting counter and check grant order (hence every counter) is
+    unchanged — the dispatch-boundary rebase pins live stamps near 1
+    regardless of the starting value. Without the rebase this run wraps
+    within the first chunk and corrupts the FIFO enq-min comparison."""
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    base = _fp(_run("twopl_waitdie", ycsb_hot))
+    orig = engine._state0
+    near_wrap = jnp.int32(2**31 - 2_000)  # wraps after ~2k stamps
+
+    def bumped(cfg, num_records, T, K):
+        s = orig(cfg, num_records, T, K)
+        s["enq_ctr"] = s["enq_ctr"] + near_wrap
+        return s
+
+    monkeypatch.setattr(engine, "_state0", bumped)
+    assert _fp(_run("twopl_waitdie", ycsb_hot)) == base
+
+
+def test_rebase_enq_preserves_stamp_order():
+    """Unit-level: rebase shifts live stamps uniformly (differences are
+    preserved), pins the minimum at 1, and resets an idle counter."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import rebase_enq
+
+    want = jnp.array([[True], [False], [True]])
+    granted = jnp.array([[False], [True], [False]])
+    enq = jnp.array([[500], [400], [900]], jnp.int32)
+    s = dict(want=want, granted=granted, enq=enq,
+             enq_ctr=jnp.int32(1000))
+    out = rebase_enq(s)
+    assert int(out["enq"].min()) == 1  # min live stamp pinned at 1
+    assert (out["enq"] - enq == out["enq"][0, 0] - enq[0, 0]).all()
+    assert int(out["enq_ctr"]) == 1000 - 399
+    # idle state: counter resets to 1
+    idle = dict(want=want & False, granted=granted & False, enq=enq,
+                enq_ctr=jnp.int32(2**31 - 5))
+    assert int(rebase_enq(idle)["enq_ctr"]) == 1

@@ -101,6 +101,11 @@ TRACED_VARIANTS = {
             EngineConfig(**BASE).cost, lock_op_cycles=999
         )
     ),
+    # Mega-dispatch: the *bucketed* dispatch_rounds is the static (2 and
+    # 8 differ; 5..8 share — test_rounds_per_dispatch_pow2_bucket below)
+    "rounds_per_dispatch": dict(rounds_per_dispatch=2),
+    "release_path": dict(release_path="dense"),
+    "kernel_impl": dict(kernel_impl="jnp"),
 }
 
 
@@ -123,6 +128,22 @@ def test_trace_statics_covers_every_traced_field():
             f"EngineConfig.{f.name} changed but trace_statics() did not: "
             "two different computations would share one compiled runner"
         )
+
+
+def test_rounds_per_dispatch_pow2_bucket():
+    """rounds_per_dispatch is pow2-bucketed before keying the compile
+    cache: a K sweep over {5..8} compiles one runner, but distinct
+    buckets (1 / 2 / 4 / 8) key distinct runners."""
+    cfg = EngineConfig(**BASE)
+    k5 = dataclasses.replace(cfg, rounds_per_dispatch=5)
+    k8 = dataclasses.replace(cfg, rounds_per_dispatch=8)
+    assert k5.dispatch_rounds == k8.dispatch_rounds == 8
+    assert k5.trace_statics() == k8.trace_statics()
+    seen = {
+        dataclasses.replace(cfg, rounds_per_dispatch=k).trace_statics()
+        for k in (1, 2, 4, 8)
+    }
+    assert len(seen) == 4
 
 
 def test_host_loop_fields_share_a_runner():
@@ -186,9 +207,14 @@ def test_policy_param_value_shares_a_runner():
     assert burst.trace_statics() == diurnal.trace_statics()
 
 
+@pytest.mark.xdist_group("compile_cache")
 def test_runner_cache_misses_on_statics_and_shapes():
     """get_runner is lazy (jit compiles on first call), so cache-entry
-    accounting is cheap to test exhaustively."""
+    accounting is cheap to test exhaustively.
+
+    xdist_group: asserts on the process-local runner cache, so under
+    pytest-xdist it must share a worker with the other cache-counting
+    test rather than race against concurrent run_simulation calls."""
     meta = PlanMeta(n_txns=8, max_keys=2, num_records=16)
     before = sweep.runner_cache_info()["entries"]
     cfg = EngineConfig(**BASE)
