@@ -12,9 +12,14 @@ Execution model (this PR's sweep driver):
     per-op dispatch dominates these tiny-array round loops, so two
     single-threaded workers beat one vmapped program). Set
     ``REPRO_BENCH_PROCS=1`` to force in-process serial execution, or
-    ``REPRO_BENCH_VMAP=1`` to drive each group through the vmapped
-    ``sweep.run_cells`` path instead (the right choice on accelerator
-    backends, where one batched program amortizes everything).
+    ``REPRO_BENCH_VMAP=1`` to hand *all* missing cells to the vmapped
+    ``sweep.run_cells`` driver in one call (the right choice on
+    accelerator backends and multi-device CI): the sweep driver groups
+    by compile key itself, shards each group's cell axis across local
+    devices, pipelines chunk resolution, and early-exits finished
+    cells — all bit-identical, tuned via ``REPRO_SWEEP_DEVICES`` /
+    ``REPRO_SWEEP_PIPELINE`` / ``REPRO_SWEEP_EARLY_EXIT`` (see
+    ``repro.core.sweep.sweep_mode``).
   * Cache keys include ``repro.core.sweep.ENGINE_VERSION``, so results
     simulated by an older engine can never silently mix with fresh ones.
   * Fresh (non-cached) runs append per-cell ``wall_s`` and
@@ -215,21 +220,32 @@ def run_cells(cells: list[tuple]) -> dict[str, dict]:
 
     # one simulation per distinct content hash
     todo = [entries[0] for entries in by_hash.values()]
-    # group by engine config: cells of one group share the compiled runner
-    groups: dict[tuple, list] = {}
-    for name, wl_cfg, eng_kw in todo:
-        gkey = tuple(sorted((k, str(v)) for k, v in eng_kw.items()))
-        groups.setdefault(gkey, []).append(
-            (name, dict(wl_cfg.__dict__), dict(eng_kw))
-        )
-    # heaviest groups first so the pool drains evenly
-    def weight(g):
-        return -sum(
-            int(c[2].get("n_exec", 1)) * int(c[2].get("window", 1)) for c in g
-        )
-    payloads = [
-        (SIM, grp) for grp in sorted(groups.values(), key=weight)
-    ]
+    if USE_VMAP:
+        # one payload with every missing cell: sweep.run_cells groups by
+        # compile key internally and overlaps groups (prefetch pipeline),
+        # so pre-splitting here would only serialize the groups again
+        payloads = [
+            (SIM, [(name, dict(wl_cfg.__dict__), dict(eng_kw))
+                   for name, wl_cfg, eng_kw in todo])
+        ] if todo else []
+    else:
+        # group by engine config: cells of one group share the compiled
+        # runner
+        groups: dict[tuple, list] = {}
+        for name, wl_cfg, eng_kw in todo:
+            gkey = tuple(sorted((k, str(v)) for k, v in eng_kw.items()))
+            groups.setdefault(gkey, []).append(
+                (name, dict(wl_cfg.__dict__), dict(eng_kw))
+            )
+        # heaviest groups first so the pool drains evenly
+        def weight(g):
+            return -sum(
+                int(c[2].get("n_exec", 1)) * int(c[2].get("window", 1))
+                for c in g
+            )
+        payloads = [
+            (SIM, grp) for grp in sorted(groups.values(), key=weight)
+        ]
 
     fresh: dict[str, dict] = {}
     runner = _simulate_cells_vmapped if USE_VMAP else _simulate_cells

@@ -7,8 +7,12 @@ Every figure builds its full cell list up front and routes it through
 ``benchmarks.common.run_cells``, which loads cached cells, de-duplicates
 identical cells across axes, and runs the misses grouped by engine
 configuration so each group shares one compiled runner (and groups run
-across the benchmark process pool). Cell names and simulated results are
-identical to running the cells one at a time.
+across the benchmark process pool). With ``REPRO_BENCH_VMAP=1`` the
+misses instead go to ``repro.core.sweep.run_cells`` in one call — the
+device-sharded, pipelined, per-cell-early-exit sweep driver (see the
+"Sweep-scale parallelism" section of ``repro/core/sweep.py``). Cell
+names and simulated results are identical to running the cells one at
+a time under either path.
 """
 
 from __future__ import annotations

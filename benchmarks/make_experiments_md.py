@@ -205,6 +205,45 @@ def figures_section(out):
     )
 
 
+def sweep_wall_section(out):
+    out.append("## §Sweep scaling — parallel sweep driver wall-clock\n")
+    path = "artifacts/BENCH_engine.json"
+    data = json.load(open(path)) if os.path.exists(path) else {}
+    rec = data.get("sweep_wall")
+    if not rec:
+        out.append("(run `PYTHONPATH=src python -m benchmarks.perf_smoke "
+                   "--compare-sweep`)\n")
+        return
+    m = rec["mode"]
+    out.append(
+        f"fig13 smoke-subset sweep ({rec['cells']} cells), warm-vs-warm, "
+        "**bit-identical per-cell results asserted** before timing: "
+        f"serial driver {rec['serial_wall_s']:.2f}s vs device-sharded + "
+        f"pipelined + early-exit driver {rec['sweep_wall_s']:.2f}s — "
+        f"**{rec['sweep_speedup']:.2f}×** on {rec['devices']} device(s) / "
+        f"{rec['cpus']} CPU core(s) (mode: devices={m['devices']}, "
+        f"pipeline={m['pipeline']}, early_exit={m['early_exit']}). "
+        "The ≥2× CI gate applies when ≥4 devices are backed by ≥4 cores; "
+        "virtual devices multiplexed onto fewer cores only get the 0.4× "
+        "sanity floor (see `benchmarks/perf_smoke.py`).\n"
+    )
+    hist = data.get("sweep_wall_history", [])
+    if len(hist) > 1:
+        out.append("Trajectory across recorded runs:\n")
+        out.append(
+            "| run | serial_wall_s | sweep_wall_s | speedup | devices "
+            "| cpus | engine |\n|---|---|---|---|---|---|---|"
+        )
+        for i, h in enumerate(hist):
+            out.append(
+                f"| {i} | {h['serial_wall_s']:.2f} | "
+                f"{h['sweep_wall_s']:.2f} | {h['sweep_speedup']:.2f}× "
+                f"| {h['devices']} | {h['cpus']} "
+                f"| {h.get('engine_version', '?')} |"
+            )
+        out.append("")
+
+
 def main():
     out = [
         "# EXPERIMENTS\n",
@@ -215,6 +254,7 @@ def main():
         "`python -m benchmarks.perf_iterations`, then this generator.\n",
     ]
     figures_section(out)
+    sweep_wall_section(out)
     dryrun_section(out)
     roofline_section(out)
     perf_section(out)

@@ -11,6 +11,7 @@ regressions that leave rounds/s unchanged.
   PYTHONPATH=src python -m benchmarks.perf_smoke --reset-baseline
   PYTHONPATH=src python -m benchmarks.perf_smoke --compare-legacy
   PYTHONPATH=src python -m benchmarks.perf_smoke --compare-k
+  PYTHONPATH=src python -m benchmarks.perf_smoke --compare-sweep
 
 The three cells cover the engine's step-cost regimes: dynamic 2PL
 (dense rounds, deadlock logic), per-transaction planned locking, and a
@@ -25,7 +26,19 @@ K-round mega-dispatch: it times ``rounds_per_dispatch=8`` against K=1
 warm-vs-warm, records the per-cell ratio under
 ``megadispatch_speedup``, and *gates* on the saturated lock-table
 cells — if fusing stops amortizing per-round dispatch cost there, the
-PR 8 speedup is silently gone. Runs always bypass the benchmark
+PR 8 speedup is silently gone. ``--compare-sweep`` times the fig13
+smoke-subset *sweep* (2 protocols x 3 hot-set sizes with a finite
+commit target) warm-vs-warm under the serial reference driver
+(``sweep.SERIAL_MODE``) and the environment's sharded + pipelined +
+early-exit :class:`~repro.core.sweep.SweepMode`, asserts bit-identical
+per-cell results, and records ``sweep_wall_s`` (+ history) into
+``BENCH_engine.json``. The speedup gate is hardware-conditional: on a
+multi-device multi-core box (the CI leg forces 4 virtual host devices
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) the sweep
+driver must be >= SWEEP_GATE_MIN x the serial driver; on serial
+hardware (1 device or 1 core) sharding cannot win by construction, so
+the gate only enforces SWEEP_SANITY_MIN (the parallel driver must
+never *tank* the sweep). Runs always bypass the benchmark
 cache — the point is to time the engine, not to reread old results.
 """
 
@@ -50,6 +63,16 @@ REGRESSION_FACTOR = 3.0
 MEGADISPATCH_MIN = 0.4
 MEGADISPATCH_GATED = ("smoke_twopl_waitdie", "smoke_deadlock_free")
 MEGADISPATCH_K = 8
+
+# --compare-sweep gates: with >= SWEEP_GATE_DEVICES virtual devices AND
+# >= that many cores, the sharded/pipelined/early-exit driver must beat
+# the serial reference by SWEEP_GATE_MIN; on serial hardware only the
+# sanity floor applies (cell-axis sharding cannot reduce wall-clock
+# without cores to run the shards, and vmapped lanes frozen by early
+# exit still ride every remaining while-loop iteration of their group).
+SWEEP_GATE_MIN = 2.0
+SWEEP_SANITY_MIN = 0.4
+SWEEP_GATE_DEVICES = 4
 
 YCSB = dict(kind="ycsb", num_txns=8192, num_records=10_000_000, seed=0,
             num_hot=64)
@@ -145,6 +168,81 @@ def run_smoke(compare_legacy: bool = False,
     return out
 
 
+# fig13 smoke subset for --compare-sweep: the saturated lock-table
+# protocol and the batch-planned protocol across the contention axis
+# (num_hot = hot-set size: 16 is the hottest). The finite commit target
+# plus a finer chunk grid gives cells heterogeneous completion rounds —
+# the regime where per-cell early exit pays.
+SWEEP_SIM = dict(max_rounds=6000, warmup_rounds=1000, chunk_rounds=1000,
+                 target_commits=400)
+SWEEP_HOTS = (1024, 64, 16)
+SWEEP_PROTOS = [
+    dict(protocol="twopl_waitdie", n_exec=40),
+    dict(protocol="dgcc", n_cc=8, n_exec=32, window=4),
+]
+
+
+def _sweep_cells():
+    from repro.core.engine import EngineConfig
+    from repro.core.workloads import WorkloadConfig, make_workload
+
+    cells = []
+    for eng_kw in SWEEP_PROTOS:
+        for h in SWEEP_HOTS:
+            wl = make_workload(WorkloadConfig(**dict(YCSB, num_hot=h)))
+            cells.append((EngineConfig(**eng_kw, **SWEEP_SIM), wl))
+    return cells
+
+
+def _sweep_fingerprint(res):
+    return (res.commits, res.aborts_deadlock, res.aborts_ollp,
+            res.wasted_ops, res.rounds, res.raw["rounds_total"],
+            res.raw["steps_executed"], res.raw["next_txn"])
+
+
+def run_sweep_compare() -> dict:
+    """Warm-vs-warm fig13 smoke-subset sweep wall: serial reference
+    driver vs the environment's SweepMode. Asserts bit-identical cells,
+    returns the ``sweep_wall`` record for BENCH_engine.json."""
+    import jax
+
+    from repro.core import sweep
+    from repro.core.sweep import ENGINE_VERSION
+
+    cells = _sweep_cells()
+    mode = sweep.sweep_mode()
+    # warm both drivers' compile caches; keep results for the identity
+    # check (every mode's contract is bit-identical SimResults)
+    ref = sweep.run_cells(cells, mode=sweep.SERIAL_MODE)
+    got = sweep.run_cells(cells, mode=mode)
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert _sweep_fingerprint(a) == _sweep_fingerprint(b), (
+            f"sweep cell {i}: parallel driver diverged from serial "
+            f"({_sweep_fingerprint(a)} != {_sweep_fingerprint(b)})"
+        )
+    t0 = time.time()
+    sweep.run_cells(cells, mode=sweep.SERIAL_MODE)
+    serial_s = max(time.time() - t0, 1e-9)
+    t0 = time.time()
+    sweep.run_cells(cells, mode=mode)
+    sweep_s = max(time.time() - t0, 1e-9)
+    rec = dict(
+        serial_wall_s=round(serial_s, 3),
+        sweep_wall_s=round(sweep_s, 3),
+        sweep_speedup=round(serial_s / sweep_s, 2),
+        devices=jax.local_device_count(),
+        cpus=os.cpu_count(),
+        mode=dict(devices=mode.devices, pipeline=mode.pipeline,
+                  early_exit=mode.early_exit),
+        cells=len(cells),
+        engine_version=ENGINE_VERSION,
+    )
+    print(f"sweep_compare            serial={serial_s:6.2f}s "
+          f"sweep={sweep_s:6.2f}s speedup={rec['sweep_speedup']:.2f}x "
+          f"(devices={rec['devices']}, cpus={rec['cpus']})")
+    return rec
+
+
 def baseline_version(baseline: dict) -> str | None:
     versions = {c.get("engine_version") for c in baseline.values()}
     return versions.pop() if len(versions) == 1 else None
@@ -161,6 +259,12 @@ def main() -> None:
                     help="also time rounds_per_dispatch=8 warm-vs-warm, "
                          "record the per-cell megadispatch_speedup, and "
                          "gate on the saturated lock-table cells")
+    ap.add_argument("--compare-sweep", action="store_true",
+                    help="also time the fig13 smoke-subset sweep wall "
+                         "serial-vs-parallel warm-vs-warm, assert "
+                         "bit-identity, record sweep_wall_s, and gate "
+                         "(>=2x with >=4 devices and cores, sanity "
+                         "floor otherwise)")
     args = ap.parse_args()
     os.environ.setdefault("REPRO_BENCH_FAST", "1")
 
@@ -220,6 +324,21 @@ def main() -> None:
                     f"is >{REGRESSION_FACTOR:.0f}x below baseline "
                     f"{base_k8:.0f}"
                 )
+
+    if args.compare_sweep:
+        rec = run_sweep_compare()
+        data["sweep_wall"] = rec
+        data.setdefault("sweep_wall_history", []).append(rec)
+        parallel_hw = (rec["devices"] >= SWEEP_GATE_DEVICES
+                       and (rec["cpus"] or 1) >= SWEEP_GATE_DEVICES)
+        floor = SWEEP_GATE_MIN if parallel_hw else SWEEP_SANITY_MIN
+        if rec["sweep_speedup"] < floor:
+            failures.append(
+                f"sweep_compare: {rec['sweep_speedup']:.2f}x is below the "
+                f"{floor:.1f}x floor on {rec['devices']} device(s) / "
+                f"{rec['cpus']} core(s) (serial {rec['serial_wall_s']}s "
+                f"vs sweep {rec['sweep_wall_s']}s)"
+            )
 
     data["last_smoke"] = smoke
     save_bench_engine(data)

@@ -928,7 +928,12 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
 
     Returns ``step(p, s, r_end)`` where ``p`` is the traced plan-array dict
     (see :func:`plan_device`), ``s`` the round state, and ``r_end`` the
-    exclusive chunk bound that event leaps are clamped to.
+    exclusive chunk bound that event leaps are clamped to. ``r_end`` is a
+    traced scalar, so under the sweep driver's ``jax.vmap`` it becomes a
+    *per-cell* bound: a lane whose bound is behind its round counter is
+    select-masked (state bit-preserved) while groupmates keep running —
+    the mechanism behind both heterogeneous event leaps within a group
+    and the per-cell early exit in :mod:`repro.core.sweep`.
 
     Packed layout: the round unpacks the [SLOT_F, T] slot matrix into
     column locals, runs the protocol logic as straight-line column
@@ -2126,7 +2131,8 @@ def make_batch_step(cfg: EngineConfig, meta: PlanMeta):
     quecc): lock-free execution over a precomputed dependency schedule.
 
     Returns ``step(p, s, r_end)`` with the same contract as
-    :func:`make_step`. The round loop performs only (a) batch-boundary
+    :func:`make_step` (including the vmapped per-cell ``r_end``
+    early-exit semantics). The round loop performs only (a) batch-boundary
     bookkeeping, (b) admission of the current batch's schedulable units
     to exec-lane slots, and (c) the wavefront-eligibility check "all
     planned predecessors committed" — the dense-gather formulation of

@@ -24,6 +24,7 @@ import math
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DEFAULT_RULES: dict[str, Any] = {
@@ -54,6 +55,29 @@ DEFAULT_RULES: dict[str, Any] = {
     "cache_seq": None,
     "cache_kv": "model",
 }
+
+
+CELL_RULES: dict[str, Any] = {"cells": "cells"}
+
+
+def cell_mesh(n_devices: int) -> Mesh:
+    """A 1-D mesh over the first ``n_devices`` local devices, axis
+    ``"cells"`` — the sweep driver shards the leading cell axis of each
+    vmapped group over it (``repro.core.sweep.SweepMode.devices``)."""
+    return Mesh(np.asarray(jax.devices()[:n_devices]), ("cells",))
+
+
+def cell_sharding(mesh: Mesh, tree):
+    """Leading-axis ``P("cells")`` sharding for every leaf of ``tree``
+    (scalars and rank-0 leaves replicate; the sweep driver pads the cell
+    axis to a device multiple so the axis always divides)."""
+
+    def leaf(x):
+        shape = np.shape(x)
+        axes = ("cells",) + (None,) * max(len(shape) - 1, 0)
+        return spec_for(axes[: len(shape)], shape, mesh, CELL_RULES)
+
+    return jax.tree.map(leaf, tree)
 
 
 def rules_for(cfg, shape_kind: str, batch: int, mesh: Mesh) -> dict:

@@ -335,3 +335,132 @@ def test_warmup_subtracts_all_counters():
     assert warm.aborts_ollp < raw.aborts_ollp
     assert warm.wasted_ops < raw.wasted_ops
     assert warm.commits < raw.commits
+
+
+# ---------------------------------------------------------------------------
+# Parallel sweep driver (SweepMode): device-sharded cell axis, pipelined
+# asynchronous host loop, per-cell early exit — every mode bit-identical
+# to per-cell run_simulation and to the SERIAL_MODE reference driver.
+
+# Finite commit target + small chunks so per-cell early exit actually
+# triggers, at *different* chunk boundaries for different contention
+# levels (heterogeneous groups are where early exit can go wrong).
+EXIT_SIM = dict(max_rounds=2000, warmup_rounds=500, chunk_rounds=250,
+                target_commits=60)
+
+DRIVER_MODES = [
+    sweep.SweepMode(devices=1, pipeline=0, early_exit=True),
+    sweep.SweepMode(devices=1, pipeline=2, early_exit=True),
+    # clamped to the local device count in-process; the genuinely
+    # multi-device case runs in tests/test_sharding.py's subprocess
+    sweep.SweepMode(devices=4, pipeline=1, early_exit=True),
+]
+
+
+@pytest.mark.parametrize("protocol", sorted(PROTO_KW))
+def test_driver_modes_match_serial(protocol):
+    """Early-exit-only, pipelined + early-exit, and sharded driver modes
+    must all reproduce per-cell ``run_simulation`` — and the
+    ``SERIAL_MODE`` group driver — bit-exactly, for every protocol, on a
+    group whose cells hit ``target_commits`` at different boundaries."""
+    cfg = EngineConfig(protocol=protocol, **PROTO_KW[protocol], **EXIT_SIM)
+    wls = [
+        make_workload(WorkloadConfig(kind="ycsb", num_txns=256,
+                                     num_records=10_000, num_hot=h, seed=3))
+        for h in (4, 64, 1024)
+    ]
+    cells = [(cfg, w) for w in wls]
+    ref = [run_simulation(cfg, w) for w in wls]
+    for mode in [sweep.SERIAL_MODE] + DRIVER_MODES:
+        got = sweep.run_cells(cells, mode=mode)
+        for g, r in zip(got, ref):
+            assert _fingerprint(g) == _fingerprint(r), (protocol, mode)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    cell_kind=st.sampled_from(sorted(PROTO_KW)
+                              + ["quecc_frag", "overload_backlog"]),
+    devices=st.sampled_from([1, 4]),
+    pipeline=st.sampled_from([0, 1, 3]),
+    early_exit=st.booleans(),
+    target=st.sampled_from([25, 10**9]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_driver_modes_property(cell_kind, devices, pipeline, early_exit,
+                               target, seed):
+    """Randomized driver-mode conformance over every protocol plus a
+    fragment-granular QueCC cell and a bounded-backlog overload cell:
+    (devices, pipeline depth, early exit, finite-vs-unbounded commit
+    target, seed) must never change a single counter vs per-cell
+    ``run_simulation``."""
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=target)
+    if cell_kind == "quecc_frag":
+        cfg = EngineConfig(protocol="quecc", fragment_exec=True,
+                           **PROTO_KW["quecc"], **sim)
+        wl_kw = dict(kind="ycsb", num_txns=256, num_records=10_000,
+                     multipart_frac=1.0, num_partitions=8, batch_epoch=64,
+                     seed=seed)
+    elif cell_kind == "overload_backlog":
+        cfg = EngineConfig(protocol="deadlock_free", n_exec=8,
+                           epoch_interval_rounds=150,
+                           admission_policy="bounded_backlog",
+                           backlog_cap=32, **sim)
+        wl_kw = dict(kind="ycsb", num_txns=512, num_records=10_000,
+                     batch_epoch=64, seed=seed)
+    else:
+        cfg = EngineConfig(protocol=cell_kind, **PROTO_KW[cell_kind], **sim)
+        wl_kw = dict(kind="ycsb", num_txns=256, num_records=10_000,
+                     seed=seed)
+    wls = [make_workload(WorkloadConfig(**wl_kw, num_hot=h))
+           for h in (8, 512)]
+    mode = sweep.SweepMode(devices=devices, pipeline=pipeline,
+                           early_exit=early_exit)
+    got = sweep.run_cells([(cfg, w) for w in wls], mode=mode)
+    ref = [run_simulation(cfg, w) for w in wls]
+    for g, r in zip(got, ref):
+        assert _fingerprint(g) == _fingerprint(r), (cell_kind, mode)
+
+
+def test_statics_group_merges_traced_value_sweeps():
+    """Cells differing only in *traced* values (here the epoch-interval
+    scalar of an open-arrival rate sweep) must share one vmapped
+    program — and still match per-cell execution bit-exactly. This is
+    the compile-sharing payoff the runner-cache key promises."""
+    sim = dict(max_rounds=1500, warmup_rounds=300, chunk_rounds=300,
+               target_commits=10**9)
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                       num_hot=16, batch_epoch=64, seed=5)
+    )
+    cfgs = [EngineConfig(protocol="deadlock_free", n_exec=8,
+                         epoch_interval_rounds=e, **sim)
+            for e in (100, 300)]
+    got = sweep.run_cells([(c, wl) for c in cfgs])
+    assert [r.raw["group_cells"] for r in got] == [2, 2]
+    ref = [run_simulation(c, wl) for c in cfgs]
+    for g, r in zip(got, ref):
+        assert _fingerprint(g) == _fingerprint(r)
+
+
+def test_warmup_snapshot_off_grid_chunk_split():
+    """``warmup_rounds`` not a multiple of ``chunk_rounds``: the chunk
+    containing it is split at the warmup boundary, so the snapshot is
+    taken exactly at ``warmup_rounds`` — bit-identical to running the
+    same budget on a chunk grid that contains the boundary natively.
+    (Previously the snapshot silently landed at the last smaller chunk
+    boundary, shifting every warmup-subtracted counter.)"""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                       num_hot=8, seed=1)
+    )
+    base = dict(protocol="deadlock_free", n_exec=8, max_rounds=2000,
+                warmup_rounds=750, target_commits=10**9)
+    split = run_simulation(EngineConfig(**base, chunk_rounds=500), wl)
+    on_grid = run_simulation(EngineConfig(**base, chunk_rounds=250), wl)
+    assert _fingerprint(split) == _fingerprint(on_grid)
+    # the schedule inserts exactly one off-grid boundary, then returns
+    # to the original chunk grid
+    cfg = EngineConfig(**base, chunk_rounds=500)
+    assert list(sweep.chunk_boundaries(cfg)) == [500, 750, 1000, 1500, 2000]

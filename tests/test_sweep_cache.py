@@ -7,7 +7,12 @@ The engine's speed rests on two caches with sharply different contracts:
     Every config field that changes the traced computation MUST be part
     of the key (a false hit would silently simulate the wrong
     protocol); host-loop budget fields MUST NOT be (a false miss would
-    recompile per cell and destroy sweep performance).
+    recompile per cell and destroy sweep performance). The cache is a
+    bounded LRU (``REPRO_SWEEP_RUNNER_CACHE``): compiled executables
+    pin device memory, so long multi-figure runs must evict
+    least-recently-used runners instead of growing without bound —
+    eviction order, hit-refresh, and the hit/miss/eviction counters
+    are pinned below.
   * ``benchmarks/common.py`` result caches — keyed on a hash that
     includes ``ENGINE_VERSION``, so bumping the version (any
     result-visible engine change, e.g. the packed-state rewrite) makes
@@ -216,6 +221,11 @@ def test_runner_cache_misses_on_statics_and_shapes():
     pytest-xdist it must share a worker with the other cache-counting
     test rather than race against concurrent run_simulation calls."""
     meta = PlanMeta(n_txns=8, max_keys=2, num_records=16)
+    # exact-entry-count accounting below assumes no LRU eviction fires
+    # mid-test; raise the bound if a long-running process is near it
+    info = sweep.runner_cache_info()
+    if info["capacity"] < info["entries"] + 48:
+        sweep.set_runner_cache_capacity(info["entries"] + 64)
     before = sweep.runner_cache_info()["entries"]
     cfg = EngineConfig(**BASE)
     sweep.get_runner(cfg, meta, batched=False)
@@ -249,6 +259,80 @@ def test_runner_cache_misses_on_statics_and_shapes():
         meta, batched=True,
     )
     assert sweep.runner_cache_info()["entries"] == n + 1
+
+
+@pytest.mark.xdist_group("compile_cache")
+def test_runner_cache_lru_eviction():
+    """The runner cache is a bounded LRU: inserting past the capacity
+    evicts the least-recently-used entry, a cache *hit* refreshes its
+    entry's recency, and the hit/miss/eviction counters account for all
+    of it. get_runner is lazy (jit compiles on first call), so the test
+    runs on an empty scratch cache and restores the real one after —
+    nothing is recompiled."""
+    cfg = EngineConfig(**BASE)
+    meta = PlanMeta(n_txns=8, max_keys=2, num_records=16)
+    metas = [dataclasses.replace(meta, n_txns=8 + i) for i in range(3)]
+    keys = [(cfg.trace_statics(), m, False) for m in metas]
+    saved = dict(sweep._RUNNER_CACHE)
+    old_cap = sweep.set_runner_cache_capacity(2)
+    sweep._RUNNER_CACHE.clear()
+    try:
+        base = sweep.runner_cache_info()
+        a = sweep.get_runner(cfg, metas[0], batched=False)
+        sweep.get_runner(cfg, metas[1], batched=False)
+        assert sweep.runner_cache_info()["entries"] == 2
+        # hit: same object back, and metas[0] refreshed to MRU — so the
+        # next insertion must evict metas[1], not metas[0]
+        assert sweep.get_runner(cfg, metas[0], batched=False) is a
+        sweep.get_runner(cfg, metas[2], batched=False)
+        info = sweep.runner_cache_info()
+        assert info["entries"] == info["capacity"] == 2
+        assert info["hits"] == base["hits"] + 1
+        assert info["misses"] == base["misses"] + 3
+        assert info["evictions"] == base["evictions"] + 1
+        assert keys[1] not in info["keys"]
+        assert keys[0] in info["keys"] and keys[2] in info["keys"]
+        # the evicted key comes back as a fresh miss, evicting the
+        # now-least-recent metas[0]
+        assert sweep.get_runner(cfg, metas[1], batched=False) is not None
+        info = sweep.runner_cache_info()
+        assert keys[0] not in info["keys"]
+        assert info["misses"] == base["misses"] + 4
+        assert info["evictions"] == base["evictions"] + 2
+    finally:
+        sweep.set_runner_cache_capacity(old_cap)
+        sweep._RUNNER_CACHE.clear()
+        sweep._RUNNER_CACHE.update(saved)
+
+
+@pytest.mark.xdist_group("compile_cache")
+def test_runner_cache_capacity_shrink_evicts():
+    """Shrinking the bound evicts down to it immediately (oldest first)
+    and reports the old bound so callers can restore it."""
+    cfg = EngineConfig(**BASE)
+    metas = [
+        PlanMeta(n_txns=64 + i, max_keys=2, num_records=16)
+        for i in range(4)
+    ]
+    saved = dict(sweep._RUNNER_CACHE)
+    old_cap = sweep.set_runner_cache_capacity(8)
+    sweep._RUNNER_CACHE.clear()
+    try:
+        for m in metas:
+            sweep.get_runner(cfg, m, batched=False)
+        before_ev = sweep.runner_cache_info()["evictions"]
+        assert sweep.set_runner_cache_capacity(2) == 8
+        info = sweep.runner_cache_info()
+        assert info["entries"] == 2
+        assert info["evictions"] == before_ev + 2
+        # the two *newest* entries survive
+        assert info["keys"] == [
+            (cfg.trace_statics(), m, False) for m in metas[2:]
+        ]
+    finally:
+        sweep.set_runner_cache_capacity(old_cap)
+        sweep._RUNNER_CACHE.clear()
+        sweep._RUNNER_CACHE.update(saved)
 
 
 def test_engine_version_invalidates_bench_cache(monkeypatch):
