@@ -86,6 +86,11 @@ SMOKE_CELLS = [
     ("smoke_quecc_frag", YCSB_MP,
      dict(protocol="quecc", n_cc=8, n_exec=32, window=4,
           fragment_exec=True)),
+    # cluster-chain scheduling smoke: one hot op per txn keeps real
+    # per-cluster parallelism (two would percolate the batch into one
+    # serialized component — fig18's "perc" lane, not a perf smoke)
+    ("smoke_scheduled", dict(YCSB, hot_per_txn=1),
+     dict(protocol="scheduled", n_exec=40)),
 ]
 
 

@@ -34,11 +34,15 @@ Everything in this module is **static**: a :class:`CostModel` instance is
 part of ``EngineConfig.trace_statics()``, so every constant below is baked
 into the compiled step computation — changing any of them recompiles (and
 must invalidate benchmark caches via a ``repro.core.sweep.ENGINE_VERSION``
-bump if committed). Nothing here is traced per cell. The only host-side
-*functions* are :func:`CostModel.planner_batch_cycles` (per-batch planner
+bump if committed). Nothing here is traced per cell. The host-side
+*functions* are :func:`CostModel.planner_batch_cycles` /
+:func:`CostModel.scheduler_batch_cycles` (per-batch planner / clusterer
 work, consumed by ``engine._planner_work_rounds`` at plan-build time) and
-:func:`planner_lane_schedule` (the pure-python reference for the engine's
-in-round planner-lane recurrence, pinned by ``tests/test_planner_model``).
+the pure-python oracles — :func:`planner_lane_schedule` for the engine's
+in-round planner-lane recurrence (``tests/test_planner_model``),
+:func:`cluster_components` / :func:`cluster_chain_edges` for the
+`scheduled` family's clusterer (``tests/test_scheduling``), and the
+overload-robustness oracles below (``tests/test_overload``).
 
 Planner-lane throughput model (fig15)
 -------------------------------------
@@ -129,6 +133,20 @@ class CostModel:
     # and the commit-join bookkeeping entry.
     plan_frag_cycles: int = 150
 
+    # --- transaction scheduling (Prasaad et al., arXiv 1810.01997) ---
+    # The `scheduled` family clusters each batch's transactions by
+    # data-access overlap (union-find over the conflict edges) instead
+    # of building a full dependency graph: no wavefront levels, no
+    # per-lane queue materialization — just find(), union(), and a
+    # queue append per transaction. Each term is therefore cheaper
+    # than its planning counterpart above (plan_txn_cycles /
+    # batch_plan_cycles_per_op / plan_edge_cycles): the scheduler
+    # touches each access once to hash it and each conflict edge once
+    # to union two roots.
+    sched_txn_cycles: int = 100  # batch entry + cluster-queue append
+    sched_op_cycles: int = 60  # hash one access into the key table
+    sched_edge_cycles: int = 40  # union-find find+union per edge scanned
+
     # --- transaction logic ---
     # One stored-procedure op on a 1 KB record (probe + RMW + logic,
     # ~0.6 us — paper-scale one-shot stored procedures).
@@ -201,6 +219,38 @@ class CostModel:
             + n_ollp * self.recon_cycles
         )
 
+    def scheduler_batch_cycles(self, n_txns, n_ops, n_edges, n_ollp):
+        """Clusterer cycles to schedule one batch (the `scheduled`
+        family's analogue of :func:`planner_batch_cycles`).
+
+        All arguments may be ints or numpy arrays (one entry per
+        batch). ``n_edges`` counts the conflict edges the clusterer
+        *scans* to union components — the full record-level conflict
+        graph of the batch, not the (smaller) per-cluster chains the
+        engine executes. Like the planner cost this is per-lane work
+        under the throughput model and never divided by a lane count.
+
+        Scheduling is strictly cheaper than planning the same batch:
+        every term is below its planning counterpart and the fragment
+        term is absent (clusters are txn-granular).
+
+        >>> cm = CostModel()
+        >>> cm.scheduler_batch_cycles(n_txns=2, n_ops=6, n_edges=3,
+        ...                           n_ollp=0)
+        680
+        >>> int(cm.rounds(680))  # rounds at 500 cycles per round
+        2
+        >>> cm.scheduler_batch_cycles(2, 6, 3, 0) < cm.planner_batch_cycles(
+        ...     2, 6, 3, 0, 0)
+        True
+        """
+        return (
+            n_txns * self.sched_txn_cycles
+            + n_ops * self.sched_op_cycles
+            + n_edges * self.sched_edge_cycles
+            + n_ollp * self.recon_cycles
+        )
+
 
 def planner_lane_schedule(work_rounds, interval_rounds: int, n_lanes: int):
     """Reference planner-lane schedule (pure python, execution-independent).
@@ -262,6 +312,79 @@ def planner_busy_integral(
         max(min(f, horizon) - min(f - w, horizon), 0)
         for f, w in zip(ready, work_rounds)
     ))
+
+
+def cluster_components(n: int, edge_dst, edge_src) -> list[int]:
+    """Reference clusterer for the `scheduled` family: union-find over
+    the batch's conflict edges, returning one dense cluster id per
+    transaction. Clusters are numbered by their smallest member (0 is
+    the cluster containing the lowest conflicting txn id, singletons
+    included), which is exactly how ``depgraph.build_schedule(kind=
+    "cluster")`` numbers them — ``tests/test_scheduling`` pins the
+    engine-side schedule bit-exactly against this function.
+
+    Pure python on purpose (like every oracle in this module): it must
+    stay independent of the vectorized numpy clusterer it checks, and
+    importable without numpy for the standalone doctest run.
+
+    A 0-2-4 chain with 1 and 3 as singletons:
+
+    >>> cluster_components(5, [2, 4], [0, 2])
+    [0, 1, 0, 2, 0]
+    >>> cluster_components(3, [], [])
+    [0, 1, 2]
+    >>> cluster_components(4, [1, 3, 3], [0, 2, 1])  # merge {0,1} + {2,3}
+    [0, 0, 0, 0]
+    """
+    root = list(range(int(n)))
+
+    def find(x):
+        while root[x] != x:
+            root[x] = root[root[x]]  # path halving
+            x = root[x]
+        return x
+
+    for d, s in zip(edge_dst, edge_src):
+        a, b = find(int(d)), find(int(s))
+        if a != b:  # union by smaller id, so the root is the min member
+            if a > b:
+                a, b = b, a
+            root[b] = a
+    # dense ids in order of first appearance = by smallest member
+    seen: dict[int, int] = {}
+    out = []
+    for x in range(int(n)):
+        r = find(x)
+        if r not in seen:
+            seen[r] = len(seen)
+        out.append(seen[r])
+    return out
+
+
+def cluster_chain_edges(cluster_of) -> list[tuple[int, int]]:
+    """The execution edges the `scheduled` engine path runs: within
+    each cluster, txn i depends on the cluster's previous member (in
+    admission = id order); cluster heads have no predecessor. This is
+    the whole schedule — no wavefront DAG, so every txn has in-degree
+    <= 1 and cross-cluster txns stay concurrent.
+
+    Returns ``(dst, src)`` pairs sorted by dst.
+
+    >>> cluster_chain_edges([0, 1, 0, 2, 0])
+    [(2, 0), (4, 2)]
+    >>> cluster_chain_edges([0, 0, 0])
+    [(1, 0), (2, 1)]
+    >>> cluster_chain_edges([0, 1, 2])
+    []
+    """
+    last: dict[int, int] = {}
+    edges = []
+    for i, c in enumerate(cluster_of):
+        c = int(c)
+        if c in last:
+            edges.append((i, last[c]))
+        last[c] = i
+    return edges
 
 
 # --------------------------------------------------------------------------

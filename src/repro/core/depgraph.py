@@ -40,6 +40,16 @@ immediate predecessor in every per-lane queue it touches (lane of key k =
 ``part(k) % n_lanes``). Per-lane chains are total orders, so the same
 transitive argument applies at lane granularity.
 
+Cluster scheduling (``kind="cluster"``) sits between the two: the
+`scheduled` family (Prasaad et al., arXiv 1810.01997) does not build a
+dependency DAG at all — it unions the conflict edges into
+conflict-connected components (``cluster_components_np``) and serializes
+each component as one admission-order chain, so every transaction has at
+most one predecessor (the previous member of its cluster) and
+cross-cluster transactions stay fully concurrent. Correctness is by the
+same argument as DGCC's: conflicting txns share a component, the chain is
+a total order over it, and the chain order is the submission order.
+
 Fragment granularity (``fragments=True``): a *fragment* is one
 transaction's work on one planner lane — the unit QueCC actually chains
 through its per-lane queues and DGCC's record-action graph decomposes
@@ -92,6 +102,16 @@ class BatchSchedule:
     queue_txn: np.ndarray | None = None  # int32[Q]
     queue_lane: np.ndarray | None = None  # int32[Q]
     queue_pos: np.ndarray | None = None  # int32[Q] 0-based within the queue
+    # Scheduled family only (``kind="cluster"``): batch-local dense
+    # cluster id per txn (numbered by smallest member), the execution
+    # lane its cluster queue drains on, per-batch cluster counts, and
+    # the conflict edges the clusterer *scanned* to union components
+    # (the cost-model work term — the executed chain edges above are a
+    # subset, one per non-head cluster member).
+    cluster_of: np.ndarray | None = None  # int32[N]
+    cluster_lane: np.ndarray | None = None  # int32[N] cluster % n_lanes
+    batch_nclusters: np.ndarray | None = None  # int32[NB]
+    scan_edges: np.ndarray | None = None  # int64[NB] edges scanned
     # Fragment granularity (``fragments=True``): fragment f is txn
     # ``frag_txn[f]``'s work on lane ``frag_lane[f]``; ids are admission
     # order — sorted by (batch, level, txn, lane), so predecessors
@@ -290,6 +310,86 @@ def queue_edges(keys, part, nkeys, batch_of, n_lanes: int):
     )
 
 
+def cluster_components_np(n: int, edge_dst, edge_src):
+    """Smallest member id of each txn's conflict-connected component.
+
+    Vectorized union-find equivalent: min-label propagation across the
+    edge list with pointer-jumping compression between sweeps. Batches
+    are independent subgraphs (edges never cross batches), so one call
+    labels them all. ``cost_model.cluster_components`` is the
+    pure-python oracle this is pinned against.
+    """
+    label = np.arange(n, dtype=_I64)
+    if len(edge_dst) == 0:
+        return label
+    dst = np.asarray(edge_dst, _I64)
+    src = np.asarray(edge_src, _I64)
+    while True:
+        prev = label.copy()
+        m = np.minimum(label[dst], label[src])
+        np.minimum.at(label, dst, m)
+        np.minimum.at(label, src, m)
+        while True:
+            nxt = label[label]
+            if np.array_equal(nxt, label):
+                break
+            label = nxt
+        if np.array_equal(label, prev):
+            return label
+
+
+def cluster_edges(keys, modes, nkeys, batch_of, n_batches: int,
+                  n_lanes: int):
+    """Scheduled-family cluster chains (Prasaad et al., 1810.01997).
+
+    Builds the full record-level conflict graph, unions it into
+    conflict-connected components, and chains each component's members
+    in admission (id) order — so ``npred <= 1`` everywhere, within-
+    cluster txns serialize in submission order, and cross-cluster txns
+    never wait on each other. Returns ``(edge_dst, edge_src,
+    cluster_of, cluster_lane, batch_nclusters, scan_edges)``; cluster
+    ids are batch-local and numbered by smallest member, lanes are
+    ``cluster_of % n_lanes``.
+    """
+    n = keys.shape[0]
+    if n == 0:
+        z32 = np.zeros(0, np.int32)
+        znb = np.zeros(n_batches, np.int32)
+        return z32, z32, z32, z32, znb, znb.astype(_I64)
+    cdst, csrc = conflict_edges(keys, modes, nkeys, batch_of)
+    scan_edges = np.bincount(
+        batch_of[cdst].astype(_I64), minlength=n_batches
+    ).astype(_I64)
+    root = cluster_components_np(n, cdst, csrc)
+    # batch-local dense cluster ids, numbered by smallest member (the
+    # root *is* the min member, so first-appearance order = root order)
+    is_head = root == np.arange(n, dtype=_I64)
+    cum = np.cumsum(is_head)
+    gid = cum[root] - 1  # global dense id
+    # first txn of each batch (roots never cross batches, so the head
+    # count strictly before it localizes gid to the batch)
+    batch_start = np.searchsorted(batch_of, np.arange(n_batches))
+    heads_before = cum[batch_start] - is_head[batch_start]
+    cluster_of = (gid - heads_before[batch_of]).astype(np.int32)
+    cluster_lane = (cluster_of % max(n_lanes, 1)).astype(np.int32)
+    batch_nclusters = np.bincount(
+        batch_of[is_head].astype(_I64), minlength=n_batches
+    ).astype(np.int32)
+    # chain each component in id order: stable sort groups members
+    # ascending within their root group
+    order = np.argsort(root, kind="stable").astype(_I64)
+    r_s = root[order]
+    seg_start = np.concatenate([[True], r_s[1:] != r_s[:-1]])
+    prev = np.where(seg_start, _I64(-1), np.concatenate([[_I64(-1)], order[:-1]]))
+    edge_dst, edge_src = _dedupe_edges(
+        np.where(prev >= 0, order, -1), prev
+    )
+    return (
+        edge_dst, edge_src, cluster_of, cluster_lane, batch_nclusters,
+        scan_edges,
+    )
+
+
 # ---------------------------------------------------------------------------
 # fragments: (txn, lane) units + fragment-level dependency graph
 # ---------------------------------------------------------------------------
@@ -473,11 +573,13 @@ def build_schedule(
 ) -> BatchSchedule:
     """Plan a workload into batches and build its dependency schedule.
 
-    kind = 'conflict' (DGCC record-level graph) or 'lane' (QueCC per-lane
-    queues over ``n_lanes`` planner lanes). ``fragments=True``
-    additionally builds the fragment table and fragment-granular graph
-    (see :func:`build_fragments`) for the engine's per-lane fragment
-    execution mode.
+    kind = 'conflict' (DGCC record-level graph), 'lane' (QueCC per-lane
+    queues over ``n_lanes`` planner lanes), or 'cluster' (the scheduled
+    family's union-find component chains over ``n_lanes`` *execution*
+    lanes — see :func:`cluster_edges`; fragments do not apply).
+    ``fragments=True`` additionally builds the fragment table and
+    fragment-granular graph (see :func:`build_fragments`) for the
+    engine's per-lane fragment execution mode.
     """
     n = keys.shape[0]
     b = max(int(batch_epoch), 1)
@@ -490,11 +592,22 @@ def build_schedule(
     )
 
     queue_txn = queue_lane = queue_pos = None
+    cluster_kw = {}
     if kind == "conflict":
         edge_dst, edge_src = conflict_edges(keys, modes, nkeys, batch_of)
     elif kind == "lane":
         edge_dst, edge_src, queue_txn, queue_lane, queue_pos = queue_edges(
             keys, part, nkeys, batch_of, n_lanes
+        )
+    elif kind == "cluster":
+        assert not fragments, "cluster scheduling is txn-granular"
+        (edge_dst, edge_src, cluster_of, cluster_lane, batch_nclusters,
+         scan_edges) = cluster_edges(
+            keys, modes, nkeys, batch_of, nb, n_lanes
+        )
+        cluster_kw = dict(
+            cluster_of=cluster_of, cluster_lane=cluster_lane,
+            batch_nclusters=batch_nclusters, scan_edges=scan_edges,
         )
     else:
         raise ValueError(f"unknown schedule kind: {kind}")
@@ -510,6 +623,7 @@ def build_schedule(
     )
     return BatchSchedule(
         **frag_kw,
+        **cluster_kw,
         n_txns=n,
         batch_epoch=b,
         batch_of=batch_of,

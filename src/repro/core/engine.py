@@ -214,6 +214,7 @@ PROTOCOLS = (
     "partitioned_store",
     "dgcc",
     "quecc",
+    "scheduled",
 )
 
 
@@ -352,10 +353,15 @@ class EngineConfig:
             assert self.n_cc >= 1
         if self.protocol == "quecc":
             assert self.n_cc >= 1, "quecc needs n_cc planner/queue lanes"
+        if self.protocol == "scheduled":
+            assert self.state_layout == "packed", (
+                "the frozen legacy engine predates the scheduled family"
+            )
         if self.fragment_exec or self.inter_batch_pipeline:
-            assert self.is_batch_planned, (
+            assert self.protocol in ("dgcc", "quecc"), (
                 "fragment execution / inter-batch pipelining are "
-                "batch-planned (dgcc/quecc) features"
+                "batch-planned (dgcc/quecc) features; the scheduled "
+                "family's clusters are txn-granular"
             )
             assert self.state_layout == "packed", (
                 "the frozen legacy engine predates fragment execution"
@@ -370,7 +376,8 @@ class EngineConfig:
         if self.n_planner_lanes:
             assert self.is_batch_planned, (
                 "the planner-lane throughput model charges *batch* "
-                "planning: it applies to dgcc/quecc only"
+                "planning/scheduling: it applies to dgcc/quecc/"
+                "scheduled only"
             )
         if self.n_planner_lanes or self.epoch_interval_rounds:
             assert self.state_layout == "packed", (
@@ -450,7 +457,13 @@ class EngineConfig:
 
     @property
     def is_batch_planned(self) -> bool:
-        return self.protocol in ("dgcc", "quecc")
+        """Protocols that execute a precomputed batch schedule through
+        ``make_batch_step`` (no lock table, no abort path). The
+        `scheduled` family qualifies: its cluster chains are just a
+        degenerate dependency schedule (in-degree <= 1), so it rides
+        the whole batch path — plan gating, open arrival, planner
+        lanes, metrics, leaping — for free."""
+        return self.protocol in ("dgcc", "quecc", "scheduled")
 
     @property
     def dispatch_rounds(self) -> int:
@@ -2013,17 +2026,31 @@ def make_step(cfg: EngineConfig, meta: PlanMeta):
 def _batch_plan_rounds(cfg: EngineConfig, plan: planner_lib.Plan):
     """Per-batch planning latency in rounds: planner lanes place every
     key-op into the dependency graph / queues and run OLLP reconnaissance
-    for data-dependent access sets (P1: planners, not exec lanes)."""
+    for data-dependent access sets (P1: planners, not exec lanes).
+
+    The scheduled family charges the (cheaper) clusterer instead —
+    hash each access, union each scanned conflict edge, append each
+    txn to its cluster queue (``CostModel.scheduler_batch_cycles``) —
+    divided by the same pipelined lane count."""
     cm = cfg.cost
     sched = plan.sched
     n_ollp = np.bincount(
         sched.batch_of, weights=plan.ollp.astype(np.int64),
         minlength=sched.num_batches,
     )
-    plan_cycles = (
-        sched.plan_ops.astype(np.int64) * cm.batch_plan_cycles_per_op
-        + n_ollp.astype(np.int64) * cm.recon_cycles
-    ) // max(cfg.n_cc, 1)
+    if cfg.protocol == "scheduled":
+        work = cm.scheduler_batch_cycles(
+            n_txns=sched.batch_size.astype(np.int64),
+            n_ops=sched.plan_ops.astype(np.int64),
+            n_edges=sched.scan_edges.astype(np.int64),
+            n_ollp=n_ollp.astype(np.int64),
+        )
+    else:
+        work = (
+            sched.plan_ops.astype(np.int64) * cm.batch_plan_cycles_per_op
+            + n_ollp.astype(np.int64) * cm.recon_cycles
+        )
+    plan_cycles = work // max(cfg.n_cc, 1)
     return np.asarray(cm.rounds(plan_cycles), np.int32)  # [NB]
 
 
@@ -2042,6 +2069,16 @@ def _planner_work_rounds(cfg: EngineConfig, plan: planner_lib.Plan):
         sched.batch_of, weights=plan.ollp.astype(np.int64),
         minlength=sched.num_batches,
     ).astype(np.int64)
+    if cfg.protocol == "scheduled":
+        # clusterer-lane work: scan the batch's full conflict graph
+        # (``scan_edges``), not the per-cluster chains it collapses to
+        cycles = cm.scheduler_batch_cycles(
+            n_txns=sched.batch_size.astype(np.int64),
+            n_ops=sched.plan_ops.astype(np.int64),
+            n_edges=sched.scan_edges.astype(np.int64),
+            n_ollp=n_ollp,
+        )
+        return np.asarray(cm.rounds(cycles), np.int32)  # [NB]
     if cfg.fragment_exec:
         n_edges = sched.frag_edges_per_batch()
         n_frags = sched.batch_fsize.astype(np.int64)
@@ -2798,6 +2835,12 @@ def make_plan(cfg: EngineConfig, workload: Workload) -> planner_lib.Plan:
         plan = planner_lib.plan_quecc(
             workload, max(cfg.n_cc, 1), workload.cfg.batch_epoch,
             fragments=cfg.fragment_exec,
+        )
+    elif cfg.protocol == "scheduled":
+        # clusters round-robin over the *execution* lanes (there is no
+        # planner-lane key partition to inherit)
+        plan = planner_lib.plan_scheduled(
+            workload, workload.cfg.batch_epoch, n_lanes=max(cfg.n_exec, 1),
         )
     else:
         plan = planner_lib.plan_dynamic(workload)

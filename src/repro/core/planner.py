@@ -24,6 +24,11 @@ request and the canonical order in which it requests them:
                               planner materializes one totally-ordered
                               execution queue per CC lane with intra-batch
                               dependency stamps; execution is lock-free.
+  - ``plan_scheduled``      — Scheduled (Prasaad et al.): per batch a
+                              union-find clusterer chains each conflict-
+                              connected component in admission order; no
+                              wavefronts, no queues, no lock table —
+                              scheduling, not planning.
 
 Deadlock freedom of the sorted plans is structural: a transaction never
 waits on lock j while holding a lock that sorts after j, so the waits-for
@@ -163,6 +168,35 @@ def plan_dgcc(
     p.sched = depgraph_lib.build_schedule(
         p.keys, p.modes, p.part, p.nkeys, batch_epoch, kind="conflict",
         n_lanes=n_lanes, fragments=fragments,
+    )
+    return p
+
+
+def plan_scheduled(w: Workload, batch_epoch: int, *, n_lanes: int = 1) -> Plan:
+    """Scheduled family (Prasaad et al., arXiv 1810.01997): cluster, don't
+    plan.
+
+    Per batch, a union-find clusterer groups transactions into
+    conflict-connected components over the record-level conflict edges
+    and serializes each component as one admission-order chain
+    (``depgraph.build_schedule(kind="cluster")``); components map to
+    execution lanes round-robin (``cluster % n_lanes``, ``n_lanes`` =
+    the engine's exec-lane count). No wavefront levels, no per-lane
+    queue materialization, no lock table — the only dependency any
+    transaction carries is its cluster's previous member, which is what
+    makes scheduling cheaper than full planning
+    (``CostModel.scheduler_batch_cycles`` vs ``planner_batch_cycles``).
+
+    Like dgcc, the clusterer needs the full access set, so OLLP
+    reconnaissance stays charged but estimate misses never reach
+    execution (the cluster is corrected before the batch releases).
+    """
+    n, k = w.keys.shape
+    p = _reorder(w, np.broadcast_to(np.arange(k), (n, k)).copy())
+    p.ollp_miss = np.zeros(n, bool)
+    p.sched = depgraph_lib.build_schedule(
+        p.keys, p.modes, p.part, p.nkeys, batch_epoch, kind="cluster",
+        n_lanes=n_lanes,
     )
     return p
 

@@ -1,4 +1,4 @@
-"""Protocol registry: the eight concurrency-control designs under test.
+"""Protocol registry: the nine concurrency-control designs under test.
 
 Thin façade over ``repro.core.engine`` — the engine implements all
 protocols over one cycle-accounting core; this module names them, maps
@@ -63,6 +63,14 @@ REGISTRY = {
         "structurally impossible (per-lane total orders); no lock table",
         "P1+P2 at batch scope; Qadah & Sadoghi, arXiv 1910.10350",
     ),
+    "scheduled": ProtocolInfo(
+        "Scheduled (conflict-cluster lane chains)",
+        "union-find clustering by data-access overlap; clusters chain "
+        "in admission order on round-robin exec lanes",
+        "structurally impossible (per-cluster total orders); no lock "
+        "table, no wavefront DAG",
+        "scheduling, not planning; Prasaad et al., arXiv 1810.01997",
+    ),
 }
 
 PLANNERS = {
@@ -74,8 +82,11 @@ PLANNERS = {
     "partitioned_store": planner_lib.plan_partition_store,
     "dgcc": planner_lib.plan_dgcc,
     "quecc": planner_lib.plan_quecc,
+    "scheduled": planner_lib.plan_scheduled,
 }
 
-assert set(REGISTRY) == set(PROTOCOLS)
+# Registry/engine consistency (every engine protocol named + planned, no
+# orphans) is checked by ``tests/test_protocols_registry.py`` instead of
+# an import-time assert, which used to surface as an opaque ImportError.
 
-__all__ = ["REGISTRY", "PLANNERS", "EngineConfig", "run_simulation"]
+__all__ = ["PROTOCOLS", "REGISTRY", "PLANNERS", "EngineConfig", "run_simulation"]

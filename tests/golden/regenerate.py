@@ -56,6 +56,24 @@ CELLS = {
         YCSB_HOT, dict(protocol="partitioned_store", n_exec=8)),
     "dgcc": (YCSB_HOT, dict(protocol="dgcc", n_cc=2, n_exec=6, window=2)),
     "quecc": (YCSB_HOT, dict(protocol="quecc", n_cc=4, n_exec=6, window=2)),
+    # Scheduled family (conflict-cluster lane chains). One hot op per
+    # txn and a large cold key space keep per-hot-key cluster structure
+    # (a second hot op — or cold-key birthday collisions at 10k
+    # records — would bridge the batch into one giant cluster and
+    # serialize it; that percolated regime is fig18's "perc" lane, not
+    # this pin).
+    "scheduled": (
+        dict(kind="ycsb", num_txns=256, num_records=1_000_000, num_hot=8,
+             hot_per_txn=1, seed=0),
+        dict(protocol="scheduled", n_exec=8)),
+    # Clusterer-cost counters under a saturated single planner lane
+    # (the scheduled analogue of dgcc_planner_sat): plan_busy /
+    # plan_qdelay pin the scheduler_batch_cycles work sequence.
+    "scheduled_planner_sat": (
+        dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=0,
+             batch_epoch=128, seed=0),
+        dict(protocol="scheduled", n_exec=16,
+             n_planner_lanes=1, epoch_interval_rounds=20)),
     "deadlock_free_tpcc_ollp": (
         TPCC_OLLP, dict(protocol="deadlock_free", n_exec=8)),
     "dgcc_frag": (

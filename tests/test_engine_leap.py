@@ -464,3 +464,128 @@ def test_warmup_snapshot_off_grid_chunk_split():
     # to the original chunk grid
     cfg = EngineConfig(**base, chunk_rounds=500)
     assert list(sweep.chunk_boundaries(cfg)) == [500, 750, 1000, 1500, 2000]
+
+
+# ---------------------------------------------------------------------------
+# Scheduled family conformance sweep. ``scheduled`` stays out of PROTO_KW
+# on purpose: the frozen legacy engine (state_layout="legacy") predates
+# the family, so there is no legacy differential — its contract is
+# leap/dense, vmap/serial, driver-mode, and K-dispatch bit-identity
+# against itself, plus the golden fixtures in tests/test_golden_traces.py.
+
+SCHED_KW = dict(n_exec=8)
+
+
+def _run_scheduled(wl, *, leap, sim=FAST, **kw):
+    cfg = EngineConfig(protocol="scheduled", event_leap=leap,
+                       **dict(SCHED_KW, **kw), **sim)
+    return run_simulation(cfg, wl)
+
+
+@pytest.mark.parametrize("k", [1, 8])
+@pytest.mark.parametrize("release_path", ["csr", "dense"])
+def test_scheduled_leap_matches_dense(ycsb_hot, k, release_path):
+    """Cluster-chain execution must leap bit-identically to its dense
+    round loop, across K-fused dispatch and both release paths."""
+    kw = dict(rounds_per_dispatch=k, release_path=release_path)
+    leap = _run_scheduled(ycsb_hot, leap=True, **kw)
+    dense = _run_scheduled(ycsb_hot, leap=False, **kw)
+    assert _fingerprint(leap) == _fingerprint(dense)
+    assert leap.raw["steps_executed"] <= dense.raw["steps_executed"]
+    # the family never aborts: per-cluster total orders, no lock table
+    assert leap.aborts_deadlock == 0 and leap.aborts_ollp == 0
+
+
+def test_scheduled_leap_actually_skips_rounds(ycsb_hot):
+    """Cluster chains serialize on lanes, so most rounds are barrier or
+    chain waits — the leap must skip a large fraction of them."""
+    res = _run_scheduled(ycsb_hot, leap=True)
+    assert res.raw["steps_executed"] < 0.7 * res.raw["rounds_total"]
+
+
+SCHED_GRID = [
+    # (num_hot, hot_per_txn, n_exec, batch_epoch, k, seed)
+    (0, 2, 8, 64, 1, 0),
+    (4, 1, 2, 64, 8, 1),
+    (64, 2, 8, 256, 8, 2),
+    (512, 1, 16, 256, 1, 3),
+    (8, 2, 6, 100, 8, 0),
+]
+
+
+def _check_scheduled_leap_dense(num_hot, hot_per_txn, n_exec, batch_epoch,
+                                k, seed):
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=256, num_records=10_000,
+                       num_hot=num_hot, hot_per_txn=hot_per_txn,
+                       batch_epoch=batch_epoch, seed=seed)
+    )
+    sim = dict(max_rounds=1000, warmup_rounds=250, chunk_rounds=250,
+               target_commits=10**9)
+    kw = dict(n_exec=n_exec, rounds_per_dispatch=k)
+    leap = _run_scheduled(wl, leap=True, sim=sim, **kw)
+    dense = _run_scheduled(wl, leap=False, sim=sim, **kw)
+    assert _fingerprint(leap) == _fingerprint(dense)
+
+
+@pytest.mark.parametrize(
+    "num_hot,hot_per_txn,n_exec,batch_epoch,k,seed", SCHED_GRID)
+def test_scheduled_leap_matches_dense_grid(num_hot, hot_per_txn, n_exec,
+                                           batch_epoch, k, seed):
+    _check_scheduled_leap_dense(num_hot, hot_per_txn, n_exec, batch_epoch,
+                                k, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    num_hot=st.sampled_from([0, 4, 64, 512]),
+    hot_per_txn=st.sampled_from([1, 2]),
+    n_exec=st.sampled_from([2, 6, 16]),
+    batch_epoch=st.sampled_from([64, 100, 256]),
+    k=st.sampled_from([1, 8]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_scheduled_leap_matches_dense_property(num_hot, hot_per_txn, n_exec,
+                                               batch_epoch, k, seed):
+    """Randomized conformance over (contention, hot fan-out, lanes,
+    batch epoch, dispatch fusion, seed) — the axes fig18 sweeps."""
+    _check_scheduled_leap_dense(num_hot, hot_per_txn, n_exec, batch_epoch,
+                                k, seed)
+
+
+def test_scheduled_vmapped_matches_serial():
+    """The vmapped sweep driver must reproduce scheduled serial
+    execution exactly; two same-shape cells (same config, seeds picked
+    so the cluster plans land in the same pow2 buckets) genuinely share
+    one vmapped program."""
+    cfg = EngineConfig(protocol="scheduled", **SCHED_KW, **FAST)
+    wls = [
+        make_workload(
+            WorkloadConfig(kind="ycsb", num_txns=512, num_records=20_000,
+                           num_hot=8, seed=s)
+        )
+        for s in (0, 1)
+    ]
+    batched = sweep.run_cells([(cfg, w) for w in wls])
+    assert [r.raw["group_cells"] for r in batched] == [2, 2]
+    serial = [run_simulation(cfg, w) for w in wls]
+    for b, s_res in zip(batched, serial):
+        assert _fingerprint(b) == _fingerprint(s_res)
+
+
+def test_scheduled_driver_modes_match_serial():
+    """Early-exit, pipelined, and sharded driver modes reproduce
+    per-cell execution for the scheduled family on a heterogeneous
+    group (cells hit ``target_commits`` at different boundaries)."""
+    cfg = EngineConfig(protocol="scheduled", **SCHED_KW, **EXIT_SIM)
+    wls = [
+        make_workload(WorkloadConfig(kind="ycsb", num_txns=256,
+                                     num_records=10_000, num_hot=h, seed=3))
+        for h in (4, 64, 1024)
+    ]
+    cells = [(cfg, w) for w in wls]
+    ref = [run_simulation(cfg, w) for w in wls]
+    for mode in [sweep.SERIAL_MODE] + DRIVER_MODES:
+        got = sweep.run_cells(cells, mode=mode)
+        for g, r in zip(got, ref):
+            assert _fingerprint(g) == _fingerprint(r), mode

@@ -1,0 +1,39 @@
+"""Registry/engine consistency for the protocol façade.
+
+``repro.core.protocols`` used to enforce REGISTRY == PROTOCOLS with an
+import-time assert, which surfaced any drift as an opaque ImportError
+from whichever module imported the façade first. These tests are that
+check, moved where a failure reads as what it is: a protocol added to
+the engine without being named, documented, and mapped to its planner
+(or a registry orphan the engine no longer implements).
+"""
+
+from repro.core.protocols import PLANNERS, PROTOCOLS, REGISTRY, ProtocolInfo
+
+
+def test_registry_covers_engine_protocols_exactly():
+    assert set(REGISTRY) == set(PROTOCOLS)
+
+
+def test_planners_cover_engine_protocols_exactly():
+    assert set(PLANNERS) == set(PROTOCOLS)
+
+
+def test_every_entry_is_documented():
+    """Each protocol carries a non-empty display name, planner
+    description, deadlock story, and paper reference."""
+    for proto, info in REGISTRY.items():
+        assert isinstance(info, ProtocolInfo), proto
+        for field in ("name", "planner", "deadlocks", "paper_ref"):
+            value = getattr(info, field)
+            assert isinstance(value, str) and value.strip(), (proto, field)
+
+
+def test_every_planner_is_callable():
+    for proto, plan_fn in PLANNERS.items():
+        assert callable(plan_fn), proto
+
+
+def test_display_names_are_unique():
+    names = [info.name for info in REGISTRY.values()]
+    assert len(names) == len(set(names))

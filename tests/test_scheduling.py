@@ -1,0 +1,282 @@
+"""The `scheduled` protocol family (Prasaad et al., arXiv 1810.01997):
+cluster schedules, pure-python oracles, and engine counters.
+
+Three layers, mirroring how every other family is locked down:
+
+  * the vectorized clusterer (``depgraph.build_schedule(kind="cluster")``)
+    pinned bit-exactly against a hand-computed example and against the
+    pure-python oracles in ``repro.core.cost_model``
+    (``cluster_components`` / ``cluster_chain_edges``) plus an
+    independent per-(batch, key) conflict-edge oracle, over randomized
+    YCSB workloads;
+  * the scheduling-cost model: the clusterer's per-batch work is
+    strictly below the planner's for the same batches;
+  * the engine's planner-lane counters under ``protocol="scheduled"``,
+    cross-checked against the host-side lane schedule oracle exactly as
+    ``tests/test_planner_model`` does for dgcc/quecc.
+
+Cross-mode bit-identity (leap/dense, vmap/serial, K-dispatch) for the
+family lives in ``tests/test_engine_leap.py``; the golden replay in
+``tests/test_golden_traces.py``.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import depgraph as depgraph_lib
+from repro.core import engine as engine_lib
+from repro.core import planner as planner_lib
+from repro.core.cost_model import (cluster_chain_edges, cluster_components,
+                                   planner_lane_schedule)
+from repro.core.engine import EngineConfig, run_simulation
+from repro.core.lockgrant import KEY_SENTINEL
+from repro.core.workloads import (MODE_READ, MODE_WRITE, WorkloadConfig,
+                                  make_workload)
+
+SIM = dict(max_rounds=3000, warmup_rounds=0, chunk_rounds=500,
+           target_commits=10**9)
+
+
+# ---------------------------------------------------------------------------
+# pure-python conflict-edge oracle (independent of depgraph's vectorized
+# lexsort/segment builder)
+# ---------------------------------------------------------------------------
+def _oracle_conflict_edges(keys, modes, nkeys, batch_of):
+    """RAW/WAW (access -> last write before it on the key) and WAR
+    (read -> next write after it), per (batch, key) group in txn-id
+    order, deduped with self-edges dropped — the same edge set
+    ``depgraph.conflict_edges`` builds, one access at a time."""
+    groups = {}
+    for t in range(len(nkeys)):
+        for j in range(int(nkeys[t])):
+            k = int(keys[t][j])
+            if k == int(KEY_SENTINEL):
+                continue
+            groups.setdefault((int(batch_of[t]), k), []).append(
+                (t, int(modes[t][j]))
+            )
+    edges = set()
+    for acc in groups.values():
+        for i, (t, _mode) in enumerate(acc):
+            lastw = [u for u, m in acc[:i] if m == MODE_WRITE]
+            if lastw and lastw[-1] != t:
+                edges.add((t, lastw[-1]))
+        for i, (t, mode) in enumerate(acc):
+            if mode != MODE_WRITE:
+                nextw = [u for u, m in acc[i + 1:] if m == MODE_WRITE]
+                if nextw and nextw[0] != t:
+                    edges.add((nextw[0], t))
+    return edges
+
+
+def _oracle_schedule(keys, modes, nkeys, batch_epoch, n_lanes):
+    """Whole cluster schedule from the pure-python pieces: conflict
+    edges -> per-batch union-find -> chain edges, all host python."""
+    n = len(nkeys)
+    batch_of = [t // batch_epoch for t in range(n)]
+    edges = _oracle_conflict_edges(keys, modes, nkeys, batch_of)
+    cluster_of, chain, nclusters, scan = [], [], [], []
+    for b in range((n + batch_epoch - 1) // batch_epoch or 1):
+        lo, hi = b * batch_epoch, min((b + 1) * batch_epoch, n)
+        if lo >= hi:
+            break
+        local = [(d - lo, s - lo) for d, s in edges if lo <= d < hi]
+        cl = cluster_components(
+            hi - lo, [d for d, _ in local], [s for _, s in local]
+        )
+        cluster_of += cl
+        chain += [(d + lo, s + lo) for d, s in cluster_chain_edges(cl)]
+        nclusters.append(max(cl) + 1 if cl else 0)
+        scan.append(len(local))
+    lane = [c % max(n_lanes, 1) for c in cluster_of]
+    return cluster_of, lane, sorted(chain), nclusters, scan
+
+
+# ---------------------------------------------------------------------------
+# 1. hand-computed pin: the schedule is exactly what the family means
+# ---------------------------------------------------------------------------
+def test_cluster_schedule_hand_computed():
+    """Two batches of an explicit workload. Batch 0: txn0 W5, txn1 R5,
+    txn2 R9, txn3 W7, txn4 {R7, R5} — txn4 bridges the key-5 and key-7
+    components into cluster {0,1,3,4}; key 9 has no writer, so txn2
+    stays a singleton. Batch 1 (txns 5..7): txn5 W5, txn6 R5, txn7 R3
+    — clustering restarts per batch."""
+    S = int(KEY_SENTINEL)
+    keys = np.array(
+        [[5, S], [5, S], [9, S], [7, S], [7, 5],
+         [5, S], [5, S], [3, S]], np.int32)
+    modes = np.array(
+        [[MODE_WRITE, 0], [MODE_READ, 0], [MODE_READ, 0], [MODE_WRITE, 0],
+         [MODE_READ, MODE_READ],
+         [MODE_WRITE, 0], [MODE_READ, 0], [MODE_READ, 0]], np.int32)
+    nkeys = np.array([1, 1, 1, 1, 2, 1, 1, 1], np.int32)
+    part = np.zeros_like(keys)
+    sched = depgraph_lib.build_schedule(
+        keys, modes, part, nkeys, batch_epoch=5, kind="cluster", n_lanes=2)
+
+    assert sched.cluster_of.tolist() == [0, 0, 1, 0, 0, 0, 0, 1]
+    assert sched.cluster_lane.tolist() == [0, 0, 1, 0, 0, 0, 0, 1]
+    assert sched.batch_nclusters.tolist() == [2, 2]
+    # scanned conflict edges: batch 0 = {(1,0), (4,0), (4,3)}, batch 1 =
+    # {(6,5)}; executed chain edges thread each cluster in id order
+    assert sched.scan_edges.tolist() == [3, 1]
+    assert sched.edge_dst.tolist() == [1, 3, 4, 6]
+    assert sched.edge_src.tolist() == [0, 1, 3, 5]
+    assert sched.npred.tolist() == [0, 1, 0, 1, 1, 0, 1, 0]
+    # in-degree <= 1 makes pred_pad one column wide — the structural
+    # property that lets the engine skip the wavefront machinery
+    assert sched.pred_pad.shape == (8, 1)
+    assert sched.level.max() <= sched.batch_of.size
+
+
+def test_cluster_schedule_empty_and_conflict_free():
+    S = int(KEY_SENTINEL)
+    keys = np.array([[1, S], [2, S], [3, S]], np.int32)
+    modes = np.full_like(keys, MODE_WRITE)
+    nkeys = np.ones(3, np.int32)
+    sched = depgraph_lib.build_schedule(
+        keys, modes, np.zeros_like(keys), nkeys, batch_epoch=8,
+        kind="cluster", n_lanes=4)
+    # disjoint writers: every txn is its own cluster, no edges at all
+    assert sched.cluster_of.tolist() == [0, 1, 2]
+    assert sched.cluster_lane.tolist() == [0, 1, 2]
+    assert sched.batch_nclusters.tolist() == [3]
+    assert sched.scan_edges.tolist() == [0]
+    assert len(sched.edge_dst) == 0
+    assert sched.npred.tolist() == [0, 0, 0]
+
+
+def test_cluster_kind_rejects_fragments():
+    S = int(KEY_SENTINEL)
+    keys = np.array([[1, S]], np.int32)
+    with pytest.raises(AssertionError, match="txn-granular"):
+        depgraph_lib.build_schedule(
+            keys, np.full_like(keys, MODE_WRITE), np.zeros_like(keys),
+            np.ones(1, np.int32), batch_epoch=8, kind="cluster",
+            fragments=True)
+
+
+# ---------------------------------------------------------------------------
+# 2. randomized oracle sweep: vectorized clusterer == pure python
+# ---------------------------------------------------------------------------
+def _check_schedule_against_oracle(seed, num_hot, hot_per_txn,
+                                   batch_epoch, n_lanes):
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=200, num_records=500,
+                       num_hot=num_hot, hot_per_txn=hot_per_txn,
+                       batch_epoch=batch_epoch, seed=seed))
+    plan = planner_lib.plan_scheduled(wl, batch_epoch, n_lanes=n_lanes)
+    sched = plan.sched
+    cluster_of, lane, chain, nclusters, scan = _oracle_schedule(
+        plan.keys.tolist(), plan.modes.tolist(), plan.nkeys.tolist(),
+        batch_epoch, n_lanes)
+
+    assert sched.cluster_of.tolist() == cluster_of
+    assert sched.cluster_lane.tolist() == lane
+    assert sched.batch_nclusters.tolist() == nclusters
+    assert sched.scan_edges.tolist() == scan
+    assert sorted(zip(sched.edge_dst.tolist(),
+                      sched.edge_src.tolist())) == chain
+    # the family's structural invariant: chains, not DAGs
+    assert sched.npred.max(initial=0) <= 1
+    assert sched.pred_pad.shape[1] <= 1
+    # chain edges are a subset of the scanned conflict graph's
+    # transitive connectivity: every edge stays inside one cluster
+    cl = sched.cluster_of
+    assert all(cl[d] == cl[s] for d, s in zip(sched.edge_dst,
+                                              sched.edge_src))
+
+
+@pytest.mark.parametrize("seed,num_hot,hot_per_txn,batch_epoch,n_lanes", [
+    (0, 0, 1, 64, 1),
+    (1, 2, 2, 16, 3),
+    (2, 8, 1, 64, 8),
+    (3, 8, 2, 100, 3),
+    (4, 64, 2, 64, 8),
+    (5, 64, 1, 16, 1),
+])
+def test_cluster_schedule_matches_oracle(seed, num_hot, hot_per_txn,
+                                         batch_epoch, n_lanes):
+    _check_schedule_against_oracle(seed, num_hot, hot_per_txn,
+                                   batch_epoch, n_lanes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    num_hot=st.sampled_from([0, 2, 8, 64]),
+    hot_per_txn=st.sampled_from([1, 2]),
+    batch_epoch=st.sampled_from([16, 64, 100]),
+    n_lanes=st.sampled_from([1, 3, 8]),
+)
+def test_cluster_schedule_matches_oracle_fuzzed(seed, num_hot, hot_per_txn,
+                                                batch_epoch, n_lanes):
+    _check_schedule_against_oracle(seed, num_hot, hot_per_txn,
+                                   batch_epoch, n_lanes)
+
+
+# ---------------------------------------------------------------------------
+# 3. scheduling is cheaper than planning (cost model, host side)
+# ---------------------------------------------------------------------------
+def test_scheduler_work_below_planner_work():
+    """Per batch, the clusterer's modeled work must be strictly below
+    the dgcc planner's on the same workload — the family's reason to
+    exist. Checked on the engine's own ``_planner_work_rounds``."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=8, batch_epoch=64, seed=0))
+    cfg_s = EngineConfig(protocol="scheduled", n_exec=8,
+                         n_planner_lanes=1, **SIM)
+    cfg_d = EngineConfig(protocol="dgcc", n_cc=2, n_exec=6, window=2,
+                         n_planner_lanes=1, **SIM)
+    work_s = engine_lib._planner_work_rounds(
+        cfg_s, engine_lib.make_plan(cfg_s, wl))
+    work_d = engine_lib._planner_work_rounds(
+        cfg_d, engine_lib.make_plan(cfg_d, wl))
+    assert work_s.shape == work_d.shape
+    assert (work_s < work_d).all()
+    assert (work_s >= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# 4. engine planner-lane counters vs the host oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_lanes,interval", [(1, 0), (1, 40), (3, 25)])
+def test_engine_counters_match_oracle(n_lanes, interval):
+    """``plan_busy`` / ``plan_qdelay`` for the scheduled family follow
+    the same lane recurrence as the planned families, just over the
+    cheaper clusterer work sequence."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=512, num_records=10_000,
+                       num_hot=8, batch_epoch=64, seed=0))
+    cfg = EngineConfig(protocol="scheduled", n_exec=8,
+                       n_planner_lanes=n_lanes,
+                       epoch_interval_rounds=interval, **SIM)
+    res = run_simulation(cfg, wl)
+    work = engine_lib._planner_work_rounds(
+        cfg, engine_lib.make_plan(cfg, wl))
+    n_planned = res.raw["epoch_ctr"] + 1
+    work_seq = [int(work[g % len(work)]) for g in range(n_planned)]
+    _ready, delay = planner_lane_schedule(work_seq, interval, n_lanes)
+    assert res.raw["plan_busy"] == sum(work_seq)
+    assert res.raw["plan_qdelay"] == sum(delay)
+    assert res.commits > 0
+    assert res.aborts_deadlock == 0
+
+
+def test_scheduled_commits_whole_workload_closed_loop():
+    """With enough rounds the family drains the whole workload (the
+    closed loop recycles the stream, so commits can pass the txn count
+    within a chunk) and never aborts or wastes work (per-cluster total
+    orders need no deadlock handling)."""
+    wl = make_workload(
+        WorkloadConfig(kind="ycsb", num_txns=128, num_records=2_000,
+                       num_hot=4, batch_epoch=32, seed=1))
+    cfg = EngineConfig(protocol="scheduled", n_exec=4,
+                       max_rounds=60_000, warmup_rounds=0,
+                       chunk_rounds=2000, target_commits=128)
+    res = run_simulation(cfg, wl)
+    assert res.commits >= 128
+    assert res.aborts_deadlock == 0
+    assert res.wasted_ops == 0

@@ -53,6 +53,12 @@ TRACED_VARIANTS = {
         inter_batch_pipeline=True,
     ),
     "n_planner_lanes": dict(protocol="dgcc", n_cc=2, n_planner_lanes=2),
+    # Scheduled family: its own batch step (cluster chains, no
+    # wavefront barrier) and its own planner-lane work model — both
+    # must key distinct runners from the dgcc/quecc entries above.
+    "protocol_scheduled": dict(protocol="scheduled"),
+    "n_planner_lanes_scheduled": dict(protocol="scheduled",
+                                      n_planner_lanes=2),
     # only open-vs-closed arrival is a compile-time static; the interval
     # *value* is traced (one compilation per epoch-rate sweep), which
     # test_epoch_interval_value_shares_a_runner pins below

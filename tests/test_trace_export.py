@@ -24,13 +24,20 @@ ROUNDS = 400
 SIM = dict(max_rounds=ROUNDS, warmup_rounds=0, chunk_rounds=ROUNDS,
            target_commits=10**9)
 
-# a contended wait-die cell (plenty of aborts) and an overloaded
-# open-arrival cell with the robustness layer shedding + retiring txns
+# a contended wait-die cell (plenty of aborts), an overloaded
+# open-arrival cell with the robustness layer shedding + retiring txns,
+# and a batch-planned scheduled cell (the [BATCH_SLOT_F, T] layout:
+# abort-free, so every attempt termination is a commit)
 CELLS = {
     "waitdie_hot": (
         dict(kind="ycsb", num_txns=128, num_records=10_000, num_hot=8,
              seed=0),
         dict(protocol="twopl_waitdie", n_exec=4),
+    ),
+    "scheduled_hot": (
+        dict(kind="ycsb", num_txns=128, num_records=1_000_000, num_hot=8,
+             hot_per_txn=1, seed=0),
+        dict(protocol="scheduled", n_exec=4),
     ),
     "overload_shed": (
         dict(kind="ycsb", num_txns=256, num_records=10_000, num_hot=8,
@@ -142,6 +149,15 @@ def test_attempt_ends_count_commits_plus_aborts(traced, name):
         assert res.raw["pol_shed"] > 0
         assert res.aborts_deadlock > 0
         assert res.raw["pol_sacrificed"] > 0
+    if name == "scheduled_hot":
+        # cluster-chain admission never aborts: every slot release in
+        # the trace must be a commit, and no span enters backoff
+        assert res.aborts_deadlock == 0 and res.aborts_ollp == 0
+        _cfg, _wl, _snaps, events2 = traced[name]
+        assert not any(
+            e["args"]["phase"] == "backoff"
+            for e in events2 if e["ph"] == "X"
+        )
     assert _attempt_ends(events, len(snaps), us) == (
         res.commits + res.aborts_deadlock + res.aborts_ollp
     )

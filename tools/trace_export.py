@@ -94,8 +94,18 @@ def txn_events(snaps) -> list[tuple[int, int, int]]:
 def chrome_trace(snaps, cfg) -> list[dict]:
     """Trace-event JSON records (Chrome ``chrome://tracing`` / Perfetto
     format) for the replayed cell: per-slot phase spans + an in-flight
-    counter. Timestamps are microseconds of simulated time."""
-    from repro.core.engine import C_PHASE, C_TID
+    counter. Timestamps are microseconds of simulated time.
+
+    Works on both slot layouts: the phase enum is shared, only the row
+    indices differ ([SLOT_F, T] vs the batch-planned [BATCH_SLOT_F, T]
+    matrix). Batch rows are fragment-granular under ``fragment_exec``,
+    so a span's ``txn`` is the schedulable unit, not always a whole
+    transaction."""
+    if cfg.is_batch_planned:
+        from repro.core.engine import BC_PHASE as C_PHASE
+        from repro.core.engine import BC_TID as C_TID
+    else:
+        from repro.core.engine import C_PHASE, C_TID
 
     us = cfg.cost.round_seconds * 1e6
     T = snaps[0].shape[1]
